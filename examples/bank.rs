@@ -1,0 +1,139 @@
+//! Bank workload: concurrent transfers + irrevocable auditing + manual
+//! aborts, demonstrating the safety properties the paper claims.
+//!
+//! ```text
+//! cargo run --release --example bank
+//! ```
+//!
+//! * 16 accounts across 4 nodes; 8 client threads do random transfers,
+//!   aborting manually when an account would overdraw.
+//! * A concurrent **irrevocable** auditor repeatedly sums all balances —
+//!   with a side effect (printing: the kind of operation optimistic TMs
+//!   cannot re-execute safely) — and must always observe the conserved
+//!   total, because irrevocable transactions never read early-released
+//!   state and never abort.
+
+use atomic_rmi2::object::{account::ops, Account};
+use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx, TxError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+const NODES: u16 = 4;
+const ACCOUNTS: usize = 16;
+const CLIENTS: usize = 8;
+const TRANSFERS_PER_CLIENT: usize = 30;
+const INITIAL: i64 = 1_000;
+
+fn main() {
+    let cluster = Arc::new(Cluster::new(NODES, NetworkModel::lan()));
+    let sys = AtomicRmi2::new(Arc::clone(&cluster));
+    for i in 0..ACCOUNTS {
+        sys.host(
+            NodeId((i % NODES as usize) as u16),
+            &format!("acct-{i}"),
+            Box::new(Account::with_balance(INITIAL)),
+        );
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let audits = Arc::new(AtomicU64::new(0));
+
+    // Irrevocable auditor: sums all accounts, with an I/O side effect.
+    let auditor = {
+        let sys = Arc::clone(&sys);
+        let stop = Arc::clone(&stop);
+        let audits = Arc::clone(&audits);
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                let mut tx = sys.tx(NodeId(0)).irrevocable();
+                let handles: Vec<_> =
+                    (0..ACCOUNTS).map(|i| tx.reads(&format!("acct-{i}"), 1)).collect();
+                let mut total = 0i64;
+                tx.run(|t| {
+                    total = 0;
+                    for h in &handles {
+                        total += t.call(*h, ops::balance())?.as_int();
+                    }
+                    // The irrevocable side effect: printing mid-transaction.
+                    print!("");
+                    Ok(())
+                })
+                .expect("irrevocable audit can never abort");
+                assert_eq!(
+                    total,
+                    INITIAL * ACCOUNTS as i64,
+                    "audit saw a non-conserved total — serializability violated"
+                );
+                audits.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+
+    // Transfer clients.
+    let manual_aborts = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for c in 0..CLIENTS {
+        let sys = Arc::clone(&sys);
+        let manual_aborts = Arc::clone(&manual_aborts);
+        clients.push(std::thread::spawn(move || {
+            let mut rng = atomic_rmi2::util::prng::Prng::seeded(0xBA_4C ^ c as u64);
+            for _ in 0..TRANSFERS_PER_CLIENT {
+                let from = rng.index(ACCOUNTS);
+                let to = (from + 1 + rng.index(ACCOUNTS - 1)) % ACCOUNTS;
+                let amount = 1 + rng.below(500) as i64;
+                let client = NodeId((c % NODES as usize) as u16);
+                // Manual aborts make cascades possible (§2.3): a reader of
+                // early-released state is forcibly aborted — retry it.
+                loop {
+                    let mut tx = sys.tx(client);
+                    let hf = tx.accesses(&format!("acct-{from}"), Suprema::new(1, 0, 1));
+                    let ht = tx.updates(&format!("acct-{to}"), 1);
+                    let r = tx.run(|t| {
+                        t.call(hf, ops::withdraw(amount))?;
+                        t.call(ht, ops::deposit(amount))?;
+                        if t.call(hf, ops::balance())?.as_int() < 0 {
+                            return t.abort(); // would overdraw: roll back
+                        }
+                        Ok(())
+                    });
+                    match r {
+                        Ok(_) => break,
+                        Err(TxError::ManualAbort) => {
+                            manual_aborts.fetch_add(1, Ordering::Relaxed);
+                            break;
+                        }
+                        Err(TxError::ForcedAbort(_)) => continue, // cascade
+                        Err(e) => panic!("unexpected transaction failure: {e}"),
+                    }
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    auditor.join().unwrap();
+
+    // Final invariant: money conserved.
+    let total: i64 = (0..ACCOUNTS)
+        .map(|i| {
+            let oid = cluster.registry.locate(&format!("acct-{i}")).unwrap();
+            sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance())
+        })
+        .sum();
+    println!(
+        "final total = {total} (expected {}), commits = {}, manual aborts = {}, audits = {}",
+        INITIAL * ACCOUNTS as i64,
+        sys.stats.commits.load(Ordering::Relaxed),
+        manual_aborts.load(Ordering::Relaxed),
+        audits.load(Ordering::Relaxed),
+    );
+    assert_eq!(total, INITIAL * ACCOUNTS as i64, "money not conserved");
+    println!(
+        "cascading (forced) aborts: {}",
+        sys.stats.forced_aborts.load(Ordering::Relaxed)
+    );
+    sys.shutdown();
+    println!("bank OK");
+}

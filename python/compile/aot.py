@@ -1,0 +1,63 @@
+"""AOT bridge: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text — not ``serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``); the rust binary is then
+self-contained. Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import EXPORTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the rust
+    side's ``to_tuple1`` unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    for name, (fn, shapes) in EXPORTS.items():
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append((name, path, len(text)))
+    # Manifest: lets the rust loader sanity-check shapes without parsing HLO.
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, (fn, shapes) in EXPORTS.items():
+            dims = ";".join(",".join(str(d) for d in s) for s in shapes)
+            f.write(f"{name} = {dims}\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    for name, path, size in export_all(args.out):
+        print(f"wrote {name}: {size} chars -> {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

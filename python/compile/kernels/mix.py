@@ -1,0 +1,88 @@
+"""L1 Pallas kernels: the state-mix update and the read digest.
+
+The CF model's point is delegating complex computation to the object's
+home node (paper §1, §2.5); `ComputeObject`'s `mix` (update) and `digest`
+(read) operations are that computation. Both kernels are written in Pallas
+and lowered with ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation).
+
+TPU structure (documented, estimated in DESIGN.md §7):
+  * grid over the batch dimension; each grid step works on a
+    (BLOCK_B, D) tile of states/params resident in VMEM;
+  * the D×D mixing matrix W uses a constant index_map so it stays
+    resident in VMEM across grid steps (16 KiB at D=64, f32);
+  * the per-round ``s @ w`` matmul is MXU-shaped (D a multiple of 8);
+    accumulation in f32;
+  * ROUNDS is unrolled at trace time — no scan carries, so Mosaic can
+    double-buffer the HBM→VMEM state streams.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEFAULT_DIM, DEFAULT_ROUNDS
+
+# Batch tile: 128 rows × 64 lanes × 4 B = 32 KiB per stream — comfortably
+# inside a TPU core's ~16 MiB VMEM alongside W and the output tile.
+BLOCK_B = 128
+
+
+def _mix_kernel(w_ref, s_ref, p_ref, o_ref, *, rounds: int):
+    s = s_ref[...]
+    w = w_ref[...]
+    p = p_ref[...]
+    for _ in range(rounds):  # unrolled: no carry, MXU back-to-back
+        s = jnp.tanh(jnp.dot(s, w, preferred_element_type=jnp.float32) + p)
+    o_ref[...] = s
+
+
+def _digest_kernel(s_ref, o_ref):
+    s = s_ref[...]
+    o_ref[...] = jnp.sum(s * s, axis=1)
+
+
+def mix(states: jnp.ndarray, params: jnp.ndarray, w: jnp.ndarray,
+        rounds: int = DEFAULT_ROUNDS, block_b: int = BLOCK_B) -> jnp.ndarray:
+    """Batched state mix via Pallas: (B, D), (B, D), (D, D) → (B, D)."""
+    b, d = states.shape
+    assert params.shape == (b, d), (params.shape, states.shape)
+    assert w.shape == (d, d)
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    kernel = functools.partial(_mix_kernel, rounds=rounds)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # W: constant index_map ⇒ fetched once, resident across steps.
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
+        interpret=True,
+    )(w, states, params)
+
+
+def digest(states: jnp.ndarray, block_b: int = BLOCK_B) -> jnp.ndarray:
+    """Batched read digest via Pallas: (B, D) → (B,) sum of squares."""
+    b, d = states.shape
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    return pl.pallas_call(
+        _digest_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(states)
+
+
+DIM = DEFAULT_DIM
+ROUNDS = DEFAULT_ROUNDS

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Pallas kernels (L1 correctness reference).
+
+The rust `SpinBackend` (rust/src/object/compute.rs) implements the same
+computation in scalar rust; `mix_ref`/`digest_ref` here are the canonical
+specification both are validated against.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_DIM = 64
+DEFAULT_ROUNDS = 4
+
+
+def w_matrix(dim: int = DEFAULT_DIM) -> np.ndarray:
+    """Deterministic mixing matrix: W[i, j] = sin(i * dim + j) / dim.
+
+    Matches rust's SpinBackend exactly (modulo f32 rounding of sin).
+    """
+    idx = np.arange(dim * dim, dtype=np.float32)
+    return (np.sin(idx) / dim).reshape(dim, dim).astype(np.float32)
+
+
+def mix_ref(states: jnp.ndarray, params: jnp.ndarray, w: jnp.ndarray,
+            rounds: int = DEFAULT_ROUNDS) -> jnp.ndarray:
+    """R rounds of `state' = tanh(state @ W + params)` over a (B, D) batch."""
+    s = states
+    for _ in range(rounds):
+        s = jnp.tanh(s @ w + params)
+    return s
+
+
+def digest_ref(states: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sum of squares — the read-only digest (B,)."""
+    return jnp.sum(states * states, axis=-1)

@@ -1,0 +1,41 @@
+"""L2: the JAX compute graph for `ComputeObject` operations.
+
+Composes the L1 Pallas kernels into the two entry points the rust runtime
+executes (one AOT artifact each):
+
+  * ``mix_op(states, params)``   — the UPDATE operation's state transition;
+  * ``digest_op(states)``        — the READ operation's digest.
+
+The mixing matrix W is an explicit *runtime input*, not a baked constant:
+the XLA HLO **text** printer elides large literals as ``constant({...})``
+and the text parser reads those back as zeros, so constants above a few
+elements cannot ride through the text interchange format. The rust runtime
+materializes W once at startup (same formula as `w_matrix`) and passes it
+on every call.
+"""
+
+import jax.numpy as jnp  # noqa: F401  (kept for callers)
+
+from .kernels import mix as kernels
+from .kernels.ref import DEFAULT_DIM, DEFAULT_ROUNDS
+
+
+def mix_op(states: jnp.ndarray, params: jnp.ndarray, w: jnp.ndarray) -> tuple:
+    """UPDATE: R rounds of tanh(state @ W + params). (B,D),(B,D),(D,D) → (B,D)."""
+    return (kernels.mix(states, params, w, rounds=DEFAULT_ROUNDS),)
+
+
+def digest_op(states: jnp.ndarray) -> tuple:
+    """READ: per-row sum of squares. (B,D) → (B,)."""
+    return (kernels.digest(states),)
+
+
+#: The artifact set `aot.py` exports and rust's `runtime::XlaBackend`
+#: loads: name → (function, input shapes). B=1 is the per-object call used
+#: on the request path; B=8 exercises the batch tiling in tests.
+D2 = (DEFAULT_DIM, DEFAULT_DIM)
+EXPORTS = {
+    "mix": (mix_op, [(1, DEFAULT_DIM), (1, DEFAULT_DIM), D2]),
+    "digest": (digest_op, [(1, DEFAULT_DIM)]),
+    "mix_b8": (mix_op, [(8, DEFAULT_DIM), (8, DEFAULT_DIM), D2]),
+}

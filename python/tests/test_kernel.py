@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps batch sizes, dims, round counts, block sizes and value
+ranges; every case asserts allclose against `ref.py`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mix as k
+from compile.kernels.ref import digest_ref, mix_ref, w_matrix
+
+RNG = np.random.default_rng(0xE16E)
+
+
+def rand_batch(b, d, scale=1.0):
+    return (RNG.standard_normal((b, d)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape sanity checks
+# ---------------------------------------------------------------------------
+
+def test_mix_matches_ref_default_shape():
+    s = rand_batch(4, k.DIM)
+    p = rand_batch(4, k.DIM)
+    w = w_matrix(k.DIM)
+    got = k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w))
+    want = mix_ref(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_digest_matches_ref():
+    s = rand_batch(16, k.DIM)
+    got = k.digest(jnp.asarray(s))
+    want = digest_ref(jnp.asarray(s))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_mix_is_deterministic():
+    s = rand_batch(2, k.DIM)
+    p = rand_batch(2, k.DIM)
+    w = w_matrix(k.DIM)
+    a = k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w))
+    b = k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zero_rounds_is_identity():
+    s = rand_batch(3, 8)
+    p = rand_batch(3, 8)
+    w = w_matrix(8)
+    got = k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w), rounds=0)
+    np.testing.assert_array_equal(np.asarray(got), s)
+
+
+def test_output_is_tanh_bounded():
+    s = rand_batch(4, k.DIM, scale=100.0)
+    p = rand_batch(4, k.DIM, scale=100.0)
+    w = w_matrix(k.DIM)
+    got = np.asarray(k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w)))
+    assert np.all(got <= 1.0) and np.all(got >= -1.0)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes, rounds, block sizes, magnitudes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=40),
+    d=st.sampled_from([8, 16, 64]),
+    rounds=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mix_sweep(b, d, rounds, seed):
+    rng = np.random.default_rng(seed)
+    s = rng.standard_normal((b, d)).astype(np.float32)
+    p = rng.standard_normal((b, d)).astype(np.float32)
+    w = w_matrix(d)
+    got = k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w), rounds=rounds)
+    want = mix_ref(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w), rounds=rounds)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=300),
+    d=st.sampled_from([4, 64]),
+    block=st.sampled_from([1, 7, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_mix_block_size_invariance(b, d, block, seed):
+    """The BlockSpec tiling must not change the numbers (incl. ragged
+    trailing blocks)."""
+    rng = np.random.default_rng(seed)
+    s = rng.standard_normal((b, d)).astype(np.float32)
+    p = rng.standard_normal((b, d)).astype(np.float32)
+    w = w_matrix(d)
+    got = k.mix(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w), block_b=block)
+    want = mix_ref(jnp.asarray(s), jnp.asarray(p), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=200),
+    d=st.sampled_from([8, 64]),
+    scale=st.sampled_from([0.0, 0.1, 1.0, 50.0]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_digest_sweep(b, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    s = (rng.standard_normal((b, d)) * scale).astype(np.float32)
+    got = k.digest(jnp.asarray(s))
+    want = digest_ref(jnp.asarray(s))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_w_matrix_matches_rust_spinbackend():
+    """W[i,j] = sin(i*d + j)/d — the exact formula in compute.rs."""
+    w = w_matrix(8)
+    for i in range(8):
+        for j in range(8):
+            assert w[i, j] == pytest.approx(np.sin(np.float32(i * 8 + j)) / 8, rel=1e-6)

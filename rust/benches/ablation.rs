@@ -1,0 +1,59 @@
+//! Ablation bench: which OptSVA-CF optimization buys what (DESIGN.md §5).
+//!
+//! Compares on the write-dominated Fig 10 point:
+//!   * `atomic-rmi2`       — full OptSVA-CF;
+//!   * `atomic-rmi2-sync`  — asynchrony disabled (buffering/last-write
+//!     release run inline on the caller's thread);
+//!   * `atomic-rmi`        — SVA (no buffering, no mode distinction):
+//!     isolates the entire OptSVA-CF optimization stack.
+//!
+//! `cargo bench --bench ablation` (`ARMI2_BENCH_QUICK=1` to smoke).
+
+use atomic_rmi2::metrics::{fmt_speedup, fmt_throughput, Table};
+use atomic_rmi2::workload::{run_eigenbench, EigenbenchParams, FrameworkKind};
+use atomic_rmi2::NetworkModel;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var_os("ARMI2_BENCH_QUICK").is_some();
+    let mut table = Table::new(
+        "Ablation: throughput [ops/s], 4 nodes x 8 clients, 10 arrays/node",
+        &["variant", "9÷1", "5÷5", "1÷9"],
+    );
+    let kinds = [
+        FrameworkKind::Optsva,
+        FrameworkKind::OptsvaNoAsync,
+        FrameworkKind::Sva,
+    ];
+    let mut base: Vec<f64> = Vec::new();
+    for kind in kinds {
+        let mut row = vec![kind.label().to_string()];
+        for read_pct in [90u8, 50, 10] {
+            let r = run_eigenbench(&EigenbenchParams {
+                kind,
+                nodes: 4,
+                clients_per_node: if quick { 2 } else { 8 },
+                arrays_per_node: 10,
+                txns_per_client: if quick { 2 } else { 6 },
+                hot_ops: 10,
+                read_pct,
+                op_delay: Duration::from_micros(if quick { 100 } else { 800 }),
+                net: NetworkModel::lan(),
+                ..Default::default()
+            });
+            if kind == FrameworkKind::Optsva {
+                base.push(r.throughput);
+            }
+            row.push(fmt_throughput(r.throughput));
+            if kind != FrameworkKind::Optsva {
+                let i = row.len() - 2;
+                let s = fmt_speedup(r.throughput, base[i]);
+                let last = row.last_mut().unwrap();
+                *last = format!("{last} ({s})");
+            }
+        }
+        table.add_row(row);
+    }
+    println!("{}", table.render());
+    println!("ablation done");
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate the paper's Fig 10 — throughput vs client count for
+//! all eight frameworks at three read-write ratios.
+//!
+//! `cargo bench --bench fig10_clients` (set `ARMI2_BENCH_QUICK=1` for a
+//! fast smoke run). Raw rows land in `target/bench-results/fig10.csv`.
+
+use atomic_rmi2::workload::sweeps::{fig10, write_results_csv, Scale};
+
+fn main() {
+    let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    let t0 = std::time::Instant::now();
+    let (tables, results) = fig10(scale);
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    match write_results_csv("fig10", &results) {
+        Ok(path) => println!("raw results: {path}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!("fig10 done in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate the paper's Fig 11 — throughput vs node count at
+//! constant per-node load, with 5 and 10 arrays/node.
+//!
+//! `cargo bench --bench fig11_nodes` (`ARMI2_BENCH_QUICK=1` to smoke).
+
+use atomic_rmi2::workload::sweeps::{fig11, write_results_csv, Scale};
+
+fn main() {
+    let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    let t0 = std::time::Instant::now();
+    let (tables, results) = fig11(scale);
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    match write_results_csv("fig11", &results) {
+        Ok(path) => println!("raw results: {path}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!("fig11 done in {:.1}s", t0.elapsed().as_secs_f64());
+}

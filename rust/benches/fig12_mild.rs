@@ -1,0 +1,25 @@
+//! Bench: regenerate the paper's Fig 12 — Fig 11's node sweep with 10
+//! additional conflict-free mild-array operations per transaction
+//! (lower average contention).
+//!
+//! `cargo bench --bench fig12_mild` (`ARMI2_BENCH_QUICK=1` to smoke).
+
+use atomic_rmi2::workload::sweeps::{fig12, write_results_csv, Scale};
+
+fn main() {
+    let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    let t0 = std::time::Instant::now();
+    let (tables, results) = fig12(scale);
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    match write_results_csv("fig12", &results) {
+        Ok(path) => println!("raw results: {path}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!("fig12 done in {:.1}s", t0.elapsed().as_secs_f64());
+}

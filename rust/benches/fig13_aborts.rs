@@ -1,0 +1,29 @@
+//! Bench: regenerate the paper's Fig 13 — the abort-rate table. HyFlow2
+//! (TFA) aborts 60–89 % of transactions at high contention; Atomic RMI
+//! and Atomic RMI 2 must report exactly 0 %.
+//!
+//! `cargo bench --bench fig13_aborts` (`ARMI2_BENCH_QUICK=1` to smoke).
+
+use atomic_rmi2::workload::sweeps::{fig13, write_results_csv, Scale};
+
+fn main() {
+    let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
+        Scale::Quick
+    } else {
+        Scale::Full
+    };
+    let t0 = std::time::Instant::now();
+    let (table, results) = fig13(scale);
+    println!("{}", table.render());
+    // The paper's qualitative claim, enforced:
+    for r in &results {
+        if r.framework.contains("SVA") {
+            assert_eq!(r.abort_rate, 0.0, "pessimistic framework aborted");
+        }
+    }
+    match write_results_csv("fig13", &results) {
+        Ok(path) => println!("raw results: {path}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    println!("fig13 done in {:.1}s", t0.elapsed().as_secs_f64());
+}

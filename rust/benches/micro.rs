@@ -1,0 +1,106 @@
+//! Microbenchmarks of the coordinator's hot-path primitives (the §Perf
+//! profiling substrate): versioning handoff, start-lock acquisition,
+//! executor dispatch, buffer capture, proxy round trip, and the XLA
+//! kernel call. Criterion is not in the offline mirror; this is a plain
+//! median-of-N harness with warmup.
+
+use atomic_rmi2::api::Suprema;
+use atomic_rmi2::buffers::CopyBuffer;
+use atomic_rmi2::executor::Executor;
+use atomic_rmi2::object::{account::ops, Account, ComputeBackend, SpinBackend};
+use atomic_rmi2::optsva::AtomicRmi2;
+use atomic_rmi2::runtime::{XlaBackend, XlaRuntime};
+use atomic_rmi2::versioning::ObjectCc;
+use atomic_rmi2::{Cluster, NetworkModel, NodeId, TxCtx};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Median wall time of `iters` batched runs of `f` (ns per op).
+fn bench(name: &str, iters: u64, batch: u64, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..batch.min(1000) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t0.elapsed().as_nanos() as u64 / batch.max(1));
+    }
+    samples.sort_unstable();
+    let med = samples[samples.len() / 2];
+    let p95 = samples[(samples.len() as f64 * 0.95) as usize];
+    println!("{name:<44} median {med:>9} ns/op   p95 {p95:>9} ns/op");
+}
+
+fn main() {
+    println!("== micro: coordinator hot-path primitives ==");
+
+    // 1. Versioning handoff: assign pv → wait_access → release → terminate.
+    let cc = ObjectCc::new();
+    bench("versioning: pv+access+release+terminate", 30, 1000, || {
+        let pv = cc.assign_pv();
+        cc.wait_access(pv, None).unwrap();
+        cc.release(pv);
+        cc.terminate(pv);
+    });
+
+    // 2. Start-lock acquisition over an 8-object access set.
+    let ccs: Vec<ObjectCc> = (0..8).map(|_| ObjectCc::new()).collect();
+    let view: Vec<_> = ccs
+        .iter()
+        .enumerate()
+        .map(|(i, cc)| (atomic_rmi2::Oid::new(NodeId(0), i as u32), cc))
+        .collect();
+    bench("startlock: 8-object atomic pv acquisition", 30, 1000, || {
+        let _ = atomic_rmi2::versioning::acquire_start_locks(&view, |_| {});
+    });
+
+    // 3. Executor: submit + run an immediately-true task.
+    let ex = Executor::spawn();
+    bench("executor: submit+complete (ready task)", 20, 200, || {
+        let h = ex.submit(|| true, || {});
+        h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+    });
+    ex.shutdown();
+
+    // 4. Copy-buffer capture of a small object.
+    let acct = Account::with_balance(42);
+    bench("buffers: CopyBuffer::capture(Account)", 30, 10_000, || {
+        std::hint::black_box(CopyBuffer::capture(&acct));
+    });
+
+    // 5. Full transaction round trip, 1 object, instant network.
+    let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+    let sys = AtomicRmi2::new(cluster);
+    sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+    bench("optsva: full 1-object update txn", 20, 200, || {
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::updates(1));
+        tx.run(|t| {
+            t.call(h, ops::deposit(1))?;
+            Ok(())
+        })
+        .unwrap();
+    });
+
+    // 6. Kernel call: spin reference vs AOT XLA artifact.
+    let spin = SpinBackend::new(64, 4);
+    let state = vec![0.1f32; 64];
+    let params = vec![0.05f32; 64];
+    bench("kernel: SpinBackend mix (D=64, R=4)", 20, 500, || {
+        std::hint::black_box(spin.mix(&state, &params).unwrap());
+    });
+    if XlaRuntime::artifacts_present(&XlaRuntime::default_dir()) {
+        let xla = XlaBackend::load_default().expect("artifacts");
+        bench("kernel: XlaBackend mix (AOT artifact)", 20, 500, || {
+            std::hint::black_box(xla.mix(&state, &params).unwrap());
+        });
+    } else {
+        println!("kernel: XlaBackend skipped (run `make artifacts`)");
+    }
+    sys.shutdown();
+    println!("micro done");
+}

@@ -1,0 +1,210 @@
+//! Public transactional API, common to every framework in the repo.
+//!
+//! Mirrors the paper's `Transaction` interface (Fig 8): a preamble declares
+//! the access set with optional *suprema* (upper bounds on read / write /
+//! update counts per object), then `run` executes the transaction body.
+//! The same API drives OptSVA-CF (Atomic RMI 2), SVA (Atomic RMI), TFA
+//! (HyFlow2 stand-in), and the lock-based baselines, so Eigenbench and the
+//! examples are framework-agnostic.
+
+use crate::cluster::{NodeId, Oid};
+use crate::object::{ObjectError, OpCall, Value};
+use crate::versioning::WaitTimeout;
+
+/// Upper bounds on the number of operations a transaction will perform on
+/// one object, by mode. `u64::MAX` means "unknown" (paper: "If suprema are
+/// not given, infinity is assumed (and the system maintains guarantees)").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Suprema {
+    pub reads: u64,
+    pub writes: u64,
+    pub updates: u64,
+}
+
+impl Suprema {
+    /// No a-priori knowledge: all bounds infinite.
+    pub fn unknown() -> Self {
+        Suprema { reads: u64::MAX, writes: u64::MAX, updates: u64::MAX }
+    }
+
+    pub fn new(reads: u64, writes: u64, updates: u64) -> Self {
+        Suprema { reads, writes, updates }
+    }
+
+    /// `t.reads(obj, n)` — read-only access (paper Fig 8).
+    pub fn reads(n: u64) -> Self {
+        Suprema { reads: n, writes: 0, updates: 0 }
+    }
+
+    /// `t.writes(obj, n)` — write-only access.
+    pub fn writes(n: u64) -> Self {
+        Suprema { reads: 0, writes: n, updates: 0 }
+    }
+
+    /// `t.updates(obj, n)` — update access.
+    pub fn updates(n: u64) -> Self {
+        Suprema { reads: 0, writes: 0, updates: n }
+    }
+
+    /// Is the object read-only for this transaction (§2.7)?
+    pub fn read_only(&self) -> bool {
+        self.writes == 0 && self.updates == 0
+    }
+
+    /// Will the transaction never read this object's state directly
+    /// (pure-write access)?
+    pub fn write_only(&self) -> bool {
+        self.reads == 0 && self.updates == 0
+    }
+
+    /// Total operation bound, saturating (SVA's single supremum).
+    pub fn total(&self) -> u64 {
+        self.reads
+            .saturating_add(self.writes)
+            .saturating_add(self.updates)
+    }
+}
+
+/// Why a transaction terminated abnormally.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum TxError {
+    /// The programmer called `abort()` (paper Fig 9).
+    #[error("transaction aborted manually")]
+    ManualAbort,
+    /// The programmer called `retry()`: abort and re-execute the body.
+    #[error("transaction requested retry")]
+    Retry,
+    /// Cascading abort: the transaction observed state released early by a
+    /// transaction that later aborted (§2.3).
+    #[error("transaction forcibly aborted: {0}")]
+    ForcedAbort(String),
+    /// An object was accessed more times than its declared supremum (§2.2).
+    #[error("supremum exceeded on {oid}: {mode} count {count} > bound {bound}")]
+    SupremaExceeded { oid: Oid, mode: &'static str, count: u64, bound: u64 },
+    /// Optimistic conflict (TFA only): retry the transaction.
+    #[error("optimistic conflict: {0}")]
+    Conflict(String),
+    /// The object suffered a crash-stop failure (§3.4).
+    #[error("remote object {0} crashed")]
+    ObjectCrashed(Oid),
+    /// A versioning wait exceeded the failure-suspicion deadline (§3.4).
+    #[error("wait timed out: {0}")]
+    Timeout(#[from] WaitTimeout),
+    /// The body touched an object that was not declared in the preamble.
+    #[error("object {0:?} not declared in transaction preamble")]
+    NotDeclared(String),
+    /// The object's method raised an application error.
+    #[error("object error: {0}")]
+    Object(#[from] ObjectError),
+    /// The transaction was used after completion.
+    #[error("transaction already completed")]
+    Completed,
+}
+
+impl TxError {
+    /// Should the driver re-execute the transaction body?
+    pub fn is_retryable(&self) -> bool {
+        matches!(
+            self,
+            TxError::Retry | TxError::Conflict(_) | TxError::ForcedAbort(_)
+        )
+    }
+}
+
+/// Handle to a declared object within a running transaction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjHandle(pub usize);
+
+/// A transaction body's view: invoke operations, abort, or retry.
+/// Implemented by every framework.
+pub trait TxCtx {
+    /// Invoke `call` on the declared object `h`. The mode is derived from
+    /// the object's interface annotations.
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError>;
+
+    /// Manual rollback (paper Fig 9): returns `Err(ManualAbort)` so the
+    /// body can `return t.abort()` / `?`-propagate out; the framework
+    /// performs the actual rollback when the body returns.
+    fn abort(&mut self) -> Result<(), TxError> {
+        Err(TxError::ManualAbort)
+    }
+
+    /// Abort and re-execute the body from scratch.
+    fn retry(&mut self) -> Result<(), TxError> {
+        Err(TxError::Retry)
+    }
+
+    /// Client node executing this transaction.
+    fn client(&self) -> NodeId;
+}
+
+/// Outcome statistics for one committed transaction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TxStats {
+    /// Operations executed on shared objects.
+    pub ops: u64,
+    /// Times the body was (re-)executed before commit (1 = no retries).
+    pub attempts: u64,
+}
+
+/// A framework: creates and runs transactions over a shared cluster.
+/// `AccessDecl` names an object and its suprema.
+#[derive(Debug, Clone)]
+pub struct AccessDecl {
+    pub name: String,
+    pub suprema: Suprema,
+}
+
+impl AccessDecl {
+    pub fn new(name: impl Into<String>, suprema: Suprema) -> Self {
+        AccessDecl { name: name.into(), suprema }
+    }
+}
+
+/// Framework-polymorphic transaction runner: executes `body` with
+/// at-most-`max_attempts` retries (manual `retry()`, optimistic conflicts,
+/// forced aborts). Returns the body's value and stats.
+pub trait Dtm: Send + Sync {
+    fn framework_name(&self) -> &'static str;
+
+    /// Run a transaction from `client` over the declared access set.
+    /// The implementation handles start/commit/abort and retries.
+    fn run(
+        &self,
+        client: NodeId,
+        decls: &[AccessDecl],
+        irrevocable: bool,
+        body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError>;
+
+    /// Total transactions forcibly or optimistically aborted so far
+    /// (for the Fig 13 abort-rate table).
+    fn aborts(&self) -> u64;
+
+    /// Total commits so far.
+    fn commits(&self) -> u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suprema_classification() {
+        assert!(Suprema::reads(3).read_only());
+        assert!(!Suprema::reads(3).write_only());
+        assert!(Suprema::writes(2).write_only());
+        assert!(!Suprema::new(1, 0, 1).read_only());
+        assert!(Suprema::unknown().total() == u64::MAX);
+        assert_eq!(Suprema::new(1, 2, 3).total(), 6);
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(TxError::Retry.is_retryable());
+        assert!(TxError::Conflict("v".into()).is_retryable());
+        assert!(TxError::ForcedAbort("cascade".into()).is_retryable());
+        assert!(!TxError::ManualAbort.is_retryable());
+        assert!(!TxError::Completed.is_retryable());
+    }
+}

@@ -1,0 +1,136 @@
+//! Transaction-local buffers for complex objects (paper §2.6).
+//!
+//! * **Copy buffer** — a full snapshot of the object's state. Requires the
+//!   access condition before creation (it observes the state), but can then
+//!   serve local reads after the object is released. Also used as the
+//!   abort checkpoint `st_i(x)`.
+//! * **Log buffer** — records write-mode method invocations *without*
+//!   observing the object. Pure writes can therefore execute before any
+//!   synchronization. Applying the log replays the recorded calls against
+//!   the live object.
+//!
+//! Both buffers live on the same node as the object (CF requirement: side
+//! effects must happen at the object's home, §2.6) — structurally enforced
+//! here by the buffers being owned by the server-side proxy.
+
+use crate::object::{ObjectError, OpCall, SharedObject, Value};
+
+/// A snapshot of an object's state, usable for local reads and restores.
+pub struct CopyBuffer {
+    copy: Box<dyn SharedObject>,
+}
+
+impl CopyBuffer {
+    /// Snapshot `obj`. Caller must have satisfied the access condition.
+    pub fn capture(obj: &dyn SharedObject) -> Self {
+        CopyBuffer { copy: obj.snapshot() }
+    }
+
+    /// Execute a (read) operation against the buffered state.
+    pub fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        self.copy.invoke(call)
+    }
+
+    /// Restore the live object from this buffer (abort path).
+    pub fn restore_into(&self, obj: &mut dyn SharedObject) {
+        obj.restore(self.copy.as_ref());
+    }
+
+    /// Bytes this buffer occupies (cost accounting).
+    pub fn state_size(&self) -> usize {
+        self.copy.state_size()
+    }
+}
+
+/// A log of write-mode invocations awaiting application.
+#[derive(Default)]
+pub struct LogBuffer {
+    entries: Vec<OpCall>,
+}
+
+impl LogBuffer {
+    pub fn new() -> Self {
+        LogBuffer { entries: Vec::new() }
+    }
+
+    /// Record a write. Pure writes return no state-derived value, so the
+    /// caller gets `Unit` immediately.
+    pub fn record(&mut self, call: OpCall) -> Value {
+        self.entries.push(call);
+        Value::Unit
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Replay all recorded writes against the live object, draining the
+    /// log. Any error aborts the replay and is surfaced to the caller.
+    pub fn apply(&mut self, obj: &mut dyn SharedObject) -> Result<(), ObjectError> {
+        for call in self.entries.drain(..) {
+            obj.invoke(&call)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::object::{account::ops, Account, KvStore, QueueObject};
+
+    #[test]
+    fn copy_buffer_reads_do_not_touch_live_object() {
+        let mut live = Account::with_balance(100);
+        let mut buf = CopyBuffer::capture(&live);
+        live.invoke(&ops::deposit(900)).unwrap();
+        // buffer still sees the snapshot
+        assert_eq!(buf.invoke(&ops::balance()).unwrap().as_int(), 100);
+        assert_eq!(live.balance(), 1000);
+    }
+
+    #[test]
+    fn copy_buffer_restores_checkpoint() {
+        let mut live = Account::with_balance(50);
+        let st = CopyBuffer::capture(&live);
+        live.invoke(&ops::withdraw(40)).unwrap();
+        st.restore_into(&mut live);
+        assert_eq!(live.balance(), 50);
+    }
+
+    #[test]
+    fn log_buffer_defers_writes_then_applies_in_order() {
+        let mut q = QueueObject::new();
+        let mut log = LogBuffer::new();
+        log.record(OpCall::unary("push", 1i64));
+        log.record(OpCall::unary("push", 2i64));
+        assert!(q.is_empty(), "log writes must not touch the object");
+        log.apply(&mut q).unwrap();
+        assert_eq!(q.len(), 2);
+        assert!(log.is_empty(), "apply drains the log");
+        assert_eq!(q.invoke(&OpCall::nullary("pop")).unwrap().as_int(), 1);
+    }
+
+    #[test]
+    fn log_apply_preserves_overwrite_semantics() {
+        // Last write wins after replay, like direct execution.
+        let mut kv = KvStore::from_pairs(&[("k", 0)]);
+        let mut log = LogBuffer::new();
+        log.record(OpCall::new("put", vec![Value::from("k"), Value::from(1i64)]));
+        log.record(OpCall::new("put", vec![Value::from("k"), Value::from(2i64)]));
+        log.apply(&mut kv).unwrap();
+        assert_eq!(kv.invoke(&OpCall::unary("get", "k")).unwrap().as_int(), 2);
+    }
+
+    #[test]
+    fn log_apply_surfaces_errors() {
+        let mut q = QueueObject::new();
+        let mut log = LogBuffer::new();
+        log.record(OpCall::nullary("push")); // missing arg
+        assert!(log.apply(&mut q).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Safety checkers: serializability by replay, plus invariant helpers.
+//!
+//! OptSVA-CF is last-use opaque (§2.10.1), which implies serializability:
+//! every concurrent execution must be equivalent to *some* serial one. The
+//! versioning algorithms serialize committed transactions in commit-
+//! completion order (commit conditions are satisfied in consistent pv
+//! order across objects), so the checker replays the recorded committed
+//! transactions serially, in commit order, against fresh objects and
+//! compares every operation's return value. Any divergence is a
+//! serializability violation.
+//!
+//! Used by the integration and property tests; exposed publicly so
+//! downstream users can check their own workloads.
+
+use crate::object::{OpCall, SharedObject, Value};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One operation as observed by a committed transaction.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    /// Registry name of the object.
+    pub object: String,
+    pub call: OpCall,
+    /// The value the live run returned.
+    pub result: Value,
+}
+
+/// A committed transaction's observation record.
+#[derive(Debug, Clone)]
+pub struct TxRecord {
+    /// Client-chosen tag (thread id, tx number…) for diagnostics.
+    pub tag: String,
+    pub ops: Vec<OpRecord>,
+    /// Global commit-completion sequence number.
+    pub commit_seq: u64,
+}
+
+/// Thread-safe collector of committed-transaction records.
+#[derive(Default)]
+pub struct Recorder {
+    seq: AtomicU64,
+    records: Mutex<Vec<TxRecord>>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a committed transaction. Call *after* commit succeeds; the
+    /// sequence number captures commit-completion order.
+    pub fn commit(&self, tag: impl Into<String>, ops: Vec<OpRecord>) {
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst);
+        self.records.lock().unwrap().push(TxRecord {
+            tag: tag.into(),
+            ops,
+            commit_seq: seq,
+        });
+    }
+
+    /// All records, sorted by commit order.
+    pub fn take(&self) -> Vec<TxRecord> {
+        let mut v = std::mem::take(&mut *self.records.lock().unwrap());
+        v.sort_by_key(|r| r.commit_seq);
+        v
+    }
+}
+
+/// A serializability violation found by replay.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum CheckError {
+    #[error("tx {tag} op #{index} on {object}: live run saw {live}, serial replay got {replayed}")]
+    Divergence {
+        tag: String,
+        index: usize,
+        object: String,
+        live: String,
+        replayed: String,
+    },
+    #[error("tx {tag} references unknown object {object}")]
+    UnknownObject { tag: String, object: String },
+    #[error("replay error on {object}: {error}")]
+    ReplayFailed { object: String, error: String },
+}
+
+/// Replay `records` (in commit order) against `initial` object states and
+/// verify every recorded return value. On success returns the number of
+/// operations verified.
+pub fn check_serializable(
+    initial: BTreeMap<String, Box<dyn SharedObject>>,
+    records: &[TxRecord],
+) -> Result<u64, CheckError> {
+    let mut objects = initial;
+    let mut verified = 0u64;
+    let mut ordered: Vec<&TxRecord> = records.iter().collect();
+    ordered.sort_by_key(|r| r.commit_seq);
+    for rec in ordered {
+        for (i, op) in rec.ops.iter().enumerate() {
+            let obj = objects
+                .get_mut(&op.object)
+                .ok_or_else(|| CheckError::UnknownObject {
+                    tag: rec.tag.clone(),
+                    object: op.object.clone(),
+                })?;
+            let replayed = obj
+                .invoke(&op.call)
+                .map_err(|e| CheckError::ReplayFailed {
+                    object: op.object.clone(),
+                    error: e.to_string(),
+                })?;
+            if replayed != op.result {
+                return Err(CheckError::Divergence {
+                    tag: rec.tag.clone(),
+                    index: i,
+                    object: op.object.clone(),
+                    live: op.result.to_string(),
+                    replayed: replayed.to_string(),
+                });
+            }
+            verified += 1;
+        }
+    }
+    Ok(verified)
+}
+
+/// Replay `records` in commit order and return the final object states —
+/// order-independent workloads (commutative operations) can compare these
+/// against the live system's final states even when the recorded commit
+/// order is only an approximation of the serialization order.
+pub fn replay_final(
+    initial: BTreeMap<String, Box<dyn SharedObject>>,
+    records: &[TxRecord],
+) -> Result<BTreeMap<String, Box<dyn SharedObject>>, CheckError> {
+    let mut objects = initial;
+    let mut ordered: Vec<&TxRecord> = records.iter().collect();
+    ordered.sort_by_key(|r| r.commit_seq);
+    for rec in ordered {
+        for op in &rec.ops {
+            let obj = objects
+                .get_mut(&op.object)
+                .ok_or_else(|| CheckError::UnknownObject {
+                    tag: rec.tag.clone(),
+                    object: op.object.clone(),
+                })?;
+            obj.invoke(&op.call).map_err(|e| CheckError::ReplayFailed {
+                object: op.object.clone(),
+                error: e.to_string(),
+            })?;
+        }
+    }
+    Ok(objects)
+}
+
+/// Invariant helper: the sum of account balances must be conserved by
+/// transfer-only workloads.
+pub fn total_balance(balances: impl IntoIterator<Item = i64>) -> i64 {
+    balances.into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::object::{account::ops, Account};
+
+    fn acct(v: i64) -> Box<dyn SharedObject> {
+        Box::new(Account::with_balance(v))
+    }
+
+    #[test]
+    fn serial_history_verifies() {
+        let rec = Recorder::new();
+        rec.commit(
+            "t1",
+            vec![
+                OpRecord { object: "A".into(), call: ops::deposit(10), result: Value::Unit },
+                OpRecord { object: "A".into(), call: ops::balance(), result: Value::Int(110) },
+            ],
+        );
+        rec.commit(
+            "t2",
+            vec![OpRecord { object: "A".into(), call: ops::balance(), result: Value::Int(110) }],
+        );
+        let mut init = BTreeMap::new();
+        init.insert("A".to_string(), acct(100));
+        let n = check_serializable(init, &rec.take()).unwrap();
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn divergence_is_detected() {
+        let rec = Recorder::new();
+        // Claims to have read 999 — inconsistent with any serial order.
+        rec.commit(
+            "bad",
+            vec![OpRecord { object: "A".into(), call: ops::balance(), result: Value::Int(999) }],
+        );
+        let mut init = BTreeMap::new();
+        init.insert("A".to_string(), acct(100));
+        let err = check_serializable(init, &rec.take()).unwrap_err();
+        assert!(matches!(err, CheckError::Divergence { .. }));
+    }
+
+    #[test]
+    fn unknown_object_is_reported() {
+        let rec = Recorder::new();
+        rec.commit(
+            "t",
+            vec![OpRecord { object: "ghost".into(), call: ops::balance(), result: Value::Int(0) }],
+        );
+        let err = check_serializable(BTreeMap::new(), &rec.take()).unwrap_err();
+        assert!(matches!(err, CheckError::UnknownObject { .. }));
+    }
+
+    #[test]
+    fn commit_order_is_respected() {
+        let rec = Recorder::new();
+        rec.commit(
+            "first",
+            vec![OpRecord { object: "A".into(), call: ops::deposit(5), result: Value::Unit }],
+        );
+        rec.commit(
+            "second",
+            vec![OpRecord { object: "A".into(), call: ops::balance(), result: Value::Int(105) }],
+        );
+        let mut init = BTreeMap::new();
+        init.insert("A".to_string(), acct(100));
+        check_serializable(init, &rec.take()).unwrap();
+    }
+
+    #[test]
+    fn balance_conservation_helper() {
+        assert_eq!(total_balance([100, -30, 30]), 100);
+    }
+}

@@ -1,0 +1,96 @@
+//! Name registry — the RMI-registry analogue.
+//!
+//! Transactions locate shared objects by global name before declaring them
+//! in the preamble (paper Fig 9: `registry.locate("A")`). The registry maps
+//! names to [`Oid`]s; the hosting framework maps `Oid`s to live objects.
+
+use super::{NodeId, Oid};
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// Thread-safe name → object-id directory.
+pub struct Registry {
+    entries: RwLock<HashMap<String, Oid>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry { entries: RwLock::new(HashMap::new()) }
+    }
+
+    /// Bind a name to an object id. Rebinding an existing name replaces
+    /// the entry (RMI `Naming.rebind` semantics).
+    pub fn bind(&self, name: impl Into<String>, oid: Oid) {
+        self.entries.write().unwrap().insert(name.into(), oid);
+    }
+
+    /// Look up a name (RMI `Naming.lookup` / the paper's `locate`).
+    pub fn locate(&self, name: &str) -> Option<Oid> {
+        self.entries.read().unwrap().get(name).copied()
+    }
+
+    /// Remove a binding (object decommissioned / crash-stop).
+    pub fn unbind(&self, name: &str) -> Option<Oid> {
+        self.entries.write().unwrap().remove(name)
+    }
+
+    /// All registered names on a given node (diagnostics).
+    pub fn names_on(&self, node: NodeId) -> Vec<String> {
+        let map = self.entries.read().unwrap();
+        let mut names: Vec<String> = map
+            .iter()
+            .filter(|(_, oid)| oid.node == node)
+            .map(|(k, _)| k.clone())
+            .collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_locate_unbind() {
+        let r = Registry::new();
+        let oid = Oid::new(NodeId(1), 7);
+        r.bind("A", oid);
+        assert_eq!(r.locate("A"), Some(oid));
+        assert_eq!(r.unbind("A"), Some(oid));
+        assert_eq!(r.locate("A"), None);
+    }
+
+    #[test]
+    fn rebind_replaces() {
+        let r = Registry::new();
+        r.bind("A", Oid::new(NodeId(0), 0));
+        r.bind("A", Oid::new(NodeId(1), 1));
+        assert_eq!(r.locate("A"), Some(Oid::new(NodeId(1), 1)));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn names_on_filters_by_node() {
+        let r = Registry::new();
+        r.bind("a0", Oid::new(NodeId(0), 0));
+        r.bind("b0", Oid::new(NodeId(0), 1));
+        r.bind("a1", Oid::new(NodeId(1), 0));
+        assert_eq!(r.names_on(NodeId(0)), vec!["a0".to_string(), "b0".to_string()]);
+        assert_eq!(r.names_on(NodeId(1)), vec!["a1".to_string()]);
+    }
+}

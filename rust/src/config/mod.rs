@@ -1,0 +1,249 @@
+//! Scenario configuration: a small `key = value` file format plus CLI
+//! argument parsing (the offline mirror carries no `clap`/`serde`, so both
+//! are hand-rolled and tested here).
+//!
+//! Example scenario file (see `configs/`):
+//!
+//! ```text
+//! # Fig 10, read-dominated point
+//! framework = atomic-rmi2
+//! nodes = 4
+//! clients_per_node = 8
+//! arrays_per_node = 10
+//! txns_per_client = 10
+//! hot_ops = 10
+//! read_pct = 90
+//! locality = 0.5
+//! op_delay_us = 3000
+//! ```
+
+use crate::cluster::NetworkModel;
+use crate::workload::{EigenbenchParams, FrameworkKind};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Parsed `key = value` map with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct KvConfig {
+    entries: BTreeMap<String, String>,
+}
+
+/// Configuration/argument errors.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum ConfigError {
+    #[error("line {0}: expected `key = value`, got {1:?}")]
+    Syntax(usize, String),
+    #[error("key {0:?}: {1}")]
+    BadValue(String, String),
+    #[error("unknown framework {0:?}")]
+    UnknownFramework(String),
+    #[error("io: {0}")]
+    Io(String),
+}
+
+impl KvConfig {
+    /// Parse `key = value` lines; `#` starts a comment; blanks ignored.
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut entries = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Syntax(lineno + 1, raw.to_string()))?;
+            entries.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(KvConfig { entries })
+    }
+
+    pub fn load(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Io(e.to_string()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(String::as_str)
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.entries.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    fn typed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, ConfigError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| ConfigError::BadValue(key.into(), e.to_string())),
+        }
+    }
+
+    /// Overlay this config onto a default [`EigenbenchParams`].
+    pub fn to_eigenbench(&self) -> Result<EigenbenchParams, ConfigError> {
+        let mut p = EigenbenchParams::default();
+        if let Some(fw) = self.get("framework") {
+            p.kind = FrameworkKind::parse(fw)
+                .ok_or_else(|| ConfigError::UnknownFramework(fw.to_string()))?;
+        }
+        if let Some(v) = self.typed::<u16>("nodes")? {
+            p.nodes = v;
+        }
+        if let Some(v) = self.typed::<u32>("clients_per_node")? {
+            p.clients_per_node = v;
+        }
+        if let Some(v) = self.typed::<u32>("arrays_per_node")? {
+            p.arrays_per_node = v;
+        }
+        if let Some(v) = self.typed::<u32>("txns_per_client")? {
+            p.txns_per_client = v;
+        }
+        if let Some(v) = self.typed::<u32>("hot_ops")? {
+            p.hot_ops = v;
+        }
+        if let Some(v) = self.typed::<u32>("mild_ops")? {
+            p.mild_ops = v;
+        }
+        if let Some(v) = self.typed::<u32>("cold_ops")? {
+            p.cold_ops = v;
+        }
+        if let Some(v) = self.typed::<u8>("read_pct")? {
+            if v > 100 {
+                return Err(ConfigError::BadValue("read_pct".into(), "must be ≤ 100".into()));
+            }
+            p.read_pct = v;
+        }
+        if let Some(v) = self.typed::<f64>("locality")? {
+            p.locality = v;
+        }
+        if let Some(v) = self.typed::<usize>("history")? {
+            p.history = v;
+        }
+        if let Some(v) = self.typed::<u64>("op_delay_us")? {
+            p.op_delay = Duration::from_micros(v);
+        }
+        if let Some(v) = self.typed::<u64>("net_one_way_us")? {
+            p.net = NetworkModel {
+                one_way: Duration::from_micros(v),
+                per_kib: p.net.per_kib,
+            };
+        }
+        if let Some(v) = self.typed::<bool>("irrevocable")? {
+            p.irrevocable = v;
+        }
+        if let Some(v) = self.typed::<u64>("seed")? {
+            p.seed = v;
+        }
+        Ok(p)
+    }
+}
+
+/// Minimal CLI parser: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct CliArgs {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl CliArgs {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = CliArgs::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.options.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn option(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(String::as_str) == Some("true")
+    }
+
+    /// Fold `--key value` options into a [`KvConfig`] (CLI overrides file).
+    pub fn overlay(&self, mut kv: KvConfig) -> KvConfig {
+        for (k, v) in &self.options {
+            kv.set(k, v);
+        }
+        kv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kv_with_comments() {
+        let kv = KvConfig::parse("# hello\nnodes = 8\n\nread_pct=10 # trailing\n").unwrap();
+        assert_eq!(kv.get("nodes"), Some("8"));
+        assert_eq!(kv.get("read_pct"), Some("10"));
+        assert_eq!(kv.keys().count(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_syntax_and_values() {
+        assert!(matches!(KvConfig::parse("nodes 8"), Err(ConfigError::Syntax(1, _))));
+        let kv = KvConfig::parse("nodes = eight").unwrap();
+        assert!(matches!(kv.to_eigenbench(), Err(ConfigError::BadValue(_, _))));
+        let kv = KvConfig::parse("read_pct = 150").unwrap();
+        assert!(kv.to_eigenbench().is_err());
+        let kv = KvConfig::parse("framework = zaphod").unwrap();
+        assert!(matches!(kv.to_eigenbench(), Err(ConfigError::UnknownFramework(_))));
+    }
+
+    #[test]
+    fn eigenbench_overlay_applies_fields() {
+        let kv = KvConfig::parse(
+            "framework = hyflow2\nnodes = 8\nclients_per_node = 16\nread_pct = 10\nop_delay_us = 500\nirrevocable = true",
+        )
+        .unwrap();
+        let p = kv.to_eigenbench().unwrap();
+        assert_eq!(p.kind, FrameworkKind::Tfa);
+        assert_eq!(p.nodes, 8);
+        assert_eq!(p.clients_per_node, 16);
+        assert_eq!(p.read_pct, 10);
+        assert_eq!(p.op_delay, Duration::from_micros(500));
+        assert!(p.irrevocable);
+        // untouched fields keep defaults
+        assert_eq!(p.locality, 0.5);
+    }
+
+    #[test]
+    fn cli_parses_options_flags_positionals() {
+        let args = CliArgs::parse(
+            ["sweep", "fig10", "--nodes", "4", "--csv", "--seed", "7"]
+                .into_iter()
+                .map(String::from),
+        );
+        assert_eq!(args.positional, vec!["sweep", "fig10"]);
+        assert_eq!(args.option("nodes"), Some("4"));
+        assert!(args.flag("csv"));
+        let kv = args.overlay(KvConfig::default());
+        assert_eq!(kv.get("seed"), Some("7"));
+    }
+}

@@ -1,0 +1,346 @@
+//! Per-node executor thread (paper §3.3).
+//!
+//! "Given the cost of overhead that starting a thread creates, Atomic RMI 2
+//! uses one executor thread per JVM. The executor thread is always running
+//! and transactions assign it tasks. Each task consists of a condition and
+//! code. … Once the thread receives a task, it checks whether it can be
+//! immediately executed. If not, it queues up the task and waits until any
+//! of the two counters that can impact the condition change value (lv and
+//! ltv). When any of the counters change, the thread re-evaluates the
+//! relevant conditions and executes the task, if the condition so allows."
+//!
+//! `ObjectCc` pokes the node's [`Signal`] whenever `lv`/`ltv` change;
+//! the executor re-scans its queue on every poke.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Generation-counting wakeup signal shared between version counters and
+/// the executor loop.
+pub struct Signal {
+    gen: Mutex<u64>,
+    cond: Condvar,
+}
+
+impl Default for Signal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Signal {
+    pub fn new() -> Self {
+        Signal { gen: Mutex::new(0), cond: Condvar::new() }
+    }
+
+    /// Wake anyone waiting on the signal.
+    pub fn poke(&self) {
+        let mut g = self.gen.lock().unwrap();
+        *g += 1;
+        self.cond.notify_all();
+    }
+
+    pub fn generation(&self) -> u64 {
+        *self.gen.lock().unwrap()
+    }
+
+    /// Wait until the generation advances past `seen` (or the timeout).
+    pub fn wait_past(&self, seen: u64, timeout: Duration) -> u64 {
+        let mut g = self.gen.lock().unwrap();
+        let deadline = Instant::now() + timeout;
+        while *g <= seen {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        *g
+    }
+}
+
+/// Completion flag for a scheduled task.
+struct TaskDone {
+    done: Mutex<bool>,
+    cond: Condvar,
+}
+
+/// Handle to await a scheduled task's completion (the transaction joins
+/// its buffering/release tasks at commit/abort, §2.8.5).
+#[derive(Clone)]
+pub struct TaskHandle {
+    inner: Arc<TaskDone>,
+}
+
+impl TaskHandle {
+    fn new() -> Self {
+        TaskHandle {
+            inner: Arc::new(TaskDone { done: Mutex::new(false), cond: Condvar::new() }),
+        }
+    }
+
+    /// An already-completed handle — used when asynchrony is disabled
+    /// (ablation mode) and the "task" ran inline on the caller's thread.
+    pub fn ready() -> Self {
+        let h = TaskHandle::new();
+        h.complete();
+        h
+    }
+
+    fn complete(&self) {
+        let mut d = self.inner.done.lock().unwrap();
+        *d = true;
+        self.inner.cond.notify_all();
+    }
+
+    pub fn is_done(&self) -> bool {
+        *self.inner.done.lock().unwrap()
+    }
+
+    /// Block until the task has run. `deadline` None ⇒ wait forever.
+    pub fn join(&self, deadline: Option<Instant>) -> Result<(), ()> {
+        let mut d = self.inner.done.lock().unwrap();
+        while !*d {
+            match deadline {
+                None => d = self.inner.cond.wait(d).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return Err(());
+                    }
+                    let (g, _) = self.inner.cond.wait_timeout(d, dl - now).unwrap();
+                    d = g;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+type Cond = Box<dyn Fn() -> bool + Send>;
+type Action = Box<dyn FnOnce() + Send>;
+
+struct Task {
+    cond: Cond,
+    action: Option<Action>,
+    handle: TaskHandle,
+}
+
+struct ExecutorState {
+    queue: Vec<Task>,
+    shutdown: bool,
+}
+
+/// One executor per (simulated) node.
+pub struct Executor {
+    signal: Arc<Signal>,
+    state: Mutex<ExecutorState>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Executor {
+    /// Spawn the executor thread.
+    pub fn spawn() -> Arc<Executor> {
+        let exec = Arc::new(Executor {
+            signal: Arc::new(Signal::new()),
+            state: Mutex::new(ExecutorState { queue: Vec::new(), shutdown: false }),
+            thread: Mutex::new(None),
+        });
+        let loop_exec = Arc::clone(&exec);
+        let handle = std::thread::Builder::new()
+            .name("executor".into())
+            .spawn(move || loop_exec.run_loop())
+            .expect("spawn executor");
+        *exec.thread.lock().unwrap() = Some(handle);
+        exec
+    }
+
+    /// The signal that `ObjectCc::watch` should be given for every object
+    /// hosted on this executor's node.
+    pub fn signal(&self) -> Arc<Signal> {
+        Arc::clone(&self.signal)
+    }
+
+    /// Schedule `(condition, action)`. The action runs on the executor
+    /// thread the first time the condition is observed true.
+    pub fn submit(
+        &self,
+        cond: impl Fn() -> bool + Send + 'static,
+        action: impl FnOnce() + Send + 'static,
+    ) -> TaskHandle {
+        let handle = TaskHandle::new();
+        {
+            let mut st = self.state.lock().unwrap();
+            assert!(!st.shutdown, "submit after shutdown");
+            st.queue.push(Task {
+                cond: Box::new(cond),
+                action: Some(Box::new(action)),
+                handle: handle.clone(),
+            });
+        }
+        self.signal.poke(); // check immediately-runnable tasks
+        handle
+    }
+
+    /// Number of queued (not yet run) tasks.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    fn run_loop(&self) {
+        let mut seen_gen = 0u64;
+        loop {
+            // Collect runnable tasks under the lock, run them outside it
+            // (actions may take object locks / run kernels).
+            let mut runnable: Vec<(Action, TaskHandle)> = Vec::new();
+            {
+                let mut st = self.state.lock().unwrap();
+                if st.shutdown && st.queue.is_empty() {
+                    return;
+                }
+                let mut i = 0;
+                while i < st.queue.len() {
+                    if (st.queue[i].cond)() {
+                        let mut t = st.queue.remove(i);
+                        runnable.push((t.action.take().unwrap(), t.handle.clone()));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            for (action, handle) in runnable {
+                action();
+                handle.complete();
+            }
+            // Sleep until a counter changes or a task arrives; the timeout
+            // bounds staleness if a poke races with queue insertion.
+            seen_gen = self.signal.wait_past(seen_gen, Duration::from_millis(50));
+        }
+    }
+
+    /// Stop the executor once its queue drains.
+    pub fn shutdown(&self) {
+        self.state.lock().unwrap().shutdown = true;
+        self.signal.poke();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        // Best-effort: if the owner forgot to call shutdown, stop the
+        // thread without joining (we may be on the executor thread itself).
+        self.state.lock().unwrap().shutdown = true;
+        self.signal.poke();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    #[test]
+    fn immediately_true_condition_runs() {
+        let ex = Executor::spawn();
+        let ran = Arc::new(AtomicBool::new(false));
+        let r = Arc::clone(&ran);
+        let h = ex.submit(|| true, move || r.store(true, Ordering::SeqCst));
+        h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        assert!(ran.load(Ordering::SeqCst));
+        ex.shutdown();
+    }
+
+    #[test]
+    fn task_waits_for_condition() {
+        let ex = Executor::spawn();
+        let gate = Arc::new(AtomicBool::new(false));
+        let ran = Arc::new(AtomicBool::new(false));
+        let (g, r) = (Arc::clone(&gate), Arc::clone(&ran));
+        let h = ex.submit(
+            move || g.load(Ordering::SeqCst),
+            move || r.store(true, Ordering::SeqCst),
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!h.is_done(), "must not run before the condition holds");
+        gate.store(true, Ordering::SeqCst);
+        ex.signal().poke();
+        h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        assert!(ran.load(Ordering::SeqCst));
+        ex.shutdown();
+    }
+
+    #[test]
+    fn tasks_run_in_submission_order_when_ready_together() {
+        let ex = Executor::spawn();
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = vec![];
+        for i in 0..5 {
+            let o = Arc::clone(&order);
+            handles.push(ex.submit(|| true, move || o.lock().unwrap().push(i)));
+        }
+        for h in &handles {
+            h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        ex.shutdown();
+    }
+
+    #[test]
+    fn join_timeout_on_never_true_condition() {
+        let ex = Executor::spawn();
+        let h = ex.submit(|| false, || {});
+        let r = h.join(Some(Instant::now() + Duration::from_millis(50)));
+        assert!(r.is_err());
+        // unblock shutdown: drop the task by flipping shutdown with queue
+        // non-empty is fine — run_loop exits only when queue empties, so
+        // poke a trivially-true replacement path: directly clear via drop.
+        ex.state.lock().unwrap().queue.clear();
+        ex.shutdown();
+    }
+
+    #[test]
+    fn signal_generation_advances() {
+        let s = Signal::new();
+        let g = s.generation();
+        s.poke();
+        assert_eq!(s.generation(), g + 1);
+        let waited = s.wait_past(g, Duration::from_millis(10));
+        assert!(waited > g);
+    }
+
+    #[test]
+    fn many_tasks_with_interleaved_conditions() {
+        let ex = Executor::spawn();
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut handles = vec![];
+        for i in 0..20u64 {
+            let c = Arc::clone(&counter);
+            let c2 = Arc::clone(&counter);
+            // task i runs only when counter == i → forces sequential cascade
+            handles.push(ex.submit(
+                move || c.load(Ordering::SeqCst) == i,
+                move || {
+                    c2.fetch_add(1, Ordering::SeqCst);
+                },
+            ));
+        }
+        // each completion pokes nothing by itself — poke via a ticker
+        for _ in 0..100 {
+            ex.signal().poke();
+            if counter.load(Ordering::SeqCst) == 20 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for h in &handles {
+            h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+        ex.shutdown();
+    }
+}

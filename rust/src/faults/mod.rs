@@ -1,0 +1,230 @@
+//! Fault tolerance mechanisms (paper §3.4).
+//!
+//! Two failure classes:
+//!
+//!  * **Remote object failures** — crash-stop: the object disappears; every
+//!    later call raises `TxError::ObjectCrashed`. Injected with
+//!    [`AtomicRmi2::crash_object`]; the programmer handles the exception
+//!    (rerun, compensate).
+//!
+//!  * **Transaction failures** — a client crashes mid-transaction, leaving
+//!    objects acquired and other transactions blocked. The [`Detector`]
+//!    plays the paper's server-side role: each object watches whether its
+//!    current transaction is still responding; on timeout the object
+//!    "performs a rollback on itself: it reverts its state and releases
+//!    itself". If the crash was illusory and the client resumes, its next
+//!    call on the rolled-back object is refused and the transaction is
+//!    forced to abort — exactly the paper's resolution.
+//!
+//! Eviction is only performed when the suspect's commit condition holds
+//! (it is the next transaction in termination order for that object), so
+//! `lv`/`ltv` remain consistent; a chain of crashed transactions is
+//! cleaned up over successive scans.
+
+use crate::optsva::AtomicRmi2;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Background transaction-failure detector for an [`AtomicRmi2`] system.
+pub struct Detector {
+    stop: Arc<AtomicBool>,
+    evictions: Arc<AtomicU64>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Detector {
+    /// Start scanning `sys` every `scan_every`; a transaction is suspected
+    /// once it has not dispatched to an object for `suspect_after`.
+    pub fn start(sys: Arc<AtomicRmi2>, suspect_after: Duration, scan_every: Duration) -> Detector {
+        let stop = Arc::new(AtomicBool::new(false));
+        let evictions = Arc::new(AtomicU64::new(0));
+        let (stop2, evictions2) = (Arc::clone(&stop), Arc::clone(&evictions));
+        let thread = std::thread::Builder::new()
+            .name("fault-detector".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    evictions2
+                        .fetch_add(Self::scan(&sys, suspect_after), Ordering::Relaxed);
+                    std::thread::sleep(scan_every);
+                }
+            })
+            .expect("spawn fault detector");
+        Detector { stop, evictions, thread: Some(thread) }
+    }
+
+    /// One synchronous pass (also used directly by tests): evict every
+    /// live, stale, commit-ready proxy. Returns the eviction count.
+    pub fn scan(sys: &AtomicRmi2, suspect_after: Duration) -> u64 {
+        let mut evicted = 0;
+        for slot in sys.all_slots() {
+            let mut active = slot.active.lock().unwrap();
+            // Prune proxies whose transactions are gone or finished.
+            active.retain(|w| {
+                w.upgrade().map(|p| !p.terminated()).unwrap_or(false)
+            });
+            let stale: Vec<_> = active
+                .iter()
+                .filter_map(|w| w.upgrade())
+                .filter(|p| {
+                    !p.is_evicted() && p.staleness() > suspect_after && p.evictable()
+                })
+                .collect();
+            drop(active);
+            for p in stale {
+                p.evict();
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
+    /// Total objects rolled back so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Stop the detector thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Detector {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Suprema, TxCtx, TxError};
+    use crate::cluster::{Cluster, NetworkModel, NodeId};
+    use crate::object::{account::ops, Account};
+    use crate::optsva::OptsvaConfig;
+
+    fn sys() -> Arc<AtomicRmi2> {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        AtomicRmi2::with_config(
+            cluster,
+            OptsvaConfig { wait_timeout: Some(Duration::from_secs(5)), asynchrony: true },
+        )
+    }
+
+    #[test]
+    fn crashed_client_objects_roll_themselves_back() {
+        let sys = sys();
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+
+        // "Crash" a client mid-transaction: modify A, never commit, leak.
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 2);
+        tx.begin().unwrap();
+        tx.call(h, ops::withdraw(60)).unwrap();
+        std::mem::forget(tx); // no Drop rollback: a real crash
+
+        std::thread::sleep(Duration::from_millis(30));
+        let n = Detector::scan(&sys, Duration::from_millis(10));
+        assert_eq!(n, 1, "the abandoned object must be evicted");
+        // State reverted, object released: a new transaction proceeds.
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 100);
+        let mut t2 = sys.tx(NodeId(0));
+        let h2 = t2.updates("A", 1);
+        t2.run(|t| {
+            t.call(h2, ops::deposit(1))?;
+            Ok(())
+        })
+        .unwrap();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn illusory_crash_forces_the_returning_transaction_to_abort() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 2);
+        tx.begin().unwrap();
+        tx.call(h, ops::withdraw(60)).unwrap();
+
+        // The detector (too aggressively) suspects the client.
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(Detector::scan(&sys, Duration::from_millis(10)), 1);
+
+        // The client was actually alive; its next call must be refused.
+        let err = tx.call(h, ops::deposit(1)).unwrap_err();
+        assert!(matches!(err, TxError::ForcedAbort(_)), "got {err:?}");
+        // commit must also fail
+        let err = tx.commit().unwrap_err();
+        assert!(matches!(err, TxError::ForcedAbort(_)));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn responsive_transactions_are_not_evicted() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 3);
+        tx.begin().unwrap();
+        tx.call(h, ops::deposit(1)).unwrap();
+        // Recently active ⇒ a scan with a generous timeout evicts nothing.
+        assert_eq!(Detector::scan(&sys, Duration::from_secs(10)), 0);
+        tx.call(h, ops::deposit(1)).unwrap();
+        tx.call(h, ops::deposit(1)).unwrap();
+        tx.commit().unwrap();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn background_detector_unblocks_waiters() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let det = Detector::start(
+            Arc::clone(&sys),
+            Duration::from_millis(40),
+            Duration::from_millis(10),
+        );
+
+        // Crash one client holding A…
+        let mut dead = sys.tx(NodeId(0));
+        let hd = dead.updates("A", 2);
+        dead.begin().unwrap();
+        dead.call(hd, ops::deposit(7)).unwrap();
+        std::mem::forget(dead);
+
+        // …a second client still gets through once the detector fires.
+        let mut t2 = sys.tx(NodeId(0));
+        let h2 = t2.updates("A", 1);
+        t2.begin().unwrap();
+        t2.call(h2, ops::deposit(1)).unwrap();
+        t2.commit().unwrap();
+        assert!(det.evictions() >= 1);
+        det.stop();
+        let oid = sys.cluster().registry.locate("A").unwrap();
+        assert_eq!(sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 1);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn crash_stop_object_failure_raises() {
+        let sys = sys();
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 1);
+        tx.begin().unwrap();
+        sys.crash_object(a);
+        let err = tx.call(h, ops::deposit(1)).unwrap_err();
+        assert_eq!(err, TxError::ObjectCrashed(a));
+        let _ = tx.abort();
+        sys.shutdown();
+    }
+}

@@ -1,0 +1,53 @@
+//! # Atomic RMI 2 — OptSVA-CF distributed transactional memory
+//!
+//! A from-scratch reproduction of *"Atomic RMI 2: Highly Parallel
+//! Pessimistic Distributed Transactional Memory"* (Siek & Wojciechowski,
+//! CS.DC 2016): a control-flow-model DTM with pessimistic, abort-free
+//! supremum-versioning concurrency control, early release, and
+//! asynchronous buffering — plus every baseline the paper evaluates
+//! against (SVA, TFA/HyFlow2, distributed mutex/R-W locks in S2PL and 2PL
+//! variants, a global lock) and a distributed Eigenbench workload.
+//!
+//! ## Layout
+//!
+//! * [`cluster`] — simulated distributed substrate (nodes, latency-injected
+//!   RPC, name registry);
+//! * [`object`] — the complex shared-object model (§2.5): black-box objects
+//!   with READ/WRITE/UPDATE-annotated methods;
+//! * [`buffers`] — copy & log buffers (§2.6);
+//! * [`versioning`] — `pv`/`lv`/`ltv` counters, access & commit conditions,
+//!   invalidation marks (§2.1–§2.3);
+//! * [`executor`] — per-node (condition, code) task executor (§3.3);
+//! * [`optsva`] — **the paper's contribution**: OptSVA-CF / Atomic RMI 2
+//!   (§2.8, §3);
+//! * [`sva`] — Atomic RMI 1 baseline (operation-agnostic SVA);
+//! * [`tfa`] — HyFlow2 stand-in (optimistic Transaction Forwarding, DF);
+//! * [`locks`] — distributed lock baselines (Mutex/R-W × S2PL/2PL, GLock);
+//! * [`api`] — the framework-polymorphic `Transaction`/`Dtm` API (Fig 8);
+//! * [`workload`] — distributed Eigenbench (§4.2);
+//! * [`metrics`], [`config`], [`checker`], [`faults`] — measurement,
+//!   scenario configuration, safety checking, fault injection;
+//! * [`runtime`] — PJRT/XLA loader executing the AOT-compiled Pallas
+//!   kernel used by `object::ComputeObject` (CF compute delegation).
+
+pub mod api;
+pub mod checker;
+pub mod config;
+pub mod buffers;
+pub mod cluster;
+pub mod locks;
+pub mod executor;
+pub mod faults;
+pub mod metrics;
+pub mod object;
+pub mod optsva;
+pub mod runtime;
+pub mod sva;
+pub mod tfa;
+pub mod util;
+pub mod workload;
+pub mod versioning;
+
+pub use api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError, TxStats};
+pub use cluster::{Cluster, NetworkModel, NodeId, Oid};
+pub use optsva::{AtomicRmi2, OptsvaConfig};

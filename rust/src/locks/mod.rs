@@ -1,0 +1,393 @@
+//! Distributed lock-based concurrency control baselines (paper §4.1).
+//!
+//! Five configurations, all custom-built on the simulated RMI substrate:
+//!
+//! | name          | lock per object | acquisition      | release          |
+//! |---------------|-----------------|------------------|------------------|
+//! | `Mutex S2PL`  | mutual exclusion| all at start     | all at commit    |
+//! | `Mutex 2PL`   | mutual exclusion| all at start     | after last use   |
+//! | `R/W S2PL`    | readers–writer  | all at start     | all at commit    |
+//! | `R/W 2PL`     | readers–writer  | all at start     | after last use   |
+//! | `GLock`       | one global lock | at start         | at commit        |
+//!
+//! S2PL is conservative (strong) strict two-phase locking and satisfies
+//! opacity; 2PL releases each lock as soon as the transaction's declared
+//! last access to the object has happened (the paper's programmer-
+//! determined early unlock), satisfying last-use opacity. Locks are always
+//! acquired in global `Oid` order, so no deadlock is possible. None of the
+//! lock baselines ever abort (other than by manual request, which simply
+//! re-raises after releasing — there is no rollback: like the paper's lock
+//! variants, state restoration is the programmer's problem, so workloads
+//! using them must be abort-free).
+
+mod rwlock;
+
+pub use rwlock::{DistRwLock, LockMode};
+
+use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::cluster::{Cluster, NodeId, Oid};
+use crate::object::{OpCall, SharedObject, Value};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Which lock structure guards each object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    /// One mutual-exclusion lock per object.
+    Mutex,
+    /// One readers–writer lock per object: read-only access sets take the
+    /// shared mode.
+    ReadWrite,
+    /// A single global mutual-exclusion lock (fully serial baseline).
+    Global,
+}
+
+/// Release discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Conservative strict 2PL: hold everything until commit.
+    S2pl,
+    /// Early unlock after the declared last access (suprema reached).
+    Tpl,
+}
+
+/// A hosted object guarded by a lock.
+struct Slot {
+    oid: Oid,
+    lock: DistRwLock,
+    object: Mutex<Box<dyn SharedObject>>,
+}
+
+/// The lock-based "framework".
+pub struct LockSystem {
+    cluster: Arc<Cluster>,
+    kind: LockKind,
+    discipline: Discipline,
+    slots: Vec<RwLock<Vec<Arc<Slot>>>>,
+    glock: DistRwLock,
+    pub commits: AtomicU64,
+    pub manual_aborts: AtomicU64,
+}
+
+impl LockSystem {
+    pub fn new(cluster: Arc<Cluster>, kind: LockKind, discipline: Discipline) -> Arc<Self> {
+        let slots = cluster.node_ids().map(|_| RwLock::new(Vec::new())).collect();
+        Arc::new(LockSystem {
+            cluster,
+            kind,
+            discipline,
+            slots,
+            glock: DistRwLock::new(),
+            commits: AtomicU64::new(0),
+            manual_aborts: AtomicU64::new(0),
+        })
+    }
+
+    pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
+        let mut slots = self.slots[node.0 as usize].write().unwrap();
+        let oid = Oid::new(node, slots.len() as u32);
+        slots.push(Arc::new(Slot {
+            oid,
+            lock: DistRwLock::new(),
+            object: Mutex::new(object),
+        }));
+        drop(slots);
+        self.cluster.registry.bind(name, oid);
+        oid
+    }
+
+    fn slot(&self, oid: Oid) -> Arc<Slot> {
+        let slots = self.slots[oid.node.0 as usize].read().unwrap();
+        Arc::clone(&slots[oid.index as usize])
+    }
+
+    /// Peek at an object's state (non-transactional test helper).
+    pub fn with_object<R>(&self, oid: Oid, f: impl FnOnce(&dyn SharedObject) -> R) -> R {
+        let slot = self.slot(oid);
+        let obj = slot.object.lock().unwrap();
+        f(obj.as_ref())
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    fn label(&self) -> &'static str {
+        match (self.kind, self.discipline) {
+            (LockKind::Mutex, Discipline::S2pl) => "mutex-s2pl",
+            (LockKind::Mutex, Discipline::Tpl) => "mutex-2pl",
+            (LockKind::ReadWrite, Discipline::S2pl) => "rw-s2pl",
+            (LockKind::ReadWrite, Discipline::Tpl) => "rw-2pl",
+            (LockKind::Global, _) => "glock",
+        }
+    }
+}
+
+struct HeldLock {
+    slot: Arc<Slot>,
+    /// `None` under GLock: no per-object lock is held, the global lock
+    /// covers everything.
+    mode: Option<LockMode>,
+    /// Total declared accesses; lock released once `count` reaches it
+    /// under the 2PL discipline.
+    ub: u64,
+    count: u64,
+    released: bool,
+}
+
+struct LockTx<'a> {
+    sys: &'a LockSystem,
+    client: NodeId,
+    held: Vec<HeldLock>,
+    glock_held: bool,
+    ops: u64,
+}
+
+impl LockTx<'_> {
+    fn invoke(&mut self, h: ObjHandle, call: &OpCall) -> Result<Value, TxError> {
+        let hl = &mut self.held[h.0];
+        if hl.released && hl.mode.is_some() {
+            return Err(TxError::SupremaExceeded {
+                oid: hl.slot.oid,
+                mode: "any",
+                count: hl.count + 1,
+                bound: hl.ub,
+            });
+        }
+        let mut obj = hl.slot.object.lock().unwrap();
+        let v = obj.invoke(call)?;
+        drop(obj);
+        hl.count += 1;
+        self.ops += 1;
+        // 2PL: programmer-determined last access ⇒ early unlock.
+        if self.sys.discipline == Discipline::Tpl && hl.count == hl.ub {
+            if let Some(mode) = hl.mode {
+                hl.slot.lock.unlock(mode);
+            }
+            hl.released = true;
+        }
+        Ok(v)
+    }
+
+    fn release_all(&mut self) {
+        for hl in &mut self.held {
+            if !hl.released {
+                if let Some(mode) = hl.mode {
+                    hl.slot.lock.unlock(mode);
+                }
+                hl.released = true;
+            }
+        }
+        if self.glock_held {
+            self.sys.glock.unlock(LockMode::Exclusive);
+            self.glock_held = false;
+        }
+    }
+}
+
+impl TxCtx for LockTx<'_> {
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+        let node = self.held[h.0].slot.oid.node;
+        let req = call.wire_size();
+        let client = self.client;
+        let cluster = Arc::clone(&self.sys.cluster);
+        cluster.rpc(client, node, req, || {
+            let r = self.invoke(h, &call);
+            let resp = match &r {
+                Ok(v) => v.wire_size(),
+                Err(_) => 16,
+            };
+            (r, resp)
+        })
+    }
+
+    fn client(&self) -> NodeId {
+        self.client
+    }
+}
+
+impl Dtm for Arc<LockSystem> {
+    fn framework_name(&self) -> &'static str {
+        self.label()
+    }
+
+    fn run(
+        &self,
+        client: NodeId,
+        decls: &[AccessDecl],
+        _irrevocable: bool, // locks never abort: everything is irrevocable
+        body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError> {
+        let cluster = Arc::clone(&self.cluster);
+
+        // Resolve and sort the access set by Oid — the global lock order.
+        let mut resolved: Vec<(usize, Oid)> = Vec::with_capacity(decls.len());
+        for (i, d) in decls.iter().enumerate() {
+            let oid = cluster
+                .registry
+                .locate(&d.name)
+                .ok_or_else(|| TxError::NotDeclared(d.name.clone()))?;
+            resolved.push((i, oid));
+        }
+        let mut order: Vec<usize> = (0..resolved.len()).collect();
+        order.sort_by_key(|&k| resolved[k].1);
+
+        let mut tx = LockTx { sys: self, client, held: Vec::new(), glock_held: false, ops: 0 };
+
+        if self.kind == LockKind::Global {
+            // The global lock lives on node 0.
+            cluster.rpc(client, NodeId(0), 24, || {
+                self.glock.lock(LockMode::Exclusive);
+                ((), 16)
+            });
+            tx.glock_held = true;
+        }
+
+        // Acquire per-object locks in global order (deadlock-free).
+        let mut held: Vec<Option<HeldLock>> = (0..decls.len()).map(|_| None).collect();
+        for &k in &order {
+            let (i, oid) = resolved[k];
+            let slot = self.slot(oid);
+            let mode = match self.kind {
+                LockKind::Global => None, // covered by the global lock
+                LockKind::ReadWrite if decls[i].suprema.read_only() => Some(LockMode::Shared),
+                _ => Some(LockMode::Exclusive),
+            };
+            if let Some(mode) = mode {
+                cluster.rpc(client, oid.node, 24, || {
+                    slot.lock.lock(mode);
+                    ((), 16)
+                });
+            }
+            held[i] = Some(HeldLock {
+                slot,
+                mode,
+                ub: decls[i].suprema.total(),
+                count: 0,
+                released: false,
+            });
+        }
+        tx.held = held.into_iter().map(Option::unwrap).collect();
+
+        let r = body(&mut tx);
+        // Commit = release everything (one message per remote object).
+        for hl in &tx.held {
+            if !hl.released && hl.mode.is_some() {
+                cluster.send(client, hl.slot.oid.node, 24);
+            }
+        }
+        tx.release_all();
+        match r {
+            Ok(()) => {
+                self.commits.fetch_add(1, Ordering::Relaxed);
+                Ok(TxStats { ops: tx.ops, attempts: 1 })
+            }
+            Err(e) => {
+                // No rollback support: surface the error as-is.
+                self.manual_aborts.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    fn aborts(&self) -> u64 {
+        self.manual_aborts.load(Ordering::Relaxed)
+    }
+
+    fn commits(&self) -> u64 {
+        self.commits.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Suprema;
+    use crate::cluster::NetworkModel;
+    use crate::object::{account::ops, Account};
+
+    fn run_transfer(kind: LockKind, discipline: Discipline) {
+        let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+        let sys = LockSystem::new(cluster, kind, discipline);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+        let b = sys.host(NodeId(1), "B", Box::new(Account::with_balance(0)));
+        let decls = vec![
+            AccessDecl::new("A", Suprema::new(0, 0, 1)),
+            AccessDecl::new("B", Suprema::new(0, 0, 1)),
+        ];
+        let stats = sys
+            .run(NodeId(0), &decls, false, &mut |t| {
+                t.call(ObjHandle(0), ops::withdraw(30))?;
+                t.call(ObjHandle(1), ops::deposit(30))?;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(stats.ops, 2);
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 70);
+        assert_eq!(sys.with_object(b, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 30);
+    }
+
+    #[test]
+    fn all_lock_variants_run_a_transfer() {
+        run_transfer(LockKind::Mutex, Discipline::S2pl);
+        run_transfer(LockKind::Mutex, Discipline::Tpl);
+        run_transfer(LockKind::ReadWrite, Discipline::S2pl);
+        run_transfer(LockKind::ReadWrite, Discipline::Tpl);
+        run_transfer(LockKind::Global, Discipline::S2pl);
+    }
+
+    #[test]
+    fn concurrent_increments_are_serialized() {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let sys = LockSystem::new(cluster, LockKind::Mutex, Discipline::Tpl);
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let sys = Arc::clone(&sys);
+            handles.push(std::thread::spawn(move || {
+                let decls = vec![AccessDecl::new("A", Suprema::new(1, 0, 1))];
+                sys.run(NodeId(0), &decls, false, &mut |t| {
+                    let v = t.call(ObjHandle(0), ops::balance())?.as_int();
+                    t.call(ObjHandle(0), ops::deposit(v + 1 - v))?; // +1
+                    Ok(())
+                })
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let oid = sys.cluster().registry.locate("A").unwrap();
+        assert_eq!(sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 8);
+        assert_eq!(sys.commits(), 8);
+    }
+
+    #[test]
+    fn rw_s2pl_allows_parallel_readers() {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let sys = LockSystem::new(cluster, LockKind::ReadWrite, Discipline::S2pl);
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(42)));
+        // Two read-only transactions run concurrently without blocking:
+        // verify by holding one open while the other completes.
+        let decls = vec![AccessDecl::new("A", Suprema::reads(1))];
+        let sys2 = Arc::clone(&sys);
+        let d2 = decls.clone();
+        let t = std::thread::spawn(move || {
+            sys2.run(NodeId(0), &d2, false, &mut |t| {
+                t.call(ObjHandle(0), ops::balance())?;
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                Ok(())
+            })
+            .unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t0 = std::time::Instant::now();
+        sys.run(NodeId(0), &decls, false, &mut |t| {
+            t.call(ObjHandle(0), ops::balance())?;
+            Ok(())
+        })
+        .unwrap();
+        assert!(t0.elapsed() < std::time::Duration::from_millis(60), "reader blocked by reader");
+        t.join().unwrap();
+    }
+}

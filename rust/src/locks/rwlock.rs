@@ -1,0 +1,183 @@
+//! A blocking readers–writer lock with explicit lock/unlock (no guards).
+//!
+//! `std::sync::RwLock` returns RAII guards tied to the acquiring thread's
+//! borrow; distributed 2PL needs locks that are acquired in one call and
+//! released in another, potentially interleaved with long waits. This is a
+//! plain condvar-based implementation with writer preference (a waiting
+//! writer blocks new readers), which is what a fair distributed lock
+//! service would provide.
+
+use std::sync::{Condvar, Mutex};
+
+/// Shared (read) or exclusive (write) acquisition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockMode {
+    Shared,
+    Exclusive,
+}
+
+#[derive(Default)]
+struct State {
+    readers: u64,
+    writer: bool,
+    writers_waiting: u64,
+}
+
+/// Explicit-release readers–writer lock (also used as a mutex by always
+/// acquiring `Exclusive`).
+pub struct DistRwLock {
+    state: Mutex<State>,
+    cond: Condvar,
+}
+
+impl Default for DistRwLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DistRwLock {
+    pub fn new() -> Self {
+        DistRwLock { state: Mutex::new(State::default()), cond: Condvar::new() }
+    }
+
+    /// Block until the lock is held in `mode`.
+    pub fn lock(&self, mode: LockMode) {
+        let mut s = self.state.lock().unwrap();
+        match mode {
+            LockMode::Shared => {
+                while s.writer || s.writers_waiting > 0 {
+                    s = self.cond.wait(s).unwrap();
+                }
+                s.readers += 1;
+            }
+            LockMode::Exclusive => {
+                s.writers_waiting += 1;
+                while s.writer || s.readers > 0 {
+                    s = self.cond.wait(s).unwrap();
+                }
+                s.writers_waiting -= 1;
+                s.writer = true;
+            }
+        }
+    }
+
+    /// Try to acquire without blocking. Returns `true` on success.
+    pub fn try_lock(&self, mode: LockMode) -> bool {
+        let mut s = self.state.lock().unwrap();
+        match mode {
+            LockMode::Shared => {
+                if s.writer || s.writers_waiting > 0 {
+                    return false;
+                }
+                s.readers += 1;
+                true
+            }
+            LockMode::Exclusive => {
+                if s.writer || s.readers > 0 {
+                    return false;
+                }
+                s.writer = true;
+                true
+            }
+        }
+    }
+
+    /// Release a previously acquired lock.
+    pub fn unlock(&self, mode: LockMode) {
+        let mut s = self.state.lock().unwrap();
+        match mode {
+            LockMode::Shared => {
+                assert!(s.readers > 0, "unlock(Shared) without readers");
+                s.readers -= 1;
+            }
+            LockMode::Exclusive => {
+                assert!(s.writer, "unlock(Exclusive) without a writer");
+                s.writer = false;
+            }
+        }
+        self.cond.notify_all();
+    }
+
+    /// Current holder counts `(readers, writer)` — diagnostics.
+    pub fn holders(&self) -> (u64, bool) {
+        let s = self.state.lock().unwrap();
+        (s.readers, s.writer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn readers_share_writers_exclude() {
+        let l = DistRwLock::new();
+        l.lock(LockMode::Shared);
+        l.lock(LockMode::Shared);
+        assert_eq!(l.holders(), (2, false));
+        assert!(!l.try_lock(LockMode::Exclusive));
+        l.unlock(LockMode::Shared);
+        l.unlock(LockMode::Shared);
+        assert!(l.try_lock(LockMode::Exclusive));
+        assert!(!l.try_lock(LockMode::Shared));
+        l.unlock(LockMode::Exclusive);
+    }
+
+    #[test]
+    fn writer_waits_for_readers() {
+        let l = Arc::new(DistRwLock::new());
+        l.lock(LockMode::Shared);
+        let l2 = Arc::clone(&l);
+        let w = thread::spawn(move || {
+            l2.lock(LockMode::Exclusive);
+            l2.unlock(LockMode::Exclusive);
+        });
+        thread::sleep(Duration::from_millis(30));
+        assert!(!w.is_finished());
+        l.unlock(LockMode::Shared);
+        w.join().unwrap();
+    }
+
+    #[test]
+    fn waiting_writer_blocks_new_readers() {
+        let l = Arc::new(DistRwLock::new());
+        l.lock(LockMode::Shared);
+        let l2 = Arc::clone(&l);
+        let w = thread::spawn(move || {
+            l2.lock(LockMode::Exclusive);
+            l2.unlock(LockMode::Exclusive);
+        });
+        thread::sleep(Duration::from_millis(20));
+        // Writer is queued: a new reader must not starve it.
+        assert!(!l.try_lock(LockMode::Shared));
+        l.unlock(LockMode::Shared);
+        w.join().unwrap();
+    }
+
+    #[test]
+    fn many_threads_mutex_discipline() {
+        let l = Arc::new(DistRwLock::new());
+        let counter = Arc::new(Mutex::new(0u64));
+        let mut hs = vec![];
+        for _ in 0..16 {
+            let (l, c) = (Arc::clone(&l), Arc::clone(&counter));
+            hs.push(thread::spawn(move || {
+                for _ in 0..50 {
+                    l.lock(LockMode::Exclusive);
+                    let mut g = c.lock().unwrap();
+                    *g += 1;
+                    drop(g);
+                    l.unlock(LockMode::Exclusive);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(*counter.lock().unwrap(), 16 * 50);
+    }
+}

@@ -1,0 +1,170 @@
+//! `atomic-rmi2` — the launcher.
+//!
+//! ```text
+//! atomic-rmi2 eigenbench [--config FILE] [--framework F] [--nodes N] …
+//! atomic-rmi2 sweep fig10|fig11|fig12|fig13 [--quick] [--csv]
+//! atomic-rmi2 demo
+//! atomic-rmi2 list-frameworks
+//! ```
+//!
+//! `eigenbench` runs one scenario (file options overridden by CLI flags);
+//! `sweep` regenerates a paper figure (tables on stdout, raw CSV under
+//! `target/bench-results/`); `demo` runs the Fig 9 bank transfer.
+
+use atomic_rmi2::config::{CliArgs, KvConfig};
+use atomic_rmi2::metrics::fmt_throughput;
+use atomic_rmi2::object::{account::ops, Account};
+use atomic_rmi2::workload::sweeps::{self, Scale};
+use atomic_rmi2::workload::{run_eigenbench, FrameworkKind, ALL_FRAMEWORKS};
+use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema};
+use std::sync::Arc;
+
+const USAGE: &str = "\
+atomic-rmi2 — highly parallel pessimistic distributed TM (OptSVA-CF)
+
+USAGE:
+  atomic-rmi2 eigenbench [--config FILE] [--framework F] [--nodes N]
+              [--clients_per_node C] [--arrays_per_node A] [--read_pct P]
+              [--hot_ops H] [--mild_ops M] [--txns_per_client T]
+              [--op_delay_us U] [--irrevocable true] [--seed S]
+  atomic-rmi2 sweep fig10|fig11|fig12|fig13|all [--quick]
+  atomic-rmi2 demo
+  atomic-rmi2 list-frameworks
+";
+
+fn main() {
+    let args = CliArgs::parse(std::env::args().skip(1));
+    match args.positional.first().map(String::as_str) {
+        Some("eigenbench") => eigenbench(&args),
+        Some("sweep") => sweep(&args),
+        Some("demo") => demo(),
+        Some("list-frameworks") => {
+            for k in ALL_FRAMEWORKS {
+                println!("{}", k.label());
+            }
+            println!("{}", FrameworkKind::OptsvaNoAsync.label());
+        }
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn eigenbench(args: &CliArgs) {
+    let file_kv = match args.option("config") {
+        Some(path) => match KvConfig::load(path) {
+            Ok(kv) => kv,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                std::process::exit(1);
+            }
+        },
+        None => KvConfig::default(),
+    };
+    let kv = args.overlay(file_kv);
+    let params = match kv.to_eigenbench() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "running eigenbench: {} on {} nodes × {} clients, {} arrays/node, {} ({} hot + {} mild ops/txn)",
+        params.kind.label(),
+        params.nodes,
+        params.clients_per_node,
+        params.arrays_per_node,
+        params.ratio_label(),
+        params.hot_ops,
+        params.mild_ops,
+    );
+    let r = run_eigenbench(&params);
+    println!("framework          : {}", r.framework);
+    println!("throughput         : {} ops/s", fmt_throughput(r.throughput));
+    println!("committed txns/ops : {}/{}", r.committed_txns, r.committed_ops);
+    println!("aborts             : {} (rate {:.1}%)", r.aborts, r.abort_rate * 100.0);
+    println!("wall time          : {:.1} ms", r.wall.as_millis());
+    println!("txn latency        : {}", r.latency.summary());
+}
+
+fn sweep(args: &CliArgs) {
+    let scale = if args.flag("quick") { Scale::Quick } else { Scale::Full };
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let run_one = |name: &str| {
+        match name {
+            "fig10" => {
+                let (tables, results) = sweeps::fig10(scale);
+                for t in &tables {
+                    println!("{}", t.render());
+                }
+                report_csv("fig10", &results);
+            }
+            "fig11" => {
+                let (tables, results) = sweeps::fig11(scale);
+                for t in &tables {
+                    println!("{}", t.render());
+                }
+                report_csv("fig11", &results);
+            }
+            "fig12" => {
+                let (tables, results) = sweeps::fig12(scale);
+                for t in &tables {
+                    println!("{}", t.render());
+                }
+                report_csv("fig12", &results);
+            }
+            "fig13" => {
+                let (table, results) = sweeps::fig13(scale);
+                println!("{}", table.render());
+                report_csv("fig13", &results);
+            }
+            other => {
+                eprintln!("unknown figure {other:?}; use fig10|fig11|fig12|fig13|all");
+                std::process::exit(2);
+            }
+        };
+    };
+    if which == "all" {
+        for name in ["fig10", "fig11", "fig12", "fig13"] {
+            run_one(name);
+        }
+    } else {
+        run_one(which);
+    }
+}
+
+fn report_csv(name: &str, results: &[atomic_rmi2::workload::EigenbenchResult]) {
+    match sweeps::write_results_csv(name, results) {
+        Ok(path) => eprintln!("raw results: {path}"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}
+
+fn demo() {
+    let cluster = Arc::new(Cluster::new(2, NetworkModel::lan()));
+    let sys = AtomicRmi2::new(Arc::clone(&cluster));
+    sys.host(NodeId(0), "A", Box::new(Account::with_balance(500)));
+    sys.host(NodeId(1), "B", Box::new(Account::with_balance(100)));
+    let mut tx = sys.tx(NodeId(0));
+    let a = tx.accesses("A", Suprema::new(1, 0, 1));
+    let b = tx.updates("B", 1);
+    let r = tx.run(|t| {
+        t.call(a, ops::withdraw(100))?;
+        t.call(b, ops::deposit(100))?;
+        if t.call(a, ops::balance())?.as_int() < 0 {
+            return t.abort();
+        }
+        Ok(())
+    });
+    println!("demo transfer: {r:?}");
+    for name in ["A", "B"] {
+        let oid = cluster.registry.locate(name).unwrap();
+        let bal = sys.with_object(oid, |o| {
+            o.as_any().downcast_ref::<Account>().unwrap().balance()
+        });
+        println!("{name} = {bal}");
+    }
+    sys.shutdown();
+}

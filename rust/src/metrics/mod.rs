@@ -1,0 +1,138 @@
+//! Result tables and CSV emission for the benchmark harness.
+//!
+//! The paper reports throughput (shared-data operations per second) as a
+//! function of client count (Fig 10), node count (Figs 11–12), and an
+//! abort-rate table (Fig 13). [`Table`] renders the same rows/series both
+//! as an aligned console table and as CSV for plotting.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned results table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn row_count(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Render as CSV (headers + rows).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.headers.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Write the CSV next to the bench outputs.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Human-readable ops/s.
+pub fn fmt_throughput(ops_per_s: f64) -> String {
+    if ops_per_s >= 10_000.0 {
+        format!("{:.1}k", ops_per_s / 1000.0)
+    } else {
+        format!("{ops_per_s:.1}")
+    }
+}
+
+/// `a` relative to `b` as the paper quotes it: "+47%" / "-10%".
+pub fn fmt_speedup(a: f64, b: f64) -> String {
+    if b == 0.0 {
+        return "n/a".into();
+    }
+    let pct = (a / b - 1.0) * 100.0;
+    format!("{pct:+.0}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut t = Table::new("demo", &["fw", "tput"]);
+        t.add_row(vec!["atomic-rmi2".into(), "123.4".into()]);
+        t.add_row(vec!["glock".into(), "7.0".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("atomic-rmi2"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("fw,tput"));
+        assert_eq!(t.row_count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.add_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_throughput(25_000.0), "25.0k");
+        assert_eq!(fmt_throughput(99.95), "100.0");
+        assert_eq!(fmt_speedup(1.47, 1.0), "+47%");
+        assert_eq!(fmt_speedup(0.9, 1.0), "-10%");
+        assert_eq!(fmt_speedup(1.0, 0.0), "n/a");
+    }
+}

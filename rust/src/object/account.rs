@@ -1,0 +1,156 @@
+//! Bank account — the paper's running example (Fig 7).
+//!
+//! ```java
+//! interface Account extends Remote {
+//!   @Access(Mode.READ)   int balance();
+//!   @Access(Mode.UPDATE) void deposit(int value);
+//!   @Access(Mode.UPDATE) void withdraw(int value);
+//!   @Access(Mode.WRITE)  void reset();
+//! }
+//! ```
+
+use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+
+/// A bank account with the paper's exact interface.
+#[derive(Debug, Clone)]
+pub struct Account {
+    balance: i64,
+}
+
+const INTERFACE: &[MethodSpec] = &[
+    MethodSpec { name: "balance", mode: Mode::Read },
+    MethodSpec { name: "deposit", mode: Mode::Update },
+    MethodSpec { name: "withdraw", mode: Mode::Update },
+    MethodSpec { name: "reset", mode: Mode::Write },
+];
+
+impl Account {
+    pub fn with_balance(balance: i64) -> Self {
+        Account { balance }
+    }
+
+    pub fn balance(&self) -> i64 {
+        self.balance
+    }
+}
+
+impl SharedObject for Account {
+    fn type_name(&self) -> &'static str {
+        "Account"
+    }
+
+    fn interface(&self) -> &'static [MethodSpec] {
+        INTERFACE
+    }
+
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        match call.method {
+            "balance" => Ok(Value::Int(self.balance)),
+            "deposit" => {
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "deposit".into(),
+                    reason: "missing amount".into(),
+                })?;
+                self.balance += v.as_int();
+                Ok(Value::Unit)
+            }
+            "withdraw" => {
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "withdraw".into(),
+                    reason: "missing amount".into(),
+                })?;
+                // NOTE: allowed to go negative; the paper's example transaction
+                // checks the balance afterwards and aborts manually (Fig 9).
+                self.balance -= v.as_int();
+                Ok(Value::Unit)
+            }
+            "reset" => {
+                // WRITE: sets state without reading it.
+                self.balance = 0;
+                Ok(Value::Unit)
+            }
+            m => Err(ObjectError::NoSuchMethod(m.to_string())),
+        }
+    }
+
+    fn snapshot(&self) -> Box<dyn SharedObject> {
+        Box::new(self.clone())
+    }
+
+    fn restore(&mut self, from: &dyn SharedObject) {
+        let src = from
+            .as_any()
+            .downcast_ref::<Account>()
+            .expect("restore: type mismatch");
+        self.balance = src.balance;
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn state_size(&self) -> usize {
+        8
+    }
+}
+
+/// Convenience constructors for the account interface.
+pub mod ops {
+    use super::super::OpCall;
+
+    pub fn balance() -> OpCall {
+        OpCall::nullary("balance")
+    }
+    pub fn deposit(amount: i64) -> OpCall {
+        OpCall::unary("deposit", amount)
+    }
+    pub fn withdraw(amount: i64) -> OpCall {
+        OpCall::unary("withdraw", amount)
+    }
+    pub fn reset() -> OpCall {
+        OpCall::nullary("reset")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deposit_withdraw_balance() {
+        let mut a = Account::with_balance(100);
+        a.invoke(&ops::deposit(50)).unwrap();
+        a.invoke(&ops::withdraw(30)).unwrap();
+        assert_eq!(a.invoke(&ops::balance()).unwrap().as_int(), 120);
+    }
+
+    #[test]
+    fn withdraw_may_go_negative_like_the_paper_example() {
+        let mut a = Account::with_balance(10);
+        a.invoke(&ops::withdraw(100)).unwrap();
+        assert_eq!(a.balance(), -90);
+    }
+
+    #[test]
+    fn reset_is_a_pure_write() {
+        let mut a = Account::with_balance(77);
+        a.invoke(&ops::reset()).unwrap();
+        assert_eq!(a.balance(), 0);
+    }
+
+    #[test]
+    fn interface_modes_match_fig7() {
+        let a = Account::with_balance(0);
+        let get = |n: &str| {
+            a.interface()
+                .iter()
+                .find(|m| m.name == n)
+                .unwrap()
+                .mode
+        };
+        assert_eq!(get("balance"), Mode::Read);
+        assert_eq!(get("deposit"), Mode::Update);
+        assert_eq!(get("withdraw"), Mode::Update);
+        assert_eq!(get("reset"), Mode::Write);
+    }
+}

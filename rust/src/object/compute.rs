@@ -1,0 +1,237 @@
+//! Compute-delegating shared object — the CF model's *raison d'être*.
+//!
+//! "A unique feature of CF is that it allows to delegate computation to
+//! remote hosts … shared resources can act as both shared memory and web
+//! services." (paper §1). `ComputeObject` holds a dense f32 state vector;
+//! its `mix` (update) and `digest` (read) operations run a real numeric
+//! kernel **on the hosting node** — in production via the AOT-compiled
+//! Pallas/XLA artifact loaded by `runtime::XlaBackend`, in tests via the
+//! pure-rust [`SpinBackend`] reference implementation.
+
+use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+use std::sync::Arc;
+
+/// The kernel contract. Implemented by `runtime::XlaBackend` (PJRT) and by
+/// [`SpinBackend`] (pure rust reference used in unit tests and when
+/// artifacts are not built).
+pub trait ComputeBackend: Send + Sync {
+    /// `state' = mixR(state, params)` — R rounds of `tanh(state @ W + p)`.
+    fn mix(&self, state: &[f32], params: &[f32]) -> Result<Vec<f32>, String>;
+    /// Read-only digest of the state (sum of squares reduction).
+    fn digest(&self, state: &[f32]) -> Result<f32, String>;
+    /// State dimensionality the backend was compiled for.
+    fn dim(&self) -> usize;
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust reference backend: the same computation `ref.py` specifies,
+/// with the deterministic mixing matrix `W[i][j] = sin(i*D + j)/D`.
+pub struct SpinBackend {
+    dim: usize,
+    w: Vec<f32>, // row-major D×D
+    rounds: usize,
+}
+
+impl SpinBackend {
+    pub fn new(dim: usize, rounds: usize) -> Self {
+        let mut w = vec![0f32; dim * dim];
+        for i in 0..dim {
+            for j in 0..dim {
+                w[i * dim + j] = ((i * dim + j) as f32).sin() / dim as f32;
+            }
+        }
+        SpinBackend { dim, w, rounds }
+    }
+}
+
+impl ComputeBackend for SpinBackend {
+    fn mix(&self, state: &[f32], params: &[f32]) -> Result<Vec<f32>, String> {
+        let d = self.dim;
+        if state.len() != d || params.len() != d {
+            return Err(format!(
+                "mix: want state/params of dim {d}, got {}/{}",
+                state.len(),
+                params.len()
+            ));
+        }
+        let mut s = state.to_vec();
+        let mut next = vec![0f32; d];
+        for _ in 0..self.rounds {
+            for j in 0..d {
+                let mut acc = 0f32;
+                for i in 0..d {
+                    acc += s[i] * self.w[i * d + j];
+                }
+                next[j] = (acc + params[j]).tanh();
+            }
+            std::mem::swap(&mut s, &mut next);
+        }
+        Ok(s)
+    }
+
+    fn digest(&self, state: &[f32]) -> Result<f32, String> {
+        Ok(state.iter().map(|x| x * x).sum())
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn name(&self) -> &'static str {
+        "spin"
+    }
+}
+
+/// Shared object whose operations delegate numeric work to the hosting
+/// node's kernel backend.
+pub struct ComputeObject {
+    state: Vec<f32>,
+    backend: Arc<dyn ComputeBackend>,
+}
+
+const INTERFACE: &[MethodSpec] = &[
+    MethodSpec { name: "digest", mode: Mode::Read },
+    MethodSpec { name: "dim", mode: Mode::Read },
+    MethodSpec { name: "load", mode: Mode::Write },
+    MethodSpec { name: "mix", mode: Mode::Update },
+];
+
+impl ComputeObject {
+    pub fn new(backend: Arc<dyn ComputeBackend>) -> Self {
+        let state = vec![0.5f32; backend.dim()];
+        ComputeObject { state, backend }
+    }
+
+    pub fn with_state(backend: Arc<dyn ComputeBackend>, state: Vec<f32>) -> Self {
+        assert_eq!(state.len(), backend.dim());
+        ComputeObject { state, backend }
+    }
+
+    pub fn state(&self) -> &[f32] {
+        &self.state
+    }
+}
+
+impl SharedObject for ComputeObject {
+    fn type_name(&self) -> &'static str {
+        "Compute"
+    }
+
+    fn interface(&self) -> &'static [MethodSpec] {
+        INTERFACE
+    }
+
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        match call.method {
+            "digest" => {
+                let d = self
+                    .backend
+                    .digest(&self.state)
+                    .map_err(ObjectError::App)?;
+                Ok(Value::Float(d as f64))
+            }
+            "dim" => Ok(Value::Int(self.backend.dim() as i64)),
+            "load" => {
+                // WRITE: replaces the state wholesale, never reads it.
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "load".into(),
+                    reason: "missing state vector".into(),
+                })?;
+                let s = v.as_floats();
+                if s.len() != self.backend.dim() {
+                    return Err(ObjectError::BadArgs {
+                        method: "load".into(),
+                        reason: format!(
+                            "dim mismatch: want {}, got {}",
+                            self.backend.dim(),
+                            s.len()
+                        ),
+                    });
+                }
+                self.state = s.to_vec();
+                Ok(Value::Unit)
+            }
+            "mix" => {
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "mix".into(),
+                    reason: "missing params vector".into(),
+                })?;
+                self.state = self
+                    .backend
+                    .mix(&self.state, v.as_floats())
+                    .map_err(ObjectError::App)?;
+                Ok(Value::Unit)
+            }
+            m => Err(ObjectError::NoSuchMethod(m.to_string())),
+        }
+    }
+
+    fn snapshot(&self) -> Box<dyn SharedObject> {
+        Box::new(ComputeObject {
+            state: self.state.clone(),
+            backend: Arc::clone(&self.backend),
+        })
+    }
+
+    fn restore(&mut self, from: &dyn SharedObject) {
+        let src = from
+            .as_any()
+            .downcast_ref::<ComputeObject>()
+            .expect("restore: type mismatch");
+        self.state = src.state.clone();
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn state_size(&self) -> usize {
+        4 * self.state.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj() -> ComputeObject {
+        ComputeObject::new(Arc::new(SpinBackend::new(8, 2)))
+    }
+
+    #[test]
+    fn mix_changes_state_deterministically() {
+        let mut a = obj();
+        let mut b = obj();
+        let params = Value::Floats(vec![0.1; 8]);
+        a.invoke(&OpCall::new("mix", vec![params.clone()])).unwrap();
+        b.invoke(&OpCall::new("mix", vec![params])).unwrap();
+        assert_eq!(a.state(), b.state());
+        assert_ne!(a.state(), &[0.5f32; 8]);
+    }
+
+    #[test]
+    fn digest_is_sum_of_squares() {
+        let mut o = ComputeObject::with_state(
+            Arc::new(SpinBackend::new(4, 1)),
+            vec![1.0, 2.0, 0.0, -1.0],
+        );
+        let d = o.invoke(&OpCall::nullary("digest")).unwrap().as_float();
+        assert!((d - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn load_rejects_dim_mismatch() {
+        let mut o = obj();
+        let r = o.invoke(&OpCall::unary("load", vec![0.0f32; 3]));
+        assert!(matches!(r, Err(ObjectError::BadArgs { .. })));
+    }
+
+    #[test]
+    fn tanh_keeps_state_bounded() {
+        let mut o = obj();
+        for _ in 0..10 {
+            o.invoke(&OpCall::unary("mix", vec![0.3f32; 8])).unwrap();
+        }
+        assert!(o.state().iter().all(|x| x.abs() <= 1.0));
+    }
+}

@@ -1,0 +1,95 @@
+//! Shared counter — a minimal complex object with all three op modes.
+
+use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+
+/// Monotonic-ish counter: `get` (read), `zero` (write), `inc` (update).
+#[derive(Debug, Clone, Default)]
+pub struct Counter {
+    count: i64,
+}
+
+const INTERFACE: &[MethodSpec] = &[
+    MethodSpec { name: "get", mode: Mode::Read },
+    MethodSpec { name: "zero", mode: Mode::Write },
+    MethodSpec { name: "inc", mode: Mode::Update },
+];
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter { count: 0 }
+    }
+
+    pub fn starting_at(count: i64) -> Self {
+        Counter { count }
+    }
+
+    pub fn count(&self) -> i64 {
+        self.count
+    }
+}
+
+impl SharedObject for Counter {
+    fn type_name(&self) -> &'static str {
+        "Counter"
+    }
+
+    fn interface(&self) -> &'static [MethodSpec] {
+        INTERFACE
+    }
+
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        match call.method {
+            "get" => Ok(Value::Int(self.count)),
+            "zero" => {
+                self.count = 0;
+                Ok(Value::Unit)
+            }
+            "inc" => {
+                let by = call.args.first().map(|v| v.as_int()).unwrap_or(1);
+                self.count += by;
+                Ok(Value::Int(self.count))
+            }
+            m => Err(ObjectError::NoSuchMethod(m.to_string())),
+        }
+    }
+
+    fn snapshot(&self) -> Box<dyn SharedObject> {
+        Box::new(self.clone())
+    }
+
+    fn restore(&mut self, from: &dyn SharedObject) {
+        let src = from
+            .as_any()
+            .downcast_ref::<Counter>()
+            .expect("restore: type mismatch");
+        self.count = src.count;
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn state_size(&self) -> usize {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_default_and_explicit() {
+        let mut c = Counter::new();
+        assert_eq!(c.invoke(&OpCall::nullary("inc")).unwrap().as_int(), 1);
+        assert_eq!(c.invoke(&OpCall::unary("inc", 10i64)).unwrap().as_int(), 11);
+        assert_eq!(c.invoke(&OpCall::nullary("get")).unwrap().as_int(), 11);
+    }
+
+    #[test]
+    fn zero_resets() {
+        let mut c = Counter::starting_at(5);
+        c.invoke(&OpCall::nullary("zero")).unwrap();
+        assert_eq!(c.count(), 0);
+    }
+}

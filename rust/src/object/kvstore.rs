@@ -1,0 +1,198 @@
+//! A key-value store object: composite state, field-granular methods.
+//!
+//! This is the motivating case for OptSVA-CF over OptSVA (paper §1): a
+//! write may modify field `a` while a subsequent read accesses field `b`,
+//! so read-after-write is *not* local in the complex-object model and
+//! requires synchronization (§2.9).
+
+use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+use std::collections::BTreeMap;
+
+/// String-keyed map with read/write/update methods at key granularity.
+#[derive(Debug, Clone, Default)]
+pub struct KvStore {
+    map: BTreeMap<String, i64>,
+}
+
+const INTERFACE: &[MethodSpec] = &[
+    MethodSpec { name: "get", mode: Mode::Read },
+    MethodSpec { name: "contains", mode: Mode::Read },
+    MethodSpec { name: "size", mode: Mode::Read },
+    MethodSpec { name: "put", mode: Mode::Write },
+    MethodSpec { name: "clear", mode: Mode::Write },
+    MethodSpec { name: "remove", mode: Mode::Update },
+    MethodSpec { name: "merge_add", mode: Mode::Update },
+];
+
+impl KvStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_pairs(pairs: &[(&str, i64)]) -> Self {
+        KvStore {
+            map: pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Direct (non-transactional) lookup — tests and diagnostics.
+    pub fn peek(&self, key: &str) -> Option<i64> {
+        self.map.get(key).copied()
+    }
+
+    fn key_arg(call: &OpCall) -> Result<&str, ObjectError> {
+        match call.args.first() {
+            Some(Value::Str(s)) => Ok(s),
+            _ => Err(ObjectError::BadArgs {
+                method: call.method.into(),
+                reason: "first arg must be a string key".into(),
+            }),
+        }
+    }
+}
+
+impl SharedObject for KvStore {
+    fn type_name(&self) -> &'static str {
+        "KvStore"
+    }
+
+    fn interface(&self) -> &'static [MethodSpec] {
+        INTERFACE
+    }
+
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        match call.method {
+            "get" => {
+                let k = Self::key_arg(call)?;
+                Ok(self
+                    .map
+                    .get(k)
+                    .map(|v| Value::Int(*v))
+                    .unwrap_or(Value::Unit))
+            }
+            "contains" => {
+                let k = Self::key_arg(call)?;
+                Ok(Value::Bool(self.map.contains_key(k)))
+            }
+            "size" => Ok(Value::Int(self.map.len() as i64)),
+            "put" => {
+                // WRITE: overwrites blindly, never observes prior state.
+                let k = Self::key_arg(call)?.to_string();
+                let v = call
+                    .args
+                    .get(1)
+                    .ok_or_else(|| ObjectError::BadArgs {
+                        method: "put".into(),
+                        reason: "missing value".into(),
+                    })?
+                    .as_int();
+                self.map.insert(k, v);
+                Ok(Value::Unit)
+            }
+            "clear" => {
+                self.map.clear();
+                Ok(Value::Unit)
+            }
+            "remove" => {
+                // UPDATE: returns the removed value (reads state).
+                let k = Self::key_arg(call)?;
+                Ok(self
+                    .map
+                    .remove(k)
+                    .map(Value::Int)
+                    .unwrap_or(Value::Unit))
+            }
+            "merge_add" => {
+                let k = Self::key_arg(call)?.to_string();
+                let v = call
+                    .args
+                    .get(1)
+                    .ok_or_else(|| ObjectError::BadArgs {
+                        method: "merge_add".into(),
+                        reason: "missing delta".into(),
+                    })?
+                    .as_int();
+                let slot = self.map.entry(k).or_insert(0);
+                *slot += v;
+                Ok(Value::Int(*slot))
+            }
+            m => Err(ObjectError::NoSuchMethod(m.to_string())),
+        }
+    }
+
+    fn snapshot(&self) -> Box<dyn SharedObject> {
+        Box::new(self.clone())
+    }
+
+    fn restore(&mut self, from: &dyn SharedObject) {
+        let src = from
+            .as_any()
+            .downcast_ref::<KvStore>()
+            .expect("restore: type mismatch");
+        self.map = src.map.clone();
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn state_size(&self) -> usize {
+        self.map.keys().map(|k| k.len() + 8 + 8).sum::<usize>() + 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn put(k: &str, v: i64) -> OpCall {
+        OpCall::new("put", vec![Value::from(k), Value::from(v)])
+    }
+
+    #[test]
+    fn put_get_distinct_fields() {
+        let mut kv = KvStore::new();
+        kv.invoke(&put("a", 1)).unwrap();
+        kv.invoke(&put("b", 2)).unwrap();
+        // read of "b" is NOT local to the write of "a" — the scenario from §2.9
+        assert_eq!(kv.invoke(&OpCall::unary("get", "b")).unwrap().as_int(), 2);
+        assert_eq!(kv.invoke(&OpCall::nullary("size")).unwrap().as_int(), 2);
+    }
+
+    #[test]
+    fn get_missing_returns_unit() {
+        let mut kv = KvStore::new();
+        assert_eq!(kv.invoke(&OpCall::unary("get", "x")).unwrap(), Value::Unit);
+    }
+
+    #[test]
+    fn remove_returns_old_value() {
+        let mut kv = KvStore::from_pairs(&[("k", 7)]);
+        assert_eq!(kv.invoke(&OpCall::unary("remove", "k")).unwrap().as_int(), 7);
+        assert!(kv.is_empty());
+    }
+
+    #[test]
+    fn merge_add_accumulates() {
+        let mut kv = KvStore::new();
+        let call = OpCall::new("merge_add", vec![Value::from("n"), Value::from(3i64)]);
+        assert_eq!(kv.invoke(&call).unwrap().as_int(), 3);
+        assert_eq!(kv.invoke(&call).unwrap().as_int(), 6);
+    }
+
+    #[test]
+    fn state_size_grows() {
+        let mut kv = KvStore::new();
+        let s0 = kv.state_size();
+        kv.invoke(&put("key", 1)).unwrap();
+        assert!(kv.state_size() > s0);
+    }
+}

@@ -1,0 +1,170 @@
+//! The complex shared-object model (paper §2.5).
+//!
+//! Shared objects are black boxes with arbitrary interfaces. Every method
+//! is annotated with a [`Mode`] — READ, WRITE, or UPDATE — mirroring the
+//! `@Access(Mode.…)` annotations of Atomic RMI 2's Java interfaces
+//! (paper Fig 7):
+//!
+//!   * **read**   — may read state and return a value, never modifies it;
+//!   * **write**  — may modify state, never reads it (executable against a
+//!                  log buffer with *no* prior synchronization, §2.6);
+//!   * **update** — may both read and modify state.
+//!
+//! Objects provide `snapshot`/`restore` so the concurrency-control layer
+//! can build copy buffers and abort checkpoints without knowing the
+//! concrete type.
+
+pub mod account;
+pub mod compute;
+pub mod counter;
+pub mod kvstore;
+pub mod queue;
+pub mod register;
+pub mod value;
+
+pub use account::Account;
+pub use compute::{ComputeBackend, ComputeObject, SpinBackend};
+pub use counter::Counter;
+pub use kvstore::KvStore;
+pub use queue::QueueObject;
+pub use register::RegisterObject;
+pub use value::Value;
+
+use std::fmt;
+
+/// Operation classification (paper §2.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Read,
+    Write,
+    Update,
+}
+
+impl fmt::Display for Mode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Mode::Read => write!(f, "read"),
+            Mode::Write => write!(f, "write"),
+            Mode::Update => write!(f, "update"),
+        }
+    }
+}
+
+/// A method invocation: name + arguments. The mode is looked up from the
+/// object's interface (it is a property of the method, not of the call).
+#[derive(Debug, Clone)]
+pub struct OpCall {
+    pub method: &'static str,
+    pub args: Vec<Value>,
+}
+
+impl OpCall {
+    pub fn new(method: &'static str, args: Vec<Value>) -> Self {
+        OpCall { method, args }
+    }
+
+    pub fn nullary(method: &'static str) -> Self {
+        OpCall { method, args: vec![] }
+    }
+
+    pub fn unary(method: &'static str, arg: impl Into<Value>) -> Self {
+        OpCall { method, args: vec![arg.into()] }
+    }
+
+    /// Approximate serialized size (for network cost accounting).
+    pub fn wire_size(&self) -> usize {
+        8 + self.method.len() + self.args.iter().map(Value::wire_size).sum::<usize>()
+    }
+}
+
+/// Errors raised by object method execution.
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum ObjectError {
+    #[error("no such method: {0}")]
+    NoSuchMethod(String),
+    #[error("bad arguments for {method}: {reason}")]
+    BadArgs { method: String, reason: String },
+    #[error("object crashed (crash-stop)")]
+    Crashed,
+    #[error("application error: {0}")]
+    App(String),
+}
+
+/// A method descriptor in an object's interface.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodSpec {
+    pub name: &'static str,
+    pub mode: Mode,
+}
+
+/// The shared-object trait: what a "remote object" must implement to be
+/// hosted by a node and driven by any of the concurrency-control layers.
+pub trait SharedObject: Send {
+    /// Object type name, for diagnostics.
+    fn type_name(&self) -> &'static str;
+
+    /// The object's interface: every callable method with its mode.
+    fn interface(&self) -> &'static [MethodSpec];
+
+    /// Execute a method. The concurrency-control layer guarantees
+    /// exclusive access during the call.
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError>;
+
+    /// Deep copy of the object (copy buffers, checkpoints).
+    fn snapshot(&self) -> Box<dyn SharedObject>;
+
+    /// Overwrite this object's state from a snapshot of the same type
+    /// (abort restore). Implementations may assume matching types.
+    fn restore(&mut self, from: &dyn SharedObject);
+
+    /// Downcast support for `restore` implementations.
+    fn as_any(&self) -> &dyn std::any::Any;
+
+    /// Approximate serialized state size in bytes (network cost of state
+    /// migration in the DF baseline and of copy-buffer creation).
+    fn state_size(&self) -> usize;
+}
+
+/// Look up the [`Mode`] of a method in an object's interface.
+pub fn mode_of(obj: &dyn SharedObject, method: &str) -> Result<Mode, ObjectError> {
+    obj.interface()
+        .iter()
+        .find(|m| m.name == method)
+        .map(|m| m.mode)
+        .ok_or_else(|| ObjectError::NoSuchMethod(method.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_lookup_works() {
+        let acc = Account::with_balance(10);
+        assert_eq!(mode_of(&acc, "balance").unwrap(), Mode::Read);
+        assert_eq!(mode_of(&acc, "deposit").unwrap(), Mode::Update);
+        assert_eq!(mode_of(&acc, "reset").unwrap(), Mode::Write);
+        assert!(matches!(
+            mode_of(&acc, "nope"),
+            Err(ObjectError::NoSuchMethod(_))
+        ));
+    }
+
+    #[test]
+    fn opcall_constructors() {
+        let c = OpCall::unary("deposit", 5i64);
+        assert_eq!(c.method, "deposit");
+        assert_eq!(c.args, vec![Value::Int(5)]);
+        assert!(c.wire_size() > OpCall::nullary("x").wire_size());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_via_trait_objects() {
+        let mut a = Account::with_balance(100);
+        let snap = a.snapshot();
+        a.invoke(&OpCall::unary("deposit", 50i64)).unwrap();
+        assert_eq!(a.invoke(&OpCall::nullary("balance")).unwrap().as_int(), 150);
+        a.restore(snap.as_ref());
+        assert_eq!(a.invoke(&OpCall::nullary("balance")).unwrap().as_int(), 100);
+    }
+}

@@ -1,0 +1,118 @@
+//! FIFO queue object — classic TM example (push/pop, paper §1).
+
+use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+use std::collections::VecDeque;
+
+/// Bounded-ish FIFO queue of ints.
+#[derive(Debug, Clone, Default)]
+pub struct QueueObject {
+    items: VecDeque<i64>,
+}
+
+const INTERFACE: &[MethodSpec] = &[
+    MethodSpec { name: "peek", mode: Mode::Read },
+    MethodSpec { name: "len", mode: Mode::Read },
+    MethodSpec { name: "push", mode: Mode::Write },
+    MethodSpec { name: "pop", mode: Mode::Update },
+];
+
+impl QueueObject {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_items(items: &[i64]) -> Self {
+        QueueObject { items: items.iter().copied().collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+impl SharedObject for QueueObject {
+    fn type_name(&self) -> &'static str {
+        "Queue"
+    }
+
+    fn interface(&self) -> &'static [MethodSpec] {
+        INTERFACE
+    }
+
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        match call.method {
+            "peek" => Ok(self
+                .items
+                .front()
+                .map(|v| Value::Int(*v))
+                .unwrap_or(Value::Unit)),
+            "len" => Ok(Value::Int(self.items.len() as i64)),
+            "push" => {
+                // WRITE: appends without observing existing state; this is
+                // what makes `push` executable on a log buffer (§2.6).
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "push".into(),
+                    reason: "missing item".into(),
+                })?;
+                self.items.push_back(v.as_int());
+                Ok(Value::Unit)
+            }
+            "pop" => Ok(self
+                .items
+                .pop_front()
+                .map(Value::Int)
+                .unwrap_or(Value::Unit)),
+            m => Err(ObjectError::NoSuchMethod(m.to_string())),
+        }
+    }
+
+    fn snapshot(&self) -> Box<dyn SharedObject> {
+        Box::new(self.clone())
+    }
+
+    fn restore(&mut self, from: &dyn SharedObject) {
+        let src = from
+            .as_any()
+            .downcast_ref::<QueueObject>()
+            .expect("restore: type mismatch");
+        self.items = src.items.clone();
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn state_size(&self) -> usize {
+        8 * self.items.len() + 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = QueueObject::new();
+        q.invoke(&OpCall::unary("push", 1i64)).unwrap();
+        q.invoke(&OpCall::unary("push", 2i64)).unwrap();
+        assert_eq!(q.invoke(&OpCall::nullary("peek")).unwrap().as_int(), 1);
+        assert_eq!(q.invoke(&OpCall::nullary("pop")).unwrap().as_int(), 1);
+        assert_eq!(q.invoke(&OpCall::nullary("pop")).unwrap().as_int(), 2);
+        assert_eq!(q.invoke(&OpCall::nullary("pop")).unwrap(), Value::Unit);
+    }
+
+    #[test]
+    fn snapshot_isolation() {
+        let mut q = QueueObject::from_items(&[5]);
+        let snap = q.snapshot();
+        q.invoke(&OpCall::nullary("pop")).unwrap();
+        assert!(q.is_empty());
+        q.restore(snap.as_ref());
+        assert_eq!(q.len(), 1);
+    }
+}

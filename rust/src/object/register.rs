@@ -1,0 +1,147 @@
+//! Reference cell — the Eigenbench shared object.
+//!
+//! "Each object within any of the three arrays is a reference cell, i.e.,
+//! an object that holds a single value, that can be either read or written
+//! to." (paper §4.2). We also expose the optional per-operation synthetic
+//! delay that models the paper's ~3 ms operation bodies.
+
+use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+use std::time::Duration;
+
+/// A single-value reference cell with configurable operation latency.
+#[derive(Debug, Clone)]
+pub struct RegisterObject {
+    value: i64,
+    /// Simulated operation body duration; models the "complex computation"
+    /// each Eigenbench operation performs (~3 ms in the paper).
+    op_delay: Duration,
+}
+
+const INTERFACE: &[MethodSpec] = &[
+    MethodSpec { name: "get", mode: Mode::Read },
+    MethodSpec { name: "set", mode: Mode::Write },
+    // read-modify-write, exercised by update-classified workload ops
+    MethodSpec { name: "add", mode: Mode::Update },
+];
+
+impl RegisterObject {
+    pub fn new(value: i64) -> Self {
+        RegisterObject { value, op_delay: Duration::ZERO }
+    }
+
+    /// Cell whose every operation takes `delay` to execute (op body cost).
+    pub fn with_delay(value: i64, delay: Duration) -> Self {
+        RegisterObject { value, op_delay: delay }
+    }
+
+    pub fn value(&self) -> i64 {
+        self.value
+    }
+
+    fn burn(&self) {
+        if !self.op_delay.is_zero() {
+            // Sleep, not spin: on the oversubscribed evaluation box the
+            // operation models remote/complex work, not local CPU burn.
+            std::thread::sleep(self.op_delay);
+        }
+    }
+}
+
+impl SharedObject for RegisterObject {
+    fn type_name(&self) -> &'static str {
+        "Register"
+    }
+
+    fn interface(&self) -> &'static [MethodSpec] {
+        INTERFACE
+    }
+
+    fn invoke(&mut self, call: &OpCall) -> Result<Value, ObjectError> {
+        match call.method {
+            "get" => {
+                self.burn();
+                Ok(Value::Int(self.value))
+            }
+            "set" => {
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "set".into(),
+                    reason: "missing value".into(),
+                })?;
+                self.burn();
+                self.value = v.as_int();
+                Ok(Value::Unit)
+            }
+            "add" => {
+                let v = call.args.first().ok_or_else(|| ObjectError::BadArgs {
+                    method: "add".into(),
+                    reason: "missing delta".into(),
+                })?;
+                self.burn();
+                self.value += v.as_int();
+                Ok(Value::Int(self.value))
+            }
+            m => Err(ObjectError::NoSuchMethod(m.to_string())),
+        }
+    }
+
+    fn snapshot(&self) -> Box<dyn SharedObject> {
+        Box::new(self.clone())
+    }
+
+    fn restore(&mut self, from: &dyn SharedObject) {
+        let src = from
+            .as_any()
+            .downcast_ref::<RegisterObject>()
+            .expect("restore: type mismatch");
+        self.value = src.value;
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn state_size(&self) -> usize {
+        8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_add() {
+        let mut r = RegisterObject::new(10);
+        assert_eq!(r.invoke(&OpCall::nullary("get")).unwrap().as_int(), 10);
+        r.invoke(&OpCall::unary("set", 42i64)).unwrap();
+        assert_eq!(r.value(), 42);
+        assert_eq!(r.invoke(&OpCall::unary("add", 8i64)).unwrap().as_int(), 50);
+    }
+
+    #[test]
+    fn missing_args_rejected() {
+        let mut r = RegisterObject::new(0);
+        assert!(matches!(
+            r.invoke(&OpCall::nullary("set")),
+            Err(ObjectError::BadArgs { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_method_rejected() {
+        let mut r = RegisterObject::new(0);
+        assert!(matches!(
+            r.invoke(&OpCall::nullary("frobnicate")),
+            Err(ObjectError::NoSuchMethod(_))
+        ));
+    }
+
+    #[test]
+    fn snapshot_then_restore() {
+        let mut r = RegisterObject::new(1);
+        let snap = r.snapshot();
+        r.invoke(&OpCall::unary("set", 99i64)).unwrap();
+        r.restore(snap.as_ref());
+        assert_eq!(r.value(), 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Dynamic values passed to and returned from shared-object operations.
+//!
+//! The CF model treats objects as black boxes with arbitrary interfaces
+//! (paper §2.5); method arguments and results therefore need a dynamic
+//! representation analogous to Java RMI's serialized parameters.
+
+use std::fmt;
+
+/// A dynamically typed argument/result value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Unit,
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    /// Dense float payload, used by `ComputeObject` operations.
+    Floats(Vec<f32>),
+    /// Heterogeneous list.
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> i64 {
+        match self {
+            Value::Int(v) => *v,
+            Value::Bool(b) => *b as i64,
+            other => panic!("expected Int, got {other:?}"),
+        }
+    }
+
+    pub fn as_float(&self) -> f64 {
+        match self {
+            Value::Float(v) => *v,
+            Value::Int(v) => *v as f64,
+            other => panic!("expected Float, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> bool {
+        match self {
+            Value::Bool(b) => *b,
+            other => panic!("expected Bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            Value::Str(s) => s,
+            other => panic!("expected Str, got {other:?}"),
+        }
+    }
+
+    pub fn as_floats(&self) -> &[f32] {
+        match self {
+            Value::Floats(v) => v,
+            other => panic!("expected Floats, got {other:?}"),
+        }
+    }
+
+    /// Approximate serialized size in bytes: used by the network model to
+    /// charge transmission cost for arguments, results, and state copies.
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Value::Unit => 1,
+            Value::Bool(_) => 2,
+            Value::Int(_) => 9,
+            Value::Float(_) => 9,
+            Value::Str(s) => 5 + s.len(),
+            Value::Floats(v) => 5 + 4 * v.len(),
+            Value::List(v) => 5 + v.iter().map(Value::wire_size).sum::<usize>(),
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Unit => write!(f, "()"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Floats(v) => write!(f, "f32[{}]", v.len()),
+            Value::List(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Int(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Float(v)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<()> for Value {
+    fn from(_: ()) -> Self {
+        Value::Unit
+    }
+}
+impl From<Vec<f32>> for Value {
+    fn from(v: Vec<f32>) -> Self {
+        Value::Floats(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors_roundtrip() {
+        assert_eq!(Value::from(5i64).as_int(), 5);
+        assert_eq!(Value::from(2.5f64).as_float(), 2.5);
+        assert!(Value::from(true).as_bool());
+        assert_eq!(Value::from("hi").as_str(), "hi");
+        assert_eq!(Value::from(vec![1.0f32]).as_floats(), &[1.0f32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected Int")]
+    fn wrong_accessor_panics() {
+        Value::Str("x".into()).as_int();
+    }
+
+    #[test]
+    fn wire_size_scales_with_payload() {
+        assert!(Value::Floats(vec![0.0; 100]).wire_size() > Value::Int(1).wire_size());
+        assert_eq!(Value::Str("abc".into()).wire_size(), 8);
+        let l = Value::List(vec![Value::Int(1), Value::Unit]);
+        assert_eq!(l.wire_size(), 5 + 9 + 1);
+    }
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(Value::Int(3).to_string(), "3");
+        assert_eq!(
+            Value::List(vec![Value::Int(1), Value::Bool(false)]).to_string(),
+            "[1, false]"
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! **OptSVA-CF / Atomic RMI 2** — the paper's contribution (§2, §3).
+//!
+//! A pessimistic, abort-free (unless manually aborted) DTM for the
+//! control-flow model, built from:
+//!   * supremum versioning (`versioning`) for ordering,
+//!   * copy/log buffers (`buffers`) for invisible local operations,
+//!   * a per-node executor (`executor`) for asynchronous buffering and
+//!     asynchronous last-write release,
+//!   * per-(transaction, object) server-side proxies (`proxy`) that inject
+//!     the concurrency control around method dispatch — the rust analogue
+//!     of Atomic RMI 2's reflection proxies (§3.1).
+//!
+//! Layout mirrors the paper's architecture diagram (Fig 6): client-side
+//! `Transaction` objects drive server-side proxies; buffers live with the
+//! objects at their home nodes.
+
+pub mod proxy;
+pub mod transaction;
+
+pub use proxy::{Proxy, ProxyConfig};
+pub use transaction::{Transaction, TxBuilder};
+
+use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::cluster::{Cluster, NodeId, Oid};
+use crate::executor::Executor;
+use crate::object::SharedObject;
+use crate::versioning::ObjectCc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// A hosted shared object and its concurrency-control block.
+pub struct ObjectSlot {
+    pub oid: Oid,
+    pub cc: ObjectCc,
+    /// The object's interface, cached at hosting time so method-mode
+    /// lookups never contend on the object lock (operation bodies can
+    /// hold it for milliseconds).
+    pub interface: &'static [crate::object::MethodSpec],
+    pub object: Mutex<Box<dyn SharedObject>>,
+    /// Crash-stop flag (§3.4): once set, every access raises
+    /// `TxError::ObjectCrashed`.
+    pub crashed: AtomicBool,
+    /// Live proxies linked to this object (weak: a proxy dies with its
+    /// transaction). Scanned by the failure detector (§3.4).
+    pub(crate) active: Mutex<Vec<std::sync::Weak<Proxy>>>,
+}
+
+impl ObjectSlot {
+    fn new(oid: Oid, object: Box<dyn SharedObject>) -> Arc<Self> {
+        Arc::new(ObjectSlot {
+            oid,
+            cc: ObjectCc::new(),
+            interface: object.interface(),
+            object: Mutex::new(object),
+            crashed: AtomicBool::new(false),
+            active: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn check_alive(&self) -> Result<(), TxError> {
+        if self.crashed.load(Ordering::Acquire) {
+            Err(TxError::ObjectCrashed(self.oid))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+struct NodeState {
+    slots: RwLock<Vec<Arc<ObjectSlot>>>,
+    executor: Arc<Executor>,
+}
+
+/// System-wide counters (benchmark reporting; Fig 13's abort rows).
+#[derive(Default)]
+pub struct SysStats {
+    pub commits: AtomicU64,
+    pub manual_aborts: AtomicU64,
+    pub forced_aborts: AtomicU64,
+    pub early_releases: AtomicU64,
+    pub async_tasks: AtomicU64,
+}
+
+/// Tuning knobs for the OptSVA-CF instance.
+#[derive(Debug, Clone, Copy)]
+pub struct OptsvaConfig {
+    /// Failure-suspicion deadline for versioning waits (§3.4). `None`
+    /// disables suspicion (waits are unbounded).
+    pub wait_timeout: Option<Duration>,
+    /// Disable the asynchronous read-only buffering and last-write release
+    /// optimizations (ablation benches): tasks still run, but inline.
+    pub asynchrony: bool,
+}
+
+impl Default for OptsvaConfig {
+    fn default() -> Self {
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(60)), asynchrony: true }
+    }
+}
+
+/// The Atomic RMI 2 system: hosts objects across the simulated cluster and
+/// creates OptSVA-CF transactions.
+pub struct AtomicRmi2 {
+    cluster: Arc<Cluster>,
+    nodes: Vec<NodeState>,
+    pub stats: Arc<SysStats>,
+    config: OptsvaConfig,
+}
+
+impl AtomicRmi2 {
+    pub fn new(cluster: Arc<Cluster>) -> Arc<Self> {
+        Self::with_config(cluster, OptsvaConfig::default())
+    }
+
+    pub fn with_config(cluster: Arc<Cluster>, config: OptsvaConfig) -> Arc<Self> {
+        let nodes = cluster
+            .node_ids()
+            .map(|_| NodeState {
+                slots: RwLock::new(Vec::new()),
+                executor: Executor::spawn(),
+            })
+            .collect();
+        Arc::new(AtomicRmi2 { cluster, nodes, stats: Arc::new(SysStats::default()), config })
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    pub fn config(&self) -> OptsvaConfig {
+        self.config
+    }
+
+    /// Host `object` on `node` under `name`; registers it and wires its
+    /// version counters to the node's executor signal.
+    pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
+        let state = &self.nodes[node.0 as usize];
+        let mut slots = state.slots.write().unwrap();
+        let oid = Oid::new(node, slots.len() as u32);
+        let slot = ObjectSlot::new(oid, object);
+        slot.cc.watch(state.executor.signal());
+        slots.push(slot);
+        drop(slots);
+        self.cluster.registry.bind(name, oid);
+        oid
+    }
+
+    /// Resolve an object id to its slot.
+    pub fn slot(&self, oid: Oid) -> Arc<ObjectSlot> {
+        let state = &self.nodes[oid.node.0 as usize];
+        let slots = state.slots.read().unwrap();
+        Arc::clone(&slots[oid.index as usize])
+    }
+
+    /// The executor of the node hosting `oid`.
+    pub(crate) fn executor_of(&self, node: NodeId) -> Arc<Executor> {
+        Arc::clone(&self.nodes[node.0 as usize].executor)
+    }
+
+    /// Begin building a transaction from `client`.
+    pub fn tx(self: &Arc<Self>, client: NodeId) -> TxBuilder {
+        TxBuilder::new(Arc::clone(self), client)
+    }
+
+    /// Inject a crash-stop failure on an object (§3.4, fault testing).
+    pub fn crash_object(&self, oid: Oid) {
+        self.slot(oid).crashed.store(true, Ordering::Release);
+        self.cluster.registry.unbind(
+            &self
+                .cluster
+                .registry
+                .names_on(oid.node)
+                .into_iter()
+                .find(|n| self.cluster.registry.locate(n) == Some(oid))
+                .unwrap_or_default(),
+        );
+    }
+
+    /// Every hosted slot (failure detector, diagnostics).
+    pub fn all_slots(&self) -> Vec<Arc<ObjectSlot>> {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.slots.read().unwrap().iter().cloned().collect::<Vec<_>>())
+            .collect()
+    }
+
+    /// Shut down all node executors (drains queues).
+    pub fn shutdown(&self) {
+        for n in &self.nodes {
+            n.executor.shutdown();
+        }
+    }
+
+    /// Peek at an object's state (test/diagnostic helper; **not**
+    /// transactional — do not call while transactions are running).
+    pub fn with_object<R>(&self, oid: Oid, f: impl FnOnce(&dyn SharedObject) -> R) -> R {
+        let slot = self.slot(oid);
+        let obj = slot.object.lock().unwrap();
+        f(obj.as_ref())
+    }
+}
+
+impl Dtm for Arc<AtomicRmi2> {
+    fn framework_name(&self) -> &'static str {
+        "atomic-rmi2 (OptSVA-CF)"
+    }
+
+    fn run(
+        &self,
+        client: NodeId,
+        decls: &[AccessDecl],
+        irrevocable: bool,
+        body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError> {
+        let mut attempts = 0u64;
+        loop {
+            attempts += 1;
+            let mut builder = self.tx(client);
+            if irrevocable {
+                builder = builder.irrevocable();
+            }
+            let handles: Vec<ObjHandle> = decls
+                .iter()
+                .map(|d| builder.accesses(&d.name, d.suprema))
+                .collect();
+            debug_assert!(handles.iter().enumerate().all(|(i, h)| h.0 == i));
+            match builder.run(|ctx| body(ctx)) {
+                Ok(ops) => {
+                    return Ok(TxStats { ops, attempts });
+                }
+                Err(e) if e.is_retryable() && attempts < 1000 => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn aborts(&self) -> u64 {
+        self.stats.manual_aborts.load(Ordering::Relaxed)
+            + self.stats.forced_aborts.load(Ordering::Relaxed)
+    }
+
+    fn commits(&self) -> u64 {
+        self.stats.commits.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,734 @@
+//! Server-side per-(transaction, object) proxy — OptSVA-CF's operation
+//! handlers (paper §2.8, §3.1).
+//!
+//! One proxy links one shared object on its home node with one client-side
+//! transaction. It owns the transaction's view of the object: the suprema
+//! and per-mode counters, the abort checkpoint `st`, the copy buffer `buf`,
+//! the log buffer `log`, and the handle of any asynchronous buffering /
+//! release task running on the home node's executor. All buffers live here,
+//! on the server side, because CF semantics require side effects to occur
+//! at the object's home (§2.6).
+//!
+//! The state machine per object (§2.8.2–§2.8.4):
+//!
+//! ```text
+//!                read/update                     write (no prior r/u)
+//!   [fresh] ───────────────────▶ [accessed]   [fresh] ─▶ log buffer
+//!      │  wait access, st := copy      │                  │ last write &
+//!      │  apply log if pending         │ last w/u:        │ no updates:
+//!      │                               │ buf := copy      ▼ async task:
+//!      │ read-only object:             ▼ release      wait access, st,
+//!      └─▶ async: buf := copy,     [released]         apply log, buf,
+//!          release                 reads use buf      release
+//! ```
+
+use crate::api::{Suprema, TxError};
+use crate::buffers::{CopyBuffer, LogBuffer};
+use crate::cluster::Oid;
+use crate::executor::{Executor, TaskHandle};
+use crate::object::{Mode, OpCall, Value};
+use crate::versioning::ObjectCc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::{ObjectSlot, SysStats};
+
+/// Configuration shared by all proxies of one transaction.
+#[derive(Clone)]
+pub struct ProxyConfig {
+    /// Failure-suspicion deadline for versioning waits (§3.4).
+    pub wait_timeout: Option<Duration>,
+    /// Irrevocable transactions replace every access-condition wait by a
+    /// termination-condition wait (§2.4).
+    pub irrevocable: bool,
+    /// When false, "asynchronous" tasks run inline (ablation mode).
+    pub asynchrony: bool,
+}
+
+impl ProxyConfig {
+    fn deadline(&self) -> Option<Instant> {
+        self.wait_timeout.map(|t| Instant::now() + t)
+    }
+}
+
+/// Mutable per-object transaction state, guarded by one mutex.
+struct ProxyState {
+    /// Per-mode operation counters `rc/wc/uc` (§2.2, §2.7).
+    rc: u64,
+    wc: u64,
+    uc: u64,
+    /// Passed the access condition and operates on the object directly.
+    accessed: bool,
+    /// `lv` was advanced on our behalf (early release or async release).
+    released: bool,
+    /// Did this transaction modify the live object (directly or via an
+    /// applied log)? Governs abort-time invalidation + restore.
+    modified: bool,
+    /// Abort checkpoint `st_i(x)` — captured at first synchronized access.
+    st: Option<CopyBuffer>,
+    /// Restore epoch at checkpoint time (valid-lineage discriminator).
+    st_epoch: u64,
+    /// Copy buffer `buf_i(x)` — serves local reads after release.
+    buf: Option<CopyBuffer>,
+    /// Log buffer `log_i(x)` — records pure writes before synchronization.
+    log: LogBuffer,
+    /// Handle of the async read-only-buffering or last-write-release task.
+    task: Option<TaskHandle>,
+    /// Abort rollback already performed (idempotence for §3.4 eviction).
+    rolled_back: bool,
+}
+
+/// Server-side proxy: injects OptSVA-CF around method dispatch.
+pub struct Proxy {
+    pub oid: Oid,
+    pub pv: u64,
+    pub sup: Suprema,
+    slot: Arc<ObjectSlot>,
+    executor: Arc<Executor>,
+    stats: Arc<SysStats>,
+    config: ProxyConfig,
+    /// Transaction-wide doom flag: set as soon as *any* proxy of this
+    /// transaction observes an invalidation mark covering its pv (§2.8.2:
+    /// "by checking for all the objects we force it to [abort] as early as
+    /// we can detect").
+    tx_doomed: Arc<AtomicBool>,
+    /// §3.4: set by the failure detector when the object rolled itself
+    /// back after suspecting the client crashed. Every later use of this
+    /// proxy fails.
+    evicted: AtomicBool,
+    /// Last time the client was heard from (updated on every dispatch).
+    last_beat: Mutex<Instant>,
+    inner: Mutex<ProxyState>,
+}
+
+impl Proxy {
+    pub(super) fn new(
+        slot: Arc<ObjectSlot>,
+        pv: u64,
+        sup: Suprema,
+        executor: Arc<Executor>,
+        stats: Arc<SysStats>,
+        config: ProxyConfig,
+        tx_doomed: Arc<AtomicBool>,
+    ) -> Arc<Self> {
+        let proxy = Arc::new(Proxy {
+            oid: slot.oid,
+            pv,
+            sup,
+            slot,
+            executor,
+            stats,
+            config,
+            tx_doomed,
+            evicted: AtomicBool::new(false),
+            last_beat: Mutex::new(Instant::now()),
+            inner: Mutex::new(ProxyState {
+                rc: 0,
+                wc: 0,
+                uc: 0,
+                accessed: false,
+                released: false,
+                modified: false,
+                st: None,
+                st_epoch: 0,
+                buf: None,
+                log: LogBuffer::new(),
+                task: None,
+                rolled_back: false,
+            }),
+        });
+        // Register with the hosting slot so the failure detector (§3.4)
+        // can find live proxies.
+        proxy
+            .slot
+            .active
+            .lock()
+            .unwrap()
+            .push(Arc::downgrade(&proxy));
+        // §2.8.1: read-only objects are buffered and released by an
+        // asynchronous task scheduled at transaction start.
+        if proxy.sup.read_only() {
+            proxy.schedule_buffer_and_release();
+        }
+        proxy
+    }
+
+    fn cc(&self) -> &ObjectCc {
+        &self.slot.cc
+    }
+
+    /// Access-condition wait — or termination-condition wait for
+    /// irrevocable transactions (§2.4).
+    fn wait_access(&self) -> Result<(), TxError> {
+        let deadline = self.config.deadline();
+        if self.config.irrevocable {
+            self.cc().wait_commit_cond(self.pv, deadline)?;
+        } else {
+            self.cc().wait_access(self.pv, deadline)?;
+        }
+        Ok(())
+    }
+
+    fn access_cond_ready(&self) -> bool {
+        if self.config.irrevocable {
+            self.cc().commit_ready(self.pv)
+        } else {
+            self.cc().access_ready(self.pv)
+        }
+    }
+
+    /// Doom check (§2.8.2): if an invalidation mark covers our pv on this
+    /// object, the whole transaction is doomed — flag it and abort the
+    /// current operation.
+    fn check_doomed(&self) -> Result<(), TxError> {
+        if self.tx_doomed.load(Ordering::Acquire) {
+            return Err(TxError::ForcedAbort("transaction observed invalidated state".into()));
+        }
+        if self.cc().doomed(self.pv) {
+            self.tx_doomed.store(true, Ordering::Release);
+            return Err(TxError::ForcedAbort(format!(
+                "object {} was invalidated by an aborting transaction",
+                self.oid
+            )));
+        }
+        Ok(())
+    }
+
+    /// Dispatch one operation with full OptSVA-CF handling. Runs on the
+    /// object's home node (the caller pays RPC latency).
+    pub fn invoke(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
+        self.slot.check_alive()?;
+        *self.last_beat.lock().unwrap() = Instant::now();
+        if self.evicted.load(Ordering::Acquire) {
+            return Err(TxError::ForcedAbort(format!(
+                "object {} rolled itself back (client suspected crashed)",
+                self.oid
+            )));
+        }
+        // Mode lookup from the cached interface — never touches the
+        // object lock (which concurrent operation bodies may hold for
+        // milliseconds).
+        let mode = self
+            .slot
+            .interface
+            .iter()
+            .find(|m| m.name == call.method)
+            .map(|m| m.mode)
+            .ok_or_else(|| crate::object::ObjectError::NoSuchMethod(call.method.to_string()))?;
+        match mode {
+            Mode::Read => self.read(call),
+            Mode::Write => self.write(call),
+            Mode::Update => self.update(call),
+        }
+    }
+
+    /// READ (§2.8.2).
+    fn read(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
+        {
+            let mut s = self.inner.lock().unwrap();
+            s.rc += 1;
+            if s.rc > self.sup.reads {
+                return Err(TxError::SupremaExceeded {
+                    oid: self.oid,
+                    mode: "read",
+                    count: s.rc,
+                    bound: self.sup.reads,
+                });
+            }
+        }
+
+        // Read-only object: wait for the start-time buffering task, then
+        // read from the copy buffer (§2.7).
+        if self.sup.read_only() {
+            self.join_task()?;
+            self.check_doomed()?;
+            let mut s = self.inner.lock().unwrap();
+            let buf = s.buf.as_mut().expect("read-only buffering task sets buf");
+            return Ok(buf.invoke(call)?);
+        }
+
+        // Object already released (async last-write release or early
+        // release): wait for the releasing task, then read the buffer.
+        if self.released_or_pending() {
+            self.join_task()?;
+            self.check_doomed()?;
+            let mut s = self.inner.lock().unwrap();
+            let buf = s
+                .buf
+                .as_mut()
+                .expect("released object must have a copy buffer for later reads");
+            return Ok(buf.invoke(call)?);
+        }
+
+        self.ensure_direct_access()?;
+        self.check_doomed()?;
+
+        let mut s = self.inner.lock().unwrap();
+        let mut obj = self.slot.object.lock().unwrap();
+        // Re-check under the object lock: an earlier transaction's abort
+        // (mark + restore, also under this lock) may have doomed us between
+        // the check above and acquiring the lock; executing now would
+        // modify/observe the restored lineage with no rollback to cover it.
+        self.check_doomed()?;
+        let v = obj.invoke(call)?;
+        // Last operation of any kind on this object ⇒ release (§2.8.2).
+        if s.rc == self.sup.reads && s.wc == self.sup.writes && s.uc == self.sup.updates {
+            drop(obj);
+            self.release_now(&mut s);
+        }
+        Ok(v)
+    }
+
+    /// UPDATE (§2.8.3).
+    fn update(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
+        {
+            let mut s = self.inner.lock().unwrap();
+            s.uc += 1;
+            if s.uc > self.sup.updates {
+                return Err(TxError::SupremaExceeded {
+                    oid: self.oid,
+                    mode: "update",
+                    count: s.uc,
+                    bound: self.sup.updates,
+                });
+            }
+        }
+
+        self.ensure_direct_access()?;
+        self.check_doomed()?;
+
+        let mut s = self.inner.lock().unwrap();
+        let mut obj = self.slot.object.lock().unwrap();
+        // Re-check under the object lock (see `read` for why).
+        self.check_doomed()?;
+        let v = obj.invoke(call)?;
+        s.modified = true;
+        // No further writes or updates ⇒ snapshot to buf and release; all
+        // remaining reads are served from the buffer (§2.8.3).
+        if s.wc == self.sup.writes && s.uc == self.sup.updates {
+            if s.rc < self.sup.reads {
+                s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+            }
+            drop(obj);
+            self.release_now(&mut s);
+        }
+        Ok(v)
+    }
+
+    /// WRITE (§2.8.4).
+    fn write(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
+        let mut s = self.inner.lock().unwrap();
+        s.wc += 1;
+        if s.wc > self.sup.writes {
+            return Err(TxError::SupremaExceeded {
+                oid: self.oid,
+                mode: "write",
+                count: s.wc,
+                bound: self.sup.writes,
+            });
+        }
+
+        if !s.accessed {
+            // No preceding reads or updates: execute on the log buffer with
+            // no synchronization whatsoever.
+            let v = s.log.record(call.clone());
+            // Final write, and no updates will ever run on this object:
+            // split off the apply-and-release procedure to the executor
+            // (§2.7, Fig 5) — the main thread continues immediately.
+            if s.wc == self.sup.writes && self.sup.updates == 0 {
+                drop(s);
+                self.schedule_apply_log_and_release();
+            }
+            return Ok(v);
+        }
+
+        // Preceding reads/updates gave us direct access already.
+        drop(s);
+        self.check_doomed()?;
+        let mut s = self.inner.lock().unwrap();
+        let mut obj = self.slot.object.lock().unwrap();
+        // Re-check under the object lock (see `read` for why).
+        self.check_doomed()?;
+        let v = obj.invoke(call)?;
+        s.modified = true;
+        if s.wc == self.sup.writes && s.uc == self.sup.updates {
+            if s.rc < self.sup.reads {
+                s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+            }
+            drop(obj);
+            // Done inline, not in a separate thread: "the transaction
+            // already has access to obj_x" (§2.8.4).
+            self.release_now(&mut s);
+        }
+        Ok(v)
+    }
+
+    /// First synchronized access: wait at the access condition, make the
+    /// checkpoint `st`, and apply any pending log-buffer writes (§2.8.2).
+    fn ensure_direct_access(&self) -> Result<(), TxError> {
+        {
+            let s = self.inner.lock().unwrap();
+            if s.accessed {
+                return Ok(());
+            }
+            debug_assert!(!s.released, "direct access after release");
+        }
+        // Never hold `inner` while blocking on the version condvar.
+        self.wait_access()?;
+        let mut s = self.inner.lock().unwrap();
+        if s.accessed {
+            return Ok(());
+        }
+        let mut obj = self.slot.object.lock().unwrap();
+        // Doomed transactions must not checkpoint or modify the restored
+        // lineage (their abort will not restore, §2.8.6).
+        self.check_doomed()?;
+        if s.st.is_none() {
+            s.st_epoch = self.cc().epoch();
+            s.st = Some(CopyBuffer::capture(obj.as_ref()));
+        }
+        if !s.log.is_empty() {
+            let mut log = std::mem::take(&mut s.log);
+            log.apply(obj.as_mut())?;
+            s.modified = true;
+        }
+        s.accessed = true;
+        Ok(())
+    }
+
+    /// Advance `lv` on our behalf and account the early release.
+    fn release_now(&self, s: &mut ProxyState) {
+        if !s.released {
+            s.released = true;
+            self.cc().release(self.pv);
+            self.stats.early_releases.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Has the object been released, or is a releasing task in flight?
+    fn released_or_pending(&self) -> bool {
+        let s = self.inner.lock().unwrap();
+        s.released || s.task.is_some()
+    }
+
+    /// Wait for the async buffering/release task, if any (§2.8.5: commit
+    /// "waits for extant threads to finish"). Public for tests and
+    /// diagnostics.
+    pub fn join_task(&self) -> Result<(), TxError> {
+        let task = self.inner.lock().unwrap().task.clone();
+        if let Some(h) = task {
+            h.join(self.config.deadline()).map_err(|()| {
+                TxError::Timeout(crate::versioning::WaitTimeout {
+                    what: "async task join",
+                    waited_ms: self
+                        .config
+                        .wait_timeout
+                        .map(|t| t.as_millis() as u64)
+                        .unwrap_or(0),
+                })
+            })?;
+        }
+        Ok(())
+    }
+
+    /// §2.8.1: asynchronously snapshot a read-only object into `buf` and
+    /// release it as soon as the access condition passes — possibly before
+    /// the first read is even attempted.
+    fn schedule_buffer_and_release(self: &Arc<Self>) {
+        let me = Arc::clone(self);
+        let action = move || {
+            let mut s = me.inner.lock().unwrap();
+            let obj = me.slot.object.lock().unwrap();
+            // Record the grant *before* observing state, under the object
+            // lock, so an aborter's mark+restore (also under the object
+            // lock) either sees our grant or restores before our snapshot.
+            me.cc().note_granted(me.pv);
+            s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+            drop(obj);
+            me.release_now(&mut s);
+        };
+        self.schedule(action);
+    }
+
+    /// §2.8.4 final-write path: asynchronously wait at the access
+    /// condition, checkpoint, apply the log, snapshot to `buf`, release.
+    fn schedule_apply_log_and_release(self: &Arc<Self>) {
+        let me = Arc::clone(self);
+        let action = move || {
+            let mut s = me.inner.lock().unwrap();
+            let mut obj = me.slot.object.lock().unwrap();
+            me.cc().note_granted(me.pv);
+            // A doomed transaction must not modify the restored lineage:
+            // flag it and release without applying the log.
+            if me.cc().doomed(me.pv) {
+                me.tx_doomed.store(true, Ordering::Release);
+                drop(obj);
+                me.release_now(&mut s);
+                return;
+            }
+            if s.st.is_none() {
+                s.st_epoch = me.cc().epoch();
+                s.st = Some(CopyBuffer::capture(obj.as_ref()));
+            }
+            let mut log = std::mem::take(&mut s.log);
+            // Log replay of pure writes: errors are surfaced at commit by
+            // re-checking; a failed replay leaves the checkpoint intact.
+            if log.apply(obj.as_mut()).is_ok() {
+                s.modified = true;
+            }
+            // Conservative `sup.reads > 0` (not `rc < reads`): this runs on
+            // the executor thread and must not race the main thread's read
+            // counter.
+            if me.sup.reads > 0 {
+                s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+            }
+            drop(obj);
+            me.release_now(&mut s);
+        };
+        self.schedule(action);
+    }
+
+    /// Run `action` once this object's access condition holds: on the home
+    /// node's executor (§3.3), or inline when asynchrony is disabled.
+    fn schedule(self: &Arc<Self>, action: impl FnOnce() + Send + 'static) {
+        self.stats.async_tasks.fetch_add(1, Ordering::Relaxed);
+        if !self.config.asynchrony {
+            // Ablation mode: block the calling thread at the condition.
+            let _ = self.wait_access();
+            action();
+            self.inner.lock().unwrap().task = Some(TaskHandle::ready());
+            return;
+        }
+        let me = Arc::clone(self);
+        let handle = self
+            .executor
+            .submit(move || me.access_cond_ready(), action);
+        self.inner.lock().unwrap().task = Some(handle);
+    }
+
+    // ------------------------------------------------------------------
+    // Commit / abort participation (driven by `Transaction`, §2.8.5–6).
+    // ------------------------------------------------------------------
+
+    /// Wait for this object's commit (termination) condition.
+    pub(super) fn wait_commit(&self) -> Result<(), TxError> {
+        self.cc().wait_commit_cond(self.pv, self.config.deadline())?;
+        Ok(())
+    }
+
+    /// Commit-time finalization (§2.8.5): apply a pending log (write-only
+    /// object whose supremum was never reached), release if still held.
+    pub(super) fn finalize_commit(&self) -> Result<(), TxError> {
+        let mut s = self.inner.lock().unwrap();
+        if !s.log.is_empty() {
+            let mut obj = self.slot.object.lock().unwrap();
+            self.cc().note_granted(self.pv);
+            if s.st.is_none() {
+                s.st_epoch = self.cc().epoch();
+                s.st = Some(CopyBuffer::capture(obj.as_ref()));
+            }
+            let mut log = std::mem::take(&mut s.log);
+            log.apply(obj.as_mut())?;
+            s.modified = true;
+        }
+        if !s.released {
+            s.released = true;
+            self.cc().release(self.pv);
+        }
+        Ok(())
+    }
+
+    /// Is this transaction doomed through this object?
+    pub(super) fn is_doomed(&self) -> bool {
+        self.tx_doomed.load(Ordering::Acquire) || self.cc().doomed(self.pv)
+    }
+
+    /// Abort-time rollback (§2.8.6): invalidate + restore (oldest aborter
+    /// wins), under the object lock to serialize against in-flight
+    /// buffering tasks of later transactions.
+    pub(super) fn rollback(&self) {
+        let mut s = self.inner.lock().unwrap();
+        if s.rolled_back {
+            return;
+        }
+        s.rolled_back = true;
+        let mut obj = self.slot.object.lock().unwrap();
+        if s.modified {
+            // Invalidate everyone who observed our (now aborted) state.
+            self.cc().mark_invalid(self.pv);
+            // Restore only a valid-lineage checkpoint: if another aborter
+            // restored since we checkpointed, our checkpoint captured
+            // since-invalidated state and the older restore stands.
+            let should_restore = s.st.is_some() && s.st_epoch == self.cc().epoch();
+            if std::env::var_os("ARMI2_TRACE").is_some() {
+                eprintln!("[trace] rollback {} pv={} restore={}", self.oid, self.pv, should_restore);
+            }
+            if should_restore {
+                if let Some(st) = &s.st {
+                    st.restore_into(obj.as_mut());
+                    self.cc().note_restored();
+                }
+            }
+        }
+        // Pending log-buffer writes are simply discarded.
+        s.log = LogBuffer::new();
+        drop(obj);
+        if !s.released {
+            s.released = true;
+            self.cc().release(self.pv);
+        }
+    }
+
+    /// Advance `ltv` — the very last step of commit and abort.
+    pub(super) fn terminate(&self) {
+        self.cc().terminate(self.pv);
+    }
+
+    /// §3.4 failure path, called by the failure detector: the object
+    /// "performs a rollback on itself: it reverts its state and releases
+    /// itself". Only legal when the commit condition holds (the detector
+    /// checks), so `terminate` keeps the versioning order intact.
+    pub(crate) fn evict(&self) {
+        self.evicted.store(true, Ordering::Release);
+        self.rollback();
+        self.terminate();
+    }
+
+    /// Was this proxy evicted by the failure detector?
+    pub fn is_evicted(&self) -> bool {
+        self.evicted.load(Ordering::Acquire)
+    }
+
+    /// Seconds since the client last dispatched through this proxy.
+    pub(crate) fn staleness(&self) -> Duration {
+        self.last_beat.lock().unwrap().elapsed()
+    }
+
+    /// Is this proxy finished (its `ltv` advanced past it)?
+    pub(crate) fn terminated(&self) -> bool {
+        self.cc().versions().1 >= self.pv
+    }
+
+    /// Would eviction preserve termination order right now?
+    pub(crate) fn evictable(&self) -> bool {
+        !self.terminated() && self.cc().commit_ready(self.pv)
+    }
+
+    /// Counters snapshot (tests, diagnostics).
+    pub fn counts(&self) -> (u64, u64, u64) {
+        let s = self.inner.lock().unwrap();
+        (s.rc, s.wc, s.uc)
+    }
+
+    /// Was the object released early (before commit/abort)?
+    pub fn released(&self) -> bool {
+        self.inner.lock().unwrap().released
+    }
+
+    /// Total operations executed through this proxy.
+    pub(super) fn ops(&self) -> u64 {
+        let s = self.inner.lock().unwrap();
+        s.rc + s.wc + s.uc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{AtomicRmi2, OptsvaConfig};
+    use crate::api::Suprema;
+    use crate::cluster::{Cluster, NetworkModel, NodeId};
+    use crate::object::{account::ops, Account};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn sys() -> Arc<AtomicRmi2> {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        AtomicRmi2::with_config(
+            cluster,
+            OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: true },
+        )
+    }
+
+    #[test]
+    fn read_only_object_is_buffered_and_released_before_first_read() {
+        let sys = sys();
+        let oid = sys.host(NodeId(0), "A", Box::new(Account::with_balance(7)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.reads("A", 2);
+        tx.begin().unwrap();
+        let proxy = tx.proxy(h);
+        proxy.join_task().unwrap();
+        assert!(proxy.released(), "read-only object released by the async task");
+        let (lv, _) = sys.slot(oid).cc.versions();
+        assert_eq!(lv, proxy.pv, "lv advanced before any read executed");
+        // Reads still see the buffered state.
+        assert_eq!(proxy.invoke(&ops::balance()).unwrap().as_int(), 7);
+        tx.commit().unwrap();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn supremum_violation_is_reported() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::new(1, 0, 0));
+        tx.begin().unwrap();
+        let proxy = tx.proxy(h);
+        proxy.invoke(&ops::balance()).unwrap();
+        let err = proxy.invoke(&ops::balance()).unwrap_err();
+        assert!(matches!(err, crate::api::TxError::SupremaExceeded { .. }));
+        tx.abort().unwrap();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn pure_write_executes_without_synchronization_while_object_is_held() {
+        let sys = sys();
+        let oid = sys.host(NodeId(0), "A", Box::new(Account::with_balance(5)));
+        // T1 takes direct access and holds the object.
+        let mut t1 = sys.tx(NodeId(0));
+        let h1 = t1.accesses("A", Suprema::new(1, 0, 1));
+        t1.begin().unwrap();
+        t1.proxy(h1).invoke(&ops::balance()).unwrap();
+
+        // T2's pure write must return immediately (log buffer), despite T1
+        // holding the access condition.
+        let mut t2 = sys.tx(NodeId(0));
+        let h2 = t2.accesses("A", Suprema::new(0, 1, 0));
+        t2.begin().unwrap();
+        t2.proxy(h2).invoke(&ops::reset()).unwrap();
+        assert!(
+            !sys.slot(oid).cc.access_ready(t2.proxy(h2).pv),
+            "T2 never passed the access condition for its write"
+        );
+
+        // T1 finishes; T2's async apply-log task then fires and releases.
+        t1.proxy(h1).invoke(&ops::deposit(10)).unwrap();
+        t1.commit().unwrap();
+        t2.proxy(h2).join_task().unwrap();
+        assert!(t2.proxy(h2).released());
+        t2.commit().unwrap();
+        assert_eq!(sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 0);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn update_releases_after_last_write_update_and_reads_use_buffer() {
+        let sys = sys();
+        let oid = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::new(1, 0, 1));
+        tx.begin().unwrap();
+        let p = tx.proxy(h);
+        p.invoke(&ops::deposit(50)).unwrap(); // last update ⇒ buf + release
+        assert!(p.released());
+        let (lv, _) = sys.slot(oid).cc.versions();
+        assert_eq!(lv, p.pv);
+        // The remaining read is served locally from buf.
+        assert_eq!(p.invoke(&ops::balance()).unwrap().as_int(), 150);
+        tx.commit().unwrap();
+        sys.shutdown();
+    }
+}

@@ -1,0 +1,553 @@
+//! Client-side OptSVA-CF transaction (paper Fig 8/9, §2.8.1, §2.8.5–6).
+//!
+//! The lifecycle mirrors the paper's API: a *preamble* declares the access
+//! set with optional suprema (`reads`/`writes`/`updates`/`accesses`), then
+//! [`Transaction::begin`] atomically acquires private versions for the
+//! whole set (under start locks taken in global `Oid` order, §2.10.2) and
+//! creates one server-side [`Proxy`] per object. Operations flow through
+//! [`Transaction::call`], which pays simulated network latency to the
+//! object's home node — exactly Java RMI's stub → remote-proxy path.
+
+use super::proxy::{Proxy, ProxyConfig};
+use super::AtomicRmi2;
+use crate::api::{ObjHandle, Suprema, TxCtx, TxError};
+use crate::cluster::NodeId;
+use crate::object::{OpCall, Value};
+use crate::versioning::acquire_start_locks;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Alias kept for symmetry with the `Dtm` driver code: the builder *is*
+/// the transaction (declarations before `begin`, operations after).
+pub type TxBuilder = Transaction;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Preamble,
+    Running,
+    Done,
+}
+
+/// A client-side OptSVA-CF transaction.
+pub struct Transaction {
+    sys: Arc<AtomicRmi2>,
+    client: NodeId,
+    irrevocable: bool,
+    decls: Vec<(String, Suprema)>,
+    proxies: Vec<Arc<Proxy>>,
+    tx_doomed: Arc<AtomicBool>,
+    phase: Phase,
+}
+
+impl Transaction {
+    pub(super) fn new(sys: Arc<AtomicRmi2>, client: NodeId) -> Self {
+        Transaction {
+            sys,
+            client,
+            irrevocable: false,
+            decls: Vec::new(),
+            proxies: Vec::new(),
+            tx_doomed: Arc::new(AtomicBool::new(false)),
+            phase: Phase::Preamble,
+        }
+    }
+
+    /// Mark the transaction irrevocable (§2.4): every access-condition wait
+    /// becomes a termination-condition wait; it can never be forced to
+    /// abort, at the price of never accepting early-released objects.
+    pub fn irrevocable(mut self) -> Self {
+        assert_eq!(self.phase, Phase::Preamble, "irrevocable() after begin");
+        self.irrevocable = true;
+        self
+    }
+
+    /// Preamble: declare read-only access with supremum `n` (Fig 8).
+    pub fn reads(&mut self, name: &str, n: u64) -> ObjHandle {
+        self.accesses(name, Suprema::reads(n))
+    }
+
+    /// Preamble: declare write-only access with supremum `n`.
+    pub fn writes(&mut self, name: &str, n: u64) -> ObjHandle {
+        self.accesses(name, Suprema::writes(n))
+    }
+
+    /// Preamble: declare update access with supremum `n`.
+    pub fn updates(&mut self, name: &str, n: u64) -> ObjHandle {
+        self.accesses(name, Suprema::updates(n))
+    }
+
+    /// Preamble: declare mixed access with full per-mode suprema.
+    pub fn accesses(&mut self, name: &str, sup: Suprema) -> ObjHandle {
+        assert_eq!(self.phase, Phase::Preamble, "declaration after begin");
+        self.decls.push((name.to_string(), sup));
+        ObjHandle(self.decls.len() - 1)
+    }
+
+    /// §2.8.1: resolve the access set, atomically acquire private versions
+    /// (start locks in global `Oid` order), create server-side proxies, and
+    /// schedule read-only buffering tasks.
+    pub fn begin(&mut self) -> Result<(), TxError> {
+        assert_eq!(self.phase, Phase::Preamble, "begin called twice");
+        let cluster = Arc::clone(self.sys.cluster());
+
+        // Resolve names and keep declaration order for handles.
+        let mut resolved = Vec::with_capacity(self.decls.len());
+        for (name, sup) in &self.decls {
+            let oid = cluster
+                .registry
+                .locate(name)
+                .ok_or_else(|| TxError::NotDeclared(name.clone()))?;
+            resolved.push((oid, *sup));
+        }
+
+        // Sort a view by Oid for globally ordered start-lock acquisition.
+        let mut order: Vec<usize> = (0..resolved.len()).collect();
+        order.sort_by_key(|&i| resolved[i].0);
+        for w in order.windows(2) {
+            assert_ne!(
+                resolved[w[0]].0, resolved[w[1]].0,
+                "object declared twice in the preamble: {}",
+                resolved[w[0]].0
+            );
+        }
+
+        let slots: Vec<_> = order.iter().map(|&i| self.sys.slot(resolved[i].0)).collect();
+        for slot in &slots {
+            slot.check_alive()?;
+        }
+        let lock_view: Vec<_> = order
+            .iter()
+            .zip(&slots)
+            .map(|(&i, slot)| (resolved[i].0, &slot.cc))
+            .collect();
+        let client = self.client;
+        let pvs = acquire_start_locks(&lock_view, |oid| {
+            // Remote lock acquisition costs one round trip to the home node.
+            cluster.rpc(client, oid.node, 24, || ((), 16));
+        });
+
+        // Create proxies back in declaration order.
+        let config = ProxyConfig {
+            wait_timeout: self.sys.config().wait_timeout,
+            irrevocable: self.irrevocable,
+            asynchrony: self.sys.config().asynchrony,
+        };
+        let mut proxies: Vec<Option<Arc<Proxy>>> = vec![None; resolved.len()];
+        for (pos, &i) in order.iter().enumerate() {
+            let (oid, sup) = resolved[i];
+            proxies[i] = Some(Proxy::new(
+                Arc::clone(&slots[pos]),
+                pvs[pos],
+                sup,
+                self.sys.executor_of(oid.node),
+                self.sys.stats_arc(),
+                config.clone(),
+                Arc::clone(&self.tx_doomed),
+            ));
+        }
+        self.proxies = proxies.into_iter().map(Option::unwrap).collect();
+        self.phase = Phase::Running;
+        Ok(())
+    }
+
+    /// The proxy behind a handle (tests, diagnostics).
+    pub fn proxy(&self, h: ObjHandle) -> &Arc<Proxy> {
+        &self.proxies[h.0]
+    }
+
+    /// Execute `body` as the transaction's code: begin, run, then commit —
+    /// or abort on any error. Returns the number of shared-object
+    /// operations executed.
+    pub fn run(
+        mut self,
+        mut body: impl FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<u64, TxError> {
+        if self.phase == Phase::Preamble {
+            self.begin()?;
+        }
+        match body(&mut self) {
+            Ok(()) => {
+                let ops = self.ops();
+                self.commit()?;
+                Ok(ops)
+            }
+            Err(e) => {
+                self.abort_with(&e)?;
+                Err(e)
+            }
+        }
+    }
+
+    fn ops(&self) -> u64 {
+        self.proxies.iter().map(|p| p.ops()).sum()
+    }
+
+    /// §2.8.5 COMMIT: join extant async tasks, wait for every object's
+    /// commit condition, finalize (apply pending logs, release), check
+    /// invalidation (abort instead if doomed), then advance `ltv`s.
+    pub fn commit(&mut self) -> Result<(), TxError> {
+        assert_eq!(self.phase, Phase::Running, "commit outside running phase");
+        let cluster = Arc::clone(self.sys.cluster());
+        let client = self.client;
+
+        for p in &self.proxies {
+            p.join_task()?;
+        }
+        // §3.4: an object evicted by the failure detector has already been
+        // rolled back and terminated — waiting on its commit condition
+        // would deadlock; the transaction is doomed instead.
+        if self.proxies.iter().any(|p| p.is_evicted()) {
+            for p in &self.proxies {
+                p.rollback();
+                p.terminate();
+            }
+            self.phase = Phase::Done;
+            self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
+            return Err(TxError::ForcedAbort(
+                "object rolled itself back (client suspected crashed)".into(),
+            ));
+        }
+        for p in &self.proxies {
+            // One commit-protocol message per object.
+            let r = cluster.rpc(client, p.oid.node, 24, || (p.wait_commit(), 16));
+            if let Err(e) = r {
+                self.emergency_finalize();
+                return Err(e);
+            }
+        }
+        let mut finalize_err = None;
+        for p in &self.proxies {
+            if let Err(e) = p.finalize_commit() {
+                finalize_err = Some(e);
+                break;
+            }
+        }
+        let doomed = self.proxies.iter().any(|p| p.is_doomed() || p.is_evicted());
+        if doomed || finalize_err.is_some() {
+            // Abort instead of committing: rollback in place (the commit
+            // condition already holds for every object).
+            for p in &self.proxies {
+                p.rollback();
+            }
+            for p in &self.proxies {
+                p.terminate();
+            }
+            self.phase = Phase::Done;
+            self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
+            return Err(match finalize_err {
+                Some(e) => e,
+                None => TxError::ForcedAbort("invalidated at commit".into()),
+            });
+        }
+        for p in &self.proxies {
+            p.terminate();
+        }
+        self.phase = Phase::Done;
+        self.sys.stats.commits.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// §2.8.6 ABORT (manual).
+    pub fn abort(&mut self) -> Result<(), TxError> {
+        self.abort_with(&TxError::ManualAbort)
+    }
+
+    fn abort_with(&mut self, cause: &TxError) -> Result<(), TxError> {
+        assert_eq!(self.phase, Phase::Running, "abort outside running phase");
+        let cluster = Arc::clone(self.sys.cluster());
+        let client = self.client;
+
+        for p in &self.proxies {
+            // A doomed/failed task join must not wedge the abort.
+            let _ = p.join_task();
+        }
+        let mut timed_out = false;
+        for p in &self.proxies {
+            if p.is_evicted() {
+                continue; // already rolled back and terminated (§3.4)
+            }
+            let r = cluster.rpc(client, p.oid.node, 24, || (p.wait_commit(), 16));
+            if r.is_err() {
+                timed_out = true; // §3.4 fault path: clean up regardless
+            }
+        }
+        for p in &self.proxies {
+            p.rollback();
+        }
+        for p in &self.proxies {
+            p.terminate();
+        }
+        self.phase = Phase::Done;
+        match cause {
+            TxError::ManualAbort | TxError::Retry => {
+                self.sys.stats.manual_aborts.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if timed_out {
+            return Err(TxError::Timeout(crate::versioning::WaitTimeout {
+                what: "abort commit-condition wait",
+                waited_ms: 0,
+            }));
+        }
+        Ok(())
+    }
+
+    /// Last-resort cleanup when a commit-condition wait times out (§3.4):
+    /// restore, release and terminate everything so other transactions can
+    /// make progress, ignoring ordering (crash semantics).
+    fn emergency_finalize(&mut self) {
+        for p in &self.proxies {
+            p.rollback();
+            p.terminate();
+        }
+        self.phase = Phase::Done;
+        self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl TxCtx for Transaction {
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+        if self.phase != Phase::Running {
+            return Err(TxError::Completed);
+        }
+        let p = Arc::clone(
+            self.proxies
+                .get(h.0)
+                .ok_or_else(|| TxError::NotDeclared(format!("handle #{}", h.0)))?,
+        );
+        let cluster = Arc::clone(self.sys.cluster());
+        let req = call.wire_size();
+        // The stub forwards the invocation to the server-side proxy: the
+        // client thread pays request + response latency (Fig 6).
+        cluster.rpc(self.client, p.oid.node, req, || {
+            let r = p.invoke(&call);
+            let resp = match &r {
+                Ok(v) => v.wire_size(),
+                Err(_) => 16,
+            };
+            (r, resp)
+        })
+    }
+
+    fn client(&self) -> NodeId {
+        self.client
+    }
+}
+
+impl Drop for Transaction {
+    fn drop(&mut self) {
+        // A transaction dropped mid-flight (panic, programming error) must
+        // not wedge the rest of the system: roll it back.
+        if self.phase == Phase::Running {
+            let _ = self.abort_with(&TxError::ManualAbort);
+        }
+    }
+}
+
+/// Convenience: stats field as an `Arc` for proxies.
+impl AtomicRmi2 {
+    pub(super) fn stats_arc(&self) -> Arc<super::SysStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+// `TxStats` is produced by the `Dtm` driver in `optsva::mod`; re-exported
+// here so callers that use the concrete API see the same type.
+pub use crate::api::TxStats as Stats;
+
+#[cfg(test)]
+mod tests {
+    use super::super::{AtomicRmi2, OptsvaConfig};
+    use crate::api::{Suprema, TxCtx, TxError};
+    use crate::cluster::{Cluster, NetworkModel, NodeId};
+    use crate::object::{account::ops, Account};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn sys_n(nodes: u16) -> Arc<AtomicRmi2> {
+        let cluster = Arc::new(Cluster::new(nodes, NetworkModel::instant()));
+        AtomicRmi2::with_config(
+            cluster,
+            OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: true },
+        )
+    }
+
+    #[test]
+    fn transfer_commits_and_is_visible() {
+        let sys = sys_n(2);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+        let b = sys.host(NodeId(1), "B", Box::new(Account::with_balance(0)));
+
+        let mut tx = sys.tx(NodeId(0));
+        let ha = tx.accesses("A", Suprema::new(1, 0, 1));
+        let hb = tx.updates("B", 1);
+        tx.begin().unwrap();
+        tx.call(ha, ops::withdraw(100)).unwrap();
+        tx.call(hb, ops::deposit(100)).unwrap();
+        assert_eq!(tx.call(ha, ops::balance()).unwrap().as_int(), 0);
+        tx.commit().unwrap();
+
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 0);
+        assert_eq!(sys.with_object(b, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 100);
+        assert_eq!(sys.stats.commits.load(std::sync::atomic::Ordering::Relaxed), 1);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn manual_abort_restores_state() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(50)));
+        let mut tx = sys.tx(NodeId(0));
+        let ha = tx.updates("A", 2);
+        tx.begin().unwrap();
+        tx.call(ha, ops::withdraw(100)).unwrap();
+        tx.abort().unwrap();
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 50);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn run_driver_commits_on_ok_and_aborts_on_err() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(10)));
+
+        let mut tx = sys.tx(NodeId(0));
+        let ha = tx.updates("A", 1);
+        let ops_done = tx.run(|t| {
+            t.call(ha, ops::deposit(5))?;
+            Ok(())
+        });
+        assert_eq!(ops_done.unwrap(), 1);
+
+        // Fig 9 shape: withdraw then abort when the balance went negative.
+        let mut tx = sys.tx(NodeId(0));
+        let ha2 = tx.accesses("A", Suprema::new(1, 0, 1));
+        let r = tx.run(|t| {
+            t.call(ha2, ops::withdraw(100))?;
+            if t.call(ha2, ops::balance())?.as_int() < 0 {
+                return t.abort();
+            }
+            Ok(())
+        });
+        assert_eq!(r.unwrap_err(), TxError::ManualAbort);
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 15);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn unknown_object_name_fails_begin() {
+        let sys = sys_n(1);
+        let mut tx = sys.tx(NodeId(0));
+        tx.reads("nope", 1);
+        assert!(matches!(tx.begin(), Err(TxError::NotDeclared(_))));
+    }
+
+    #[test]
+    fn versioning_orders_conflicting_transactions() {
+        let sys = sys_n(1);
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let sys = Arc::clone(&sys);
+            handles.push(std::thread::spawn(move || {
+                let mut tx = sys.tx(NodeId(0));
+                let h = tx.updates("A", 1);
+                tx.run(|t| {
+                    t.call(h, ops::deposit(1))?;
+                    Ok(())
+                })
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sys.with_object(
+            sys.cluster().registry.locate("A").unwrap(),
+            |o| o.as_any().downcast_ref::<Account>().unwrap().balance()
+        ), 8);
+        assert_eq!(sys.stats.commits.load(std::sync::atomic::Ordering::Relaxed), 8);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn cascading_abort_dooms_the_reader() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+
+        // T1 updates A and releases early (supremum reached), then aborts.
+        let mut t1 = sys.tx(NodeId(0));
+        let h1 = t1.updates("A", 1);
+        t1.begin().unwrap();
+        t1.call(h1, ops::deposit(900)).unwrap(); // released early (lv := pv1)
+
+        // T2 reads the early-released (dirty) state.
+        let mut t2 = sys.tx(NodeId(0));
+        let h2 = t2.accesses("A", Suprema::new(1, 0, 1));
+        t2.begin().unwrap();
+        assert_eq!(t2.call(h2, ops::balance()).unwrap().as_int(), 1000);
+
+        // T1 aborts ⇒ A restored; T2 is doomed and must fail at commit.
+        t1.abort().unwrap();
+        let r = t2.commit();
+        assert!(matches!(r, Err(TxError::ForcedAbort(_))), "got {r:?}");
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 100);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn irrevocable_transaction_waits_for_termination_not_release() {
+        let sys = sys_n(1);
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+
+        // T1 updates A and releases early, but does not terminate yet.
+        let mut t1 = sys.tx(NodeId(0));
+        let h1 = t1.updates("A", 1);
+        t1.begin().unwrap();
+        t1.call(h1, ops::deposit(1)).unwrap();
+        assert!(t1.proxy(h1).released());
+
+        // An irrevocable T2 must NOT accept the early release: its read
+        // blocks until T1 terminates.
+        let sys2 = Arc::clone(&sys);
+        let t2_thread = std::thread::spawn(move || {
+            let mut t2 = sys2.tx(NodeId(0)).irrevocable();
+            let h2 = t2.accesses("A", Suprema::new(1, 0, 1));
+            t2.begin().unwrap();
+            let v = t2.call(h2, ops::balance()).unwrap().as_int();
+            t2.commit().unwrap();
+            v
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!t2_thread.is_finished(), "irrevocable read must wait for ltv");
+        t1.commit().unwrap();
+        assert_eq!(t2_thread.join().unwrap(), 1);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn dropped_running_transaction_rolls_back() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(5)));
+        {
+            let mut tx = sys.tx(NodeId(0));
+            let h = tx.updates("A", 2);
+            tx.begin().unwrap();
+            tx.call(h, ops::deposit(10)).unwrap();
+            // dropped without commit/abort
+        }
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 5);
+        // A following transaction is not blocked.
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 1);
+        tx.run(|t| {
+            t.call(h, ops::deposit(1))?;
+            Ok(())
+        })
+        .unwrap();
+        sys.shutdown();
+    }
+}

@@ -1,0 +1,402 @@
+//! **SVA / Atomic RMI 1** — the paper's direct predecessor baseline (§4.1).
+//!
+//! The bare Supremum Versioning Algorithm [Wojciechowski, PPDP'05; Siek &
+//! Wojciechowski, IJPP'16]: the same `pv`/`lv`/`ltv` counters and access /
+//! commit conditions as OptSVA-CF, but **operation-type agnostic**:
+//!
+//!   * one *total* supremum per object (reads+writes+updates collapsed);
+//!   * every operation — even a pure write — waits at the access condition
+//!     and executes in place on the live object;
+//!   * no copy/log buffers (except the abort checkpoint), no read-only
+//!     optimization, no asynchronous release;
+//!   * early release happens only when the total call count reaches the
+//!     supremum (or at commit).
+//!
+//! Because SVA perceives every operation as a potential conflict, it
+//! serializes where OptSVA-CF parallelizes — this gap is exactly what the
+//! paper's evaluation measures (Atomic RMI vs Atomic RMI 2, Figs 10–12).
+
+use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::buffers::CopyBuffer;
+use crate::cluster::{Cluster, NodeId, Oid};
+use crate::object::{OpCall, SharedObject, Value};
+use crate::versioning::{acquire_start_locks, ObjectCc};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// A hosted object under SVA control.
+struct Slot {
+    oid: Oid,
+    cc: ObjectCc,
+    object: Mutex<Box<dyn SharedObject>>,
+    crashed: AtomicBool,
+}
+
+/// The Atomic RMI 1 system.
+pub struct AtomicRmi1 {
+    cluster: Arc<Cluster>,
+    slots: Vec<RwLock<Vec<Arc<Slot>>>>,
+    pub commits: AtomicU64,
+    pub manual_aborts: AtomicU64,
+    pub forced_aborts: AtomicU64,
+    wait_timeout: Option<Duration>,
+}
+
+impl AtomicRmi1 {
+    pub fn new(cluster: Arc<Cluster>) -> Arc<Self> {
+        let slots = cluster.node_ids().map(|_| RwLock::new(Vec::new())).collect();
+        Arc::new(AtomicRmi1 {
+            cluster,
+            slots,
+            commits: AtomicU64::new(0),
+            manual_aborts: AtomicU64::new(0),
+            forced_aborts: AtomicU64::new(0),
+            wait_timeout: Some(Duration::from_secs(60)),
+        })
+    }
+
+    /// Host `object` on `node` under `name`.
+    pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
+        let mut slots = self.slots[node.0 as usize].write().unwrap();
+        let oid = Oid::new(node, slots.len() as u32);
+        slots.push(Arc::new(Slot {
+            oid,
+            cc: ObjectCc::new(),
+            object: Mutex::new(object),
+            crashed: AtomicBool::new(false),
+        }));
+        drop(slots);
+        self.cluster.registry.bind(name, oid);
+        oid
+    }
+
+    fn slot(&self, oid: Oid) -> Arc<Slot> {
+        let slots = self.slots[oid.node.0 as usize].read().unwrap();
+        Arc::clone(&slots[oid.index as usize])
+    }
+
+    /// Peek at an object's state (non-transactional test helper).
+    pub fn with_object<R>(&self, oid: Oid, f: impl FnOnce(&dyn SharedObject) -> R) -> R {
+        let slot = self.slot(oid);
+        let obj = slot.object.lock().unwrap();
+        f(obj.as_ref())
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    /// Begin a transaction from `client`.
+    pub fn tx(self: &Arc<Self>, client: NodeId) -> SvaTransaction {
+        SvaTransaction {
+            sys: Arc::clone(self),
+            client,
+            decls: Vec::new(),
+            objs: Vec::new(),
+            phase: Phase::Preamble,
+        }
+    }
+}
+
+#[derive(PartialEq, Eq)]
+enum Phase {
+    Preamble,
+    Running,
+    Done,
+}
+
+/// Per-object transaction state: total supremum, call counter, checkpoint.
+struct TxObj {
+    slot: Arc<Slot>,
+    pv: u64,
+    ub: u64,
+    cc_count: u64,
+    accessed: bool,
+    released: bool,
+    modified: bool,
+    st: Option<CopyBuffer>,
+    st_epoch: u64,
+}
+
+/// An SVA transaction: agnostic versioning with a single total supremum.
+pub struct SvaTransaction {
+    sys: Arc<AtomicRmi1>,
+    client: NodeId,
+    decls: Vec<(String, u64)>,
+    objs: Vec<TxObj>,
+    phase: Phase,
+}
+
+impl SvaTransaction {
+    /// Preamble: declare access with a total supremum (`u64::MAX` if
+    /// unknown). SVA has no per-mode bounds.
+    pub fn accesses(&mut self, name: &str, ub: u64) -> ObjHandle {
+        assert!(self.phase == Phase::Preamble);
+        self.decls.push((name.to_string(), ub));
+        ObjHandle(self.decls.len() - 1)
+    }
+
+    /// Atomically acquire private versions for the whole access set.
+    pub fn begin(&mut self) -> Result<(), TxError> {
+        assert!(self.phase == Phase::Preamble);
+        let cluster = Arc::clone(&self.sys.cluster);
+        let mut resolved = Vec::with_capacity(self.decls.len());
+        for (name, ub) in &self.decls {
+            let oid = cluster
+                .registry
+                .locate(name)
+                .ok_or_else(|| TxError::NotDeclared(name.clone()))?;
+            resolved.push((oid, *ub));
+        }
+        let mut order: Vec<usize> = (0..resolved.len()).collect();
+        order.sort_by_key(|&i| resolved[i].0);
+        let slots: Vec<_> = order.iter().map(|&i| self.sys.slot(resolved[i].0)).collect();
+        let lock_view: Vec<_> = order
+            .iter()
+            .zip(&slots)
+            .map(|(&i, s)| (resolved[i].0, &s.cc))
+            .collect();
+        let client = self.client;
+        let pvs = acquire_start_locks(&lock_view, |oid| {
+            cluster.rpc(client, oid.node, 24, || ((), 16));
+        });
+        let mut objs: Vec<Option<TxObj>> = (0..resolved.len()).map(|_| None).collect();
+        for (pos, &i) in order.iter().enumerate() {
+            objs[i] = Some(TxObj {
+                slot: Arc::clone(&slots[pos]),
+                pv: pvs[pos],
+                ub: resolved[i].1,
+                cc_count: 0,
+                accessed: false,
+                released: false,
+                modified: false,
+                st: None,
+                st_epoch: 0,
+            });
+        }
+        self.objs = objs.into_iter().map(Option::unwrap).collect();
+        self.phase = Phase::Running;
+        Ok(())
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.sys.wait_timeout.map(|t| Instant::now() + t)
+    }
+
+    /// Execute one operation: wait at the access condition (first call),
+    /// checkpoint, run in place, release at the supremum.
+    fn invoke(&mut self, h: ObjHandle, call: &OpCall) -> Result<Value, TxError> {
+        if self.phase != Phase::Running {
+            return Err(TxError::Completed);
+        }
+        let o = &mut self.objs[h.0];
+        if o.slot.crashed.load(Ordering::Acquire) {
+            return Err(TxError::ObjectCrashed(o.slot.oid));
+        }
+        o.cc_count += 1;
+        if o.cc_count > o.ub {
+            return Err(TxError::SupremaExceeded {
+                oid: o.slot.oid,
+                mode: "any",
+                count: o.cc_count,
+                bound: o.ub,
+            });
+        }
+        let deadline = self.sys.wait_timeout.map(|t| Instant::now() + t);
+        if !o.accessed {
+            o.slot.cc.wait_access(o.pv, deadline)?;
+            o.accessed = true;
+        }
+        if o.slot.cc.doomed(o.pv) {
+            return Err(TxError::ForcedAbort(format!(
+                "object {} invalidated",
+                o.slot.oid
+            )));
+        }
+        let mut obj = o.slot.object.lock().unwrap();
+        // Re-check invalidation under the object lock (an earlier abort's
+        // mark + restore is atomic under this lock).
+        if o.slot.cc.doomed(o.pv) {
+            return Err(TxError::ForcedAbort(format!(
+                "object {} invalidated",
+                o.slot.oid
+            )));
+        }
+        if o.st.is_none() {
+            o.st_epoch = o.slot.cc.epoch();
+            o.st = Some(CopyBuffer::capture(obj.as_ref()));
+        }
+        let v = obj.invoke(call)?;
+        o.modified = true; // agnostic: every call may have modified state
+        if o.cc_count == o.ub {
+            drop(obj);
+            o.slot.cc.release(o.pv);
+            o.released = true;
+        }
+        Ok(v)
+    }
+
+    /// Commit: wait the commit condition everywhere, check invalidation,
+    /// release and terminate.
+    pub fn commit(&mut self) -> Result<(), TxError> {
+        assert!(self.phase == Phase::Running);
+        let cluster = Arc::clone(&self.sys.cluster);
+        let client = self.client;
+        let deadline = self.deadline();
+        for o in &self.objs {
+            cluster.rpc(client, o.slot.oid.node, 24, || {
+                (o.slot.cc.wait_commit_cond(o.pv, deadline), 16)
+            })?;
+        }
+        let doomed = self.objs.iter().any(|o| o.slot.cc.doomed(o.pv));
+        if doomed {
+            self.rollback_all();
+            self.phase = Phase::Done;
+            self.sys.forced_aborts.fetch_add(1, Ordering::Relaxed);
+            return Err(TxError::ForcedAbort("invalidated at commit".into()));
+        }
+        for o in &mut self.objs {
+            if !o.released {
+                o.slot.cc.release(o.pv);
+                o.released = true;
+            }
+        }
+        for o in &self.objs {
+            o.slot.cc.terminate(o.pv);
+        }
+        self.phase = Phase::Done;
+        self.sys.commits.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Manual abort: restore checkpoints (oldest aborter wins), release,
+    /// terminate.
+    pub fn abort(&mut self) -> Result<(), TxError> {
+        assert!(self.phase == Phase::Running);
+        let cluster = Arc::clone(&self.sys.cluster);
+        let client = self.client;
+        let deadline = self.deadline();
+        for o in &self.objs {
+            let _ = cluster.rpc(client, o.slot.oid.node, 24, || {
+                (o.slot.cc.wait_commit_cond(o.pv, deadline), 16)
+            });
+        }
+        self.rollback_all();
+        self.phase = Phase::Done;
+        self.sys.manual_aborts.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn rollback_all(&mut self) {
+        for o in &mut self.objs {
+            let mut obj = o.slot.object.lock().unwrap();
+            if o.modified {
+                o.slot.cc.mark_invalid(o.pv);
+                let should_restore =
+                    o.st.is_some() && o.st_epoch == o.slot.cc.epoch();
+                if should_restore {
+                    if let Some(st) = &o.st {
+                        st.restore_into(obj.as_mut());
+                        o.slot.cc.note_restored();
+                    }
+                }
+            }
+            drop(obj);
+            if !o.released {
+                o.slot.cc.release(o.pv);
+                o.released = true;
+            }
+            o.slot.cc.terminate(o.pv);
+        }
+    }
+
+    fn ops(&self) -> u64 {
+        self.objs.iter().map(|o| o.cc_count).sum()
+    }
+}
+
+impl TxCtx for SvaTransaction {
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+        let (node, req) = {
+            let o = &self.objs[h.0];
+            (o.slot.oid.node, call.wire_size())
+        };
+        let client = self.client;
+        let cluster = Arc::clone(&self.sys.cluster);
+        // Pay the RMI round trip; the handler runs at the object's home.
+        cluster.rpc(client, node, req, || {
+            let r = self.invoke(h, &call);
+            let resp = match &r {
+                Ok(v) => v.wire_size(),
+                Err(_) => 16,
+            };
+            (r, resp)
+        })
+    }
+
+    fn client(&self) -> NodeId {
+        self.client
+    }
+}
+
+impl Drop for SvaTransaction {
+    fn drop(&mut self) {
+        if self.phase == Phase::Running {
+            let _ = self.abort();
+        }
+    }
+}
+
+impl Dtm for Arc<AtomicRmi1> {
+    fn framework_name(&self) -> &'static str {
+        "atomic-rmi (SVA)"
+    }
+
+    fn run(
+        &self,
+        client: NodeId,
+        decls: &[AccessDecl],
+        _irrevocable: bool, // SVA has no irrevocable mode; versioning is
+        // already abort-free absent manual aborts
+        body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError> {
+        let mut attempts = 0u64;
+        loop {
+            attempts += 1;
+            let mut tx = self.tx(client);
+            for d in decls {
+                // SVA is operation-agnostic: collapse per-mode suprema.
+                tx.accesses(&d.name, d.suprema.total());
+            }
+            tx.begin()?;
+            let r = body(&mut tx);
+            let outcome = match r {
+                Ok(()) => {
+                    let ops = tx.ops();
+                    tx.commit().map(|()| TxStats { ops, attempts })
+                }
+                Err(e) => {
+                    let _ = tx.abort();
+                    if matches!(e, TxError::ManualAbort | TxError::Retry) {
+                        self.manual_aborts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e)
+                }
+            };
+            match outcome {
+                Ok(stats) => return Ok(stats),
+                Err(e) if e.is_retryable() && attempts < 1000 => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn aborts(&self) -> u64 {
+        self.manual_aborts.load(Ordering::Relaxed) + self.forced_aborts.load(Ordering::Relaxed)
+    }
+
+    fn commits(&self) -> u64 {
+        self.commits.load(Ordering::Relaxed)
+    }
+}

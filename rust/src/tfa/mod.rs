@@ -1,0 +1,444 @@
+//! **TFA — the HyFlow2 stand-in** (paper §4.1, [Saad & Ravindran,
+//! SBAC-PAD'12; Turcu et al., PPPJ'13]).
+//!
+//! An optimistic, *data-flow* DTM implementing the Transaction Forwarding
+//! Algorithm in the same simulated cluster as the pessimistic frameworks —
+//! a fairer comparison than measuring across runtimes (the paper compared
+//! its Java system against HyFlow2's Scala runtime).
+//!
+//! Mechanics reproduced from the TFA papers:
+//!
+//!   * **node-local clocks** (`lc`), piggybacked on every message;
+//!   * each object carries the **commit version** of its last writer;
+//!   * on first access a transaction **fetches the whole object** to the
+//!     client (data-flow: state migrates; the network pays `state_size`);
+//!   * if the fetched version exceeds the transaction's start clock, the
+//!     transaction **forwards** its clock after **revalidating** its read
+//!     set — failure means an abort + retry;
+//!   * all operations run on the **local copies**; writes are lazy
+//!     (write-back);
+//!   * commit: acquire per-object try-locks on the write set in global
+//!     `Oid` order (fail ⇒ abort), revalidate the read set, bump the home
+//!     clocks, write back, unlock.
+//!
+//! TFA is opaque but has no provision for irrevocable operations: aborted
+//! transactions re-execute their bodies (Fig 13 counts how often).
+
+use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::cluster::{Cluster, NodeId, Oid};
+use crate::locks::{DistRwLock, LockMode};
+use crate::object::{OpCall, SharedObject, Value};
+use crate::util::prng::Prng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// A hosted object: live state + commit version + commit lock.
+struct Slot {
+    oid: Oid,
+    version: AtomicU64,
+    lock: DistRwLock,
+    object: Mutex<Box<dyn SharedObject>>,
+}
+
+/// The TFA system.
+pub struct TfaSystem {
+    cluster: Arc<Cluster>,
+    slots: Vec<RwLock<Vec<Arc<Slot>>>>,
+    /// Node-local clocks.
+    clocks: Vec<AtomicU64>,
+    pub commit_count: AtomicU64,
+    pub abort_count: AtomicU64,
+    /// Base backoff between retries.
+    pub backoff: Duration,
+}
+
+impl TfaSystem {
+    pub fn new(cluster: Arc<Cluster>) -> Arc<Self> {
+        let slots = cluster.node_ids().map(|_| RwLock::new(Vec::new())).collect();
+        let clocks = cluster.node_ids().map(|_| AtomicU64::new(0)).collect();
+        Arc::new(TfaSystem {
+            cluster,
+            slots,
+            clocks,
+            commit_count: AtomicU64::new(0),
+            abort_count: AtomicU64::new(0),
+            backoff: Duration::from_micros(200),
+        })
+    }
+
+    pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
+        let mut slots = self.slots[node.0 as usize].write().unwrap();
+        let oid = Oid::new(node, slots.len() as u32);
+        slots.push(Arc::new(Slot {
+            oid,
+            version: AtomicU64::new(0),
+            lock: DistRwLock::new(),
+            object: Mutex::new(object),
+        }));
+        drop(slots);
+        self.cluster.registry.bind(name, oid);
+        oid
+    }
+
+    fn slot(&self, oid: Oid) -> Arc<Slot> {
+        let slots = self.slots[oid.node.0 as usize].read().unwrap();
+        Arc::clone(&slots[oid.index as usize])
+    }
+
+    /// Peek at an object's state (non-transactional test helper).
+    pub fn with_object<R>(&self, oid: Oid, f: impl FnOnce(&dyn SharedObject) -> R) -> R {
+        let slot = self.slot(oid);
+        let obj = slot.object.lock().unwrap();
+        f(obj.as_ref())
+    }
+
+    pub fn cluster(&self) -> &Arc<Cluster> {
+        &self.cluster
+    }
+
+    fn clock(&self, node: NodeId) -> &AtomicU64 {
+        &self.clocks[node.0 as usize]
+    }
+}
+
+/// A fetched local copy (data-flow).
+struct LocalCopy {
+    slot: Arc<Slot>,
+    copy: Box<dyn SharedObject>,
+    /// Version observed at fetch time.
+    read_version: u64,
+    dirty: bool,
+    ops: u64,
+}
+
+/// One optimistic execution attempt.
+struct TfaTx<'a> {
+    sys: &'a TfaSystem,
+    client: NodeId,
+    /// Transaction start clock (forwarded on demand).
+    wv: u64,
+    /// Declared handles, lazily fetched.
+    oids: Vec<Oid>,
+    copies: Vec<Option<LocalCopy>>,
+}
+
+impl TfaTx<'_> {
+    /// Validate the read set: every fetched object's home version must
+    /// still be what we read. One RPC per fetched object.
+    fn validate(&self) -> Result<(), TxError> {
+        for c in self.copies.iter().flatten() {
+            let ok = self.sys.cluster.rpc(self.client, c.slot.oid.node, 16, || {
+                (c.slot.version.load(Ordering::Acquire) == c.read_version, 9)
+            });
+            if !ok {
+                return Err(TxError::Conflict(format!(
+                    "read of {} (v{}) invalidated",
+                    c.slot.oid, c.read_version
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Fetch `h`'s object to the client if not yet local, applying
+    /// transaction forwarding when the object is newer than our clock.
+    fn ensure_local(&mut self, h: ObjHandle) -> Result<(), TxError> {
+        if self.copies[h.0].is_some() {
+            return Ok(());
+        }
+        let oid = self.oids[h.0];
+        let slot = self.sys.slot(oid);
+        // Data-flow: the whole object state crosses the network.
+        let (copy, rv) = self.sys.cluster.rpc(self.client, oid.node, 24, || {
+            let obj = slot.object.lock().unwrap();
+            let snap = obj.snapshot();
+            let size = obj.state_size();
+            ((snap, slot.version.load(Ordering::Acquire)), size + 9)
+        });
+        if rv > self.wv {
+            // Transaction forwarding: revalidate everything read so far,
+            // then advance our clock to the object's version.
+            self.validate()?;
+            self.wv = rv;
+        }
+        self.copies[h.0] = Some(LocalCopy { slot, copy, read_version: rv, dirty: false, ops: 0 });
+        Ok(())
+    }
+
+    /// Commit: lock the write set (try-locks, global order), revalidate,
+    /// bump clocks, write back, unlock.
+    fn commit(&mut self) -> Result<u64, TxError> {
+        // Gather the write set in Oid order.
+        let mut write_idx: Vec<usize> = self
+            .copies
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.as_ref().is_some_and(|c| c.dirty))
+            .map(|(i, _)| i)
+            .collect();
+        write_idx.sort_by_key(|&i| self.oids[i]);
+
+        let mut locked: Vec<usize> = Vec::with_capacity(write_idx.len());
+        for &i in &write_idx {
+            let c = self.copies[i].as_ref().unwrap();
+            let ok = self.sys.cluster.rpc(self.client, c.slot.oid.node, 16, || {
+                (c.slot.lock.try_lock(LockMode::Exclusive), 2)
+            });
+            if !ok {
+                for &j in &locked {
+                    let cj = self.copies[j].as_ref().unwrap();
+                    cj.slot.lock.unlock(LockMode::Exclusive);
+                }
+                return Err(TxError::Conflict(format!(
+                    "commit lock on {} contended",
+                    c.slot.oid
+                )));
+            }
+            locked.push(i);
+        }
+
+        if let Err(e) = self.validate() {
+            for &j in &locked {
+                let cj = self.copies[j].as_ref().unwrap();
+                cj.slot.lock.unlock(LockMode::Exclusive);
+            }
+            return Err(e);
+        }
+
+        // Write back: new version = home clock + 1 (per home node).
+        for &i in &write_idx {
+            let c = self.copies[i].as_mut().unwrap();
+            let node = c.slot.oid.node;
+            let clock = self.sys.clock(node);
+            let slot = Arc::clone(&c.slot);
+            let copy_ref = &c.copy;
+            let size = copy_ref.state_size();
+            self.sys.cluster.rpc(self.client, node, size + 16, || {
+                let nv = clock.fetch_add(1, Ordering::AcqRel) + 1;
+                let mut obj = slot.object.lock().unwrap();
+                obj.restore(copy_ref.as_ref());
+                slot.version.store(nv, Ordering::Release);
+                slot.lock.unlock(LockMode::Exclusive);
+                ((), 9)
+            });
+        }
+        Ok(self.copies.iter().flatten().map(|c| c.ops).sum())
+    }
+}
+
+impl TxCtx for TfaTx<'_> {
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+        self.ensure_local(h)?;
+        let c = self.copies[h.0].as_mut().unwrap();
+        // All operations execute on the local copy — reads, writes and
+        // updates alike (the CF-vs-DF distinction the paper draws).
+        let mode = crate::object::mode_of(c.copy.as_ref(), call.method)?;
+        let v = c.copy.invoke(&call)?;
+        if mode != crate::object::Mode::Read {
+            c.dirty = true;
+        }
+        c.ops += 1;
+        Ok(v)
+    }
+
+    fn client(&self) -> NodeId {
+        self.client
+    }
+}
+
+impl Dtm for Arc<TfaSystem> {
+    fn framework_name(&self) -> &'static str {
+        "hyflow2 (TFA)"
+    }
+
+    fn run(
+        &self,
+        client: NodeId,
+        decls: &[AccessDecl],
+        _irrevocable: bool, // TFA has no irrevocable support (§4.1) — the
+        // body simply re-executes on abort
+        body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError> {
+        // Resolve names once.
+        let mut oids = Vec::with_capacity(decls.len());
+        for d in decls {
+            oids.push(
+                self.cluster
+                    .registry
+                    .locate(&d.name)
+                    .ok_or_else(|| TxError::NotDeclared(d.name.clone()))?,
+            );
+        }
+        let mut rng = Prng::seeded(
+            0x7FA0_5EED ^ (client.0 as u64) << 32 ^ self.commit_count.load(Ordering::Relaxed),
+        );
+        let mut attempts = 0u64;
+        loop {
+            attempts += 1;
+            let mut tx = TfaTx {
+                sys: self,
+                client,
+                wv: self.clock(client).load(Ordering::Acquire),
+                oids: oids.clone(),
+                copies: (0..oids.len()).map(|_| None).collect(),
+            };
+            let outcome = match body(&mut tx) {
+                Ok(()) => tx.commit(),
+                Err(e) => Err(e),
+            };
+            match outcome {
+                Ok(ops) => {
+                    self.commit_count.fetch_add(1, Ordering::Relaxed);
+                    return Ok(TxStats { ops, attempts });
+                }
+                Err(TxError::Conflict(_)) | Err(TxError::Retry) if attempts < 10_000 => {
+                    self.abort_count.fetch_add(1, Ordering::Relaxed);
+                    // Randomized exponential backoff, capped at 32× base.
+                    let factor = 1u64 << attempts.min(5);
+                    let jitter = rng.below(self.backoff.as_micros() as u64 * factor + 1);
+                    std::thread::sleep(Duration::from_micros(jitter));
+                    continue;
+                }
+                Err(e) => {
+                    self.abort_count.fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn aborts(&self) -> u64 {
+        self.abort_count.load(Ordering::Relaxed)
+    }
+
+    fn commits(&self) -> u64 {
+        self.commit_count.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::Suprema;
+    use crate::cluster::NetworkModel;
+    use crate::object::{account::ops, Account};
+
+    fn sys() -> Arc<TfaSystem> {
+        TfaSystem::new(Arc::new(Cluster::new(2, NetworkModel::instant())))
+    }
+
+    #[test]
+    fn transfer_commits_and_writes_back() {
+        let sys = sys();
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+        let b = sys.host(NodeId(1), "B", Box::new(Account::with_balance(0)));
+        let decls = vec![
+            AccessDecl::new("A", Suprema::unknown()),
+            AccessDecl::new("B", Suprema::unknown()),
+        ];
+        sys.run(NodeId(0), &decls, false, &mut |t| {
+            t.call(ObjHandle(0), ops::withdraw(25))?;
+            t.call(ObjHandle(1), ops::deposit(25))?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 75);
+        assert_eq!(sys.with_object(b, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 25);
+        // Versions advanced.
+        assert!(sys.slot(a).version.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn conflicting_writers_retry_until_serialized() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let decls = vec![AccessDecl::new("A", Suprema::unknown())];
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let sys = Arc::clone(&sys);
+            let decls = decls.clone();
+            handles.push(std::thread::spawn(move || {
+                sys.run(NodeId(0), &decls, false, &mut |t| {
+                    let v = t.call(ObjHandle(0), ops::balance())?.as_int();
+                    t.call(ObjHandle(0), ops::deposit(1))?;
+                    let _ = v;
+                    Ok(())
+                })
+                .unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let oid = sys.cluster().registry.locate("A").unwrap();
+        assert_eq!(
+            sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()),
+            8,
+            "lost update: optimistic validation failed to serialize"
+        );
+        assert_eq!(sys.commits(), 8);
+    }
+
+    #[test]
+    fn stale_read_forces_conflict() {
+        let sys = sys();
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let decls = vec![AccessDecl::new("A", Suprema::unknown())];
+
+        // A transaction reads A, then another commits a write to A before
+        // the first commits its own write ⇒ validation must fail once.
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let sys2 = Arc::clone(&sys);
+        let d2 = decls.clone();
+        let b2 = Arc::clone(&barrier);
+        let t = std::thread::spawn(move || {
+            let mut first = true;
+            sys2.run(NodeId(1), &d2, false, &mut |t| {
+                let _ = t.call(ObjHandle(0), ops::balance())?;
+                if first {
+                    first = false;
+                    b2.wait(); // let the interferer commit
+                    b2.wait();
+                }
+                t.call(ObjHandle(0), ops::deposit(10))?;
+                Ok(())
+            })
+            .unwrap()
+        });
+        barrier.wait();
+        sys.run(NodeId(0), &decls, false, &mut |t| {
+            t.call(ObjHandle(0), ops::deposit(1))?;
+            Ok(())
+        })
+        .unwrap();
+        barrier.wait();
+        let stats = t.join().unwrap();
+        assert!(stats.attempts >= 2, "expected a retry, got {}", stats.attempts);
+        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 11);
+        assert!(sys.aborts() >= 1);
+    }
+
+    #[test]
+    fn read_only_transactions_do_not_abort_each_other() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(5)));
+        let decls = vec![AccessDecl::new("A", Suprema::reads(1))];
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let sys = Arc::clone(&sys);
+            let decls = decls.clone();
+            handles.push(std::thread::spawn(move || {
+                sys.run(NodeId(0), &decls, false, &mut |t| {
+                    assert_eq!(t.call(ObjHandle(0), ops::balance())?.as_int(), 5);
+                    Ok(())
+                })
+                .unwrap()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap().attempts, 1);
+        }
+        assert_eq!(sys.aborts(), 0);
+    }
+}

@@ -1,0 +1,212 @@
+//! Latency histogram with logarithmic buckets (HdrHistogram-lite).
+//!
+//! Offline build has no external histogram crate; this gives ~5 % relative
+//! error quantiles over a microsecond..minutes range, merge support for
+//! per-thread recording, and zero allocation on the record path.
+
+use std::time::Duration;
+
+const SUB_BUCKET_BITS: u32 = 5; // 32 sub-buckets per octave → ≤ ~3 % error
+const SUB_BUCKETS: usize = 1 << SUB_BUCKET_BITS;
+const OCTAVES: usize = 40; // up to 2^40 µs ≈ 12.7 days
+
+/// Log-bucketed histogram of microsecond values.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    max: u64,
+    min: u64,
+    sum: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; OCTAVES * SUB_BUCKETS],
+            total: 0,
+            max: 0,
+            min: u64::MAX,
+            sum: 0,
+        }
+    }
+
+    fn bucket_of(value: u64) -> usize {
+        let v = value.max(1);
+        let octave = 63 - v.leading_zeros();
+        if octave < SUB_BUCKET_BITS {
+            return v as usize;
+        }
+        let shift = octave - SUB_BUCKET_BITS;
+        let sub = (v >> shift) as usize & (SUB_BUCKETS - 1);
+        ((octave - SUB_BUCKET_BITS + 1) as usize) * SUB_BUCKETS + sub
+    }
+
+    /// Lower edge of a bucket (inverse of `bucket_of` up to bucket width).
+    fn bucket_floor(idx: usize) -> u64 {
+        if idx < SUB_BUCKETS {
+            return idx as u64;
+        }
+        let octave = (idx / SUB_BUCKETS) as u32 + SUB_BUCKET_BITS - 1;
+        let sub = (idx % SUB_BUCKETS) as u64;
+        (1u64 << octave) | (sub << (octave - SUB_BUCKET_BITS))
+    }
+
+    /// Record one microsecond value.
+    pub fn record(&mut self, micros: u64) {
+        let idx = Self::bucket_of(micros).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.max = self.max.max(micros);
+        self.min = self.min.min(micros);
+        self.sum += micros as u128;
+    }
+
+    /// Record a `Duration`.
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_micros() as u64);
+    }
+
+    /// Merge another histogram into this one (per-thread aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+        self.sum += other.sum;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Quantile in `[0,1]`, returned as microseconds (bucket lower edge).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_floor(idx);
+            }
+        }
+        self.max
+    }
+
+    /// Compact single-line summary, e.g. for bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.0}us p50={}us p95={}us p99={}us max={}us",
+            self.total,
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.95),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn single_value() {
+        let mut h = Histogram::new();
+        h.record(1000);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.max(), 1000);
+        assert_eq!(h.min(), 1000);
+        // bucket resolution: p50 within ~3 % of 1000
+        let p50 = h.quantile(0.5);
+        assert!((960..=1000).contains(&p50), "p50={p50}");
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_close() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!((4500..=5200).contains(&p50), "p50={p50}");
+        assert!((9000..=9700).contains(&p95), "p95={p95}");
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for v in 0..1000u64 {
+            if v % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            c.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.quantile(0.9), c.quantile(0.9));
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn bucket_floor_roundtrip() {
+        for v in [1u64, 2, 31, 32, 33, 100, 1023, 1024, 123_456, 10_000_000] {
+            let idx = Histogram::bucket_of(v);
+            let floor = Histogram::bucket_floor(idx);
+            assert!(floor <= v, "floor {floor} > value {v}");
+            // width of bucket ≤ v / 16 for v ≥ 32
+            if v >= 32 {
+                assert!(v - floor <= v / 16, "v={v} floor={floor}");
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (the offline build has no `rand`,
+//! `hdrhistogram`, or `parking_lot`, so these are implemented in-repo).
+
+pub mod hist;
+pub mod prng;
+pub mod work;
+
+pub use hist::Histogram;
+pub use prng::Prng;
+pub use work::{busy_work_us, calibrate};

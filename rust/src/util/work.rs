@@ -1,0 +1,83 @@
+//! Calibrated synthetic work.
+//!
+//! Eigenbench operations take "around 3 ms" in the paper ("fairly long,
+//! which represents the complex computations"). We model operation cost
+//! two ways:
+//!   * `busy_work_us` — a calibrated spin that burns CPU (used when the
+//!     operation should contend for cores like a real computation);
+//!   * `std::thread::sleep` — used by the workload when simulating I/O- or
+//!     remote-compute-bound operations on the oversubscribed 1-core CI box,
+//!     where spinning would serialize everything and hide the algorithmic
+//!     parallelism the paper measures.
+//! The `ComputeObject` runs real XLA kernel work instead (see `runtime`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Iterations of the spin loop per microsecond, measured once.
+static ITERS_PER_US: AtomicU64 = AtomicU64::new(0);
+
+#[inline(never)]
+fn spin_chunk(iters: u64) -> u64 {
+    // A data-dependent loop the optimizer cannot elide or vectorize away.
+    let mut acc: u64 = 0x9E37_79B9_7F4A_7C15;
+    for i in 0..iters {
+        acc = acc.rotate_left(7) ^ i;
+        acc = acc.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    }
+    acc
+}
+
+/// Measure spin-loop speed. Called lazily by `busy_work_us`; call it
+/// eagerly from benchmark setup to keep calibration out of timed regions.
+pub fn calibrate() -> u64 {
+    let cached = ITERS_PER_US.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    // Time a fixed chunk, take the median of 5 runs for robustness.
+    let mut rates = [0u64; 5];
+    for r in rates.iter_mut() {
+        let iters = 2_000_000u64;
+        let t0 = Instant::now();
+        std::hint::black_box(spin_chunk(iters));
+        let us = t0.elapsed().as_micros().max(1) as u64;
+        *r = iters / us;
+    }
+    rates.sort();
+    let rate = rates[2].max(1);
+    ITERS_PER_US.store(rate, Ordering::Relaxed);
+    rate
+}
+
+/// Burn roughly `us` microseconds of CPU.
+pub fn busy_work_us(us: u64) {
+    let rate = calibrate();
+    std::hint::black_box(spin_chunk(rate.saturating_mul(us)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn calibrate_is_nonzero_and_cached() {
+        let a = calibrate();
+        let b = calibrate();
+        assert!(a > 0);
+        assert_eq!(a, b, "second call should hit the cache");
+    }
+
+    #[test]
+    fn busy_work_takes_roughly_the_requested_time() {
+        calibrate();
+        let t0 = Instant::now();
+        busy_work_us(2_000);
+        let took = t0.elapsed().as_micros() as u64;
+        // Only a lower bound is meaningful: on the oversubscribed 1-core
+        // test box, wall time under `cargo test`'s parallel load can be
+        // many times the requested CPU time.
+        assert!(took >= 500, "took {took}us, expected >= 500us");
+    }
+}

@@ -1,0 +1,406 @@
+//! Supremum-versioning concurrency control primitives (paper §2.1–§2.3).
+//!
+//! Every shared object carries a concurrency-control block ([`ObjectCc`])
+//! with three counters:
+//!
+//!   * `next_pv` — the per-object *version source*: transactions draw their
+//!     private versions `pv_i(x)` from it at start, atomically across the
+//!     whole access set (under per-object start locks taken in global
+//!     `Oid` order — this is what makes properties (a)–(d) of §2.1 hold);
+//!   * `lv`  — *local version*: the pv of the transaction that most
+//!     recently **released** the object (commit, abort, or early release);
+//!   * `ltv` — *local terminal version*: the pv of the transaction that
+//!     most recently **terminated** (committed or aborted).
+//!
+//! The **access condition** is `pv - 1 == lv`; the **commit (termination)
+//! condition** is `pv - 1 == ltv`. Both are awaited on the block's condvar.
+//!
+//! The block additionally tracks *invalidation marks* for cascading aborts
+//! (§2.3): an aborting transaction `T_i` marks the object with
+//! `(marker = pv_i, up_to = max pv granted access so far)`; any transaction
+//! with `marker < pv ≤ up_to` is doomed and must abort instead of
+//! committing. Marks are pruned once `ltv` passes `up_to`.
+
+pub mod startlock;
+
+pub use startlock::acquire_start_locks;
+
+use crate::executor::Signal;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+#[cfg(test)]
+use std::time::Duration;
+
+/// Error returned when a versioning wait exceeds its deadline. Used by the
+/// fault-tolerance layer (§3.4) to suspect crashed transactions, and by
+/// tests to detect deadlock regressions.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("versioning wait timed out after {waited_ms} ms ({what})")]
+pub struct WaitTimeout {
+    pub what: &'static str,
+    pub waited_ms: u64,
+}
+
+/// An invalidation mark left by an aborted transaction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InvalidMark {
+    /// pv of the transaction that aborted (and restored the state).
+    pub marker_pv: u64,
+    /// Highest pv that had been granted access when the mark was placed;
+    /// every pv in `(marker_pv, up_to]` observed potentially-invalid state.
+    pub up_to: u64,
+}
+
+#[derive(Debug, Default)]
+struct CcState {
+    next_pv: u64,
+    lv: u64,
+    ltv: u64,
+    /// Highest pv that passed the access condition (or buffered the state).
+    max_granted: u64,
+    marks: Vec<InvalidMark>,
+    /// Restore epoch: bumped every time an aborter reverts the object's
+    /// state. A checkpoint taken at epoch `e` is from the valid lineage
+    /// iff the epoch is still `e` when its owner aborts.
+    epoch: u64,
+}
+
+/// Per-object concurrency-control block.
+pub struct ObjectCc {
+    state: Mutex<CcState>,
+    cond: Condvar,
+    /// Start-lock for atomic pv acquisition (never held while waiting on
+    /// conditions; see `startlock`).
+    pub start_lock: Mutex<()>,
+    /// Executor signals to poke whenever `lv`/`ltv` change (§3.3).
+    watchers: Mutex<Vec<Arc<Signal>>>,
+}
+
+impl Default for ObjectCc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObjectCc {
+    pub fn new() -> Self {
+        ObjectCc {
+            state: Mutex::new(CcState::default()),
+            cond: Condvar::new(),
+            start_lock: Mutex::new(()),
+            watchers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Register an executor signal to be poked on counter changes.
+    pub fn watch(&self, signal: Arc<Signal>) {
+        self.watchers.lock().unwrap().push(signal);
+    }
+
+    fn poke_watchers(&self) {
+        for w in self.watchers.lock().unwrap().iter() {
+            w.poke();
+        }
+    }
+
+    /// Draw the next private version. Caller must hold this object's
+    /// start lock (enforced structurally by [`acquire_start_locks`]).
+    pub fn assign_pv(&self) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        s.next_pv += 1;
+        s.next_pv
+    }
+
+    /// Current `(lv, ltv)` snapshot (diagnostics, executor conditions).
+    pub fn versions(&self) -> (u64, u64) {
+        let s = self.state.lock().unwrap();
+        (s.lv, s.ltv)
+    }
+
+    /// Non-blocking access-condition check: `pv - 1 == lv`.
+    pub fn access_ready(&self, pv: u64) -> bool {
+        self.state.lock().unwrap().lv == pv - 1
+    }
+
+    /// Non-blocking commit-condition check: `pv - 1 == ltv`.
+    pub fn commit_ready(&self, pv: u64) -> bool {
+        self.state.lock().unwrap().ltv == pv - 1
+    }
+
+    /// Block until the access condition holds, then record the grant in
+    /// `max_granted`. `deadline` of `None` waits forever.
+    pub fn wait_access(&self, pv: u64, deadline: Option<Instant>) -> Result<(), WaitTimeout> {
+        let started = Instant::now();
+        let mut s = self.state.lock().unwrap();
+        while s.lv != pv - 1 {
+            s = self.wait_step(s, deadline, started, "access condition")?;
+        }
+        s.max_granted = s.max_granted.max(pv);
+        Ok(())
+    }
+
+    /// Block until the commit/termination condition holds. Used by commit
+    /// and abort, and — for *irrevocable* transactions (§2.4) — in place
+    /// of every access-condition wait, so they never observe early-released
+    /// state. On success also records the grant.
+    pub fn wait_commit_cond(&self, pv: u64, deadline: Option<Instant>) -> Result<(), WaitTimeout> {
+        let started = Instant::now();
+        let mut s = self.state.lock().unwrap();
+        while s.ltv != pv - 1 {
+            s = self.wait_step(s, deadline, started, "commit condition")?;
+        }
+        s.max_granted = s.max_granted.max(pv);
+        Ok(())
+    }
+
+    fn wait_step<'a>(
+        &'a self,
+        guard: std::sync::MutexGuard<'a, CcState>,
+        deadline: Option<Instant>,
+        started: Instant,
+        what: &'static str,
+    ) -> Result<std::sync::MutexGuard<'a, CcState>, WaitTimeout> {
+        match deadline {
+            None => Ok(self.cond.wait(guard).unwrap()),
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return Err(WaitTimeout {
+                        what,
+                        waited_ms: started.elapsed().as_millis() as u64,
+                    });
+                }
+                let (g, timeout) = self
+                    .cond
+                    .wait_timeout(guard, d - now)
+                    .unwrap();
+                if timeout.timed_out() && g.lv == u64::MAX {
+                    // unreachable; keeps the borrow checker simple
+                }
+                Ok(g)
+            }
+        }
+    }
+
+    /// Release the object on behalf of `pv`: set `lv = pv` (early release,
+    /// commit, or abort). Idempotent: later calls with the same pv no-op.
+    pub fn release(&self, pv: u64) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(
+            s.lv == pv - 1 || s.lv >= pv,
+            "release out of order: lv={} pv={}",
+            s.lv,
+            pv
+        );
+        if s.lv < pv {
+            s.lv = pv;
+            self.cond.notify_all();
+            drop(s);
+            self.poke_watchers();
+        }
+    }
+
+    /// Terminate on behalf of `pv`: set `ltv = pv` and prune stale marks.
+    pub fn terminate(&self, pv: u64) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(
+            s.ltv == pv - 1 || s.ltv >= pv,
+            "terminate out of order: ltv={} pv={}",
+            s.ltv,
+            pv
+        );
+        if s.ltv < pv {
+            s.ltv = pv;
+            let ltv = s.ltv;
+            s.marks.retain(|m| m.up_to > ltv);
+            self.cond.notify_all();
+            drop(s);
+            self.poke_watchers();
+        }
+    }
+
+    /// Record that `pv` observed the object without passing through
+    /// `wait_access` (asynchronous buffering path): update `max_granted`.
+    pub fn note_granted(&self, pv: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.max_granted = s.max_granted.max(pv);
+    }
+
+    /// Place an invalidation mark for an aborting transaction: every pv in
+    /// `(marker_pv, max_granted]` observed potentially-invalid state and is
+    /// doomed (§2.3).
+    pub fn mark_invalid(&self, marker_pv: u64) {
+        let mut s = self.state.lock().unwrap();
+        let up_to = s.max_granted;
+        if up_to > marker_pv {
+            s.marks.push(InvalidMark { marker_pv, up_to });
+        }
+    }
+
+    /// Current restore epoch. Sampled (under the object's lock) when a
+    /// checkpoint is captured; compared at abort time to decide whether the
+    /// checkpoint is from the valid lineage (§2.8.6: restore "unless some
+    /// other transaction that previously aborted already restored it to an
+    /// older version" — an intervening restore means a preceding aborter
+    /// already reverted past our checkpoint, which captured
+    /// since-invalidated state).
+    pub fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Record that an aborter restored the object's state.
+    pub fn note_restored(&self) {
+        self.state.lock().unwrap().epoch += 1;
+    }
+
+    /// Is the transaction holding `pv` doomed by an invalidation mark?
+    pub fn doomed(&self, pv: u64) -> bool {
+        let s = self.state.lock().unwrap();
+        s.marks
+            .iter()
+            .any(|m| m.marker_pv < pv && pv <= m.up_to)
+    }
+
+    /// Active marks (diagnostics/tests).
+    pub fn marks(&self) -> Vec<InvalidMark> {
+        self.state.lock().unwrap().marks.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn pv_assignment_is_sequential() {
+        let cc = ObjectCc::new();
+        assert_eq!(cc.assign_pv(), 1);
+        assert_eq!(cc.assign_pv(), 2);
+        assert_eq!(cc.assign_pv(), 3);
+    }
+
+    #[test]
+    fn access_condition_gates_in_pv_order() {
+        let cc = Arc::new(ObjectCc::new());
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        assert!(cc.access_ready(pv1));
+        assert!(!cc.access_ready(pv2));
+
+        let cc2 = Arc::clone(&cc);
+        let waiter = thread::spawn(move || {
+            cc2.wait_access(pv2, Some(Instant::now() + Duration::from_secs(5)))
+                .expect("pv2 should eventually be granted");
+        });
+        thread::sleep(Duration::from_millis(20));
+        cc.wait_access(pv1, None).unwrap();
+        cc.release(pv1);
+        waiter.join().unwrap();
+        assert!(cc.access_ready(pv2));
+    }
+
+    #[test]
+    fn commit_condition_follows_terminate_not_release() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        cc.release(pv1); // early release: lv=1 but ltv=0
+        assert!(cc.access_ready(pv2));
+        assert!(!cc.commit_ready(pv2));
+        cc.terminate(pv1);
+        assert!(cc.commit_ready(pv2));
+    }
+
+    #[test]
+    fn wait_times_out() {
+        let cc = ObjectCc::new();
+        let _pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        let r = cc.wait_access(pv2, Some(Instant::now() + Duration::from_millis(30)));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn release_is_idempotent() {
+        let cc = ObjectCc::new();
+        let pv = cc.assign_pv();
+        cc.release(pv);
+        cc.release(pv); // second release must not panic or regress lv
+        assert_eq!(cc.versions().0, pv);
+    }
+
+    #[test]
+    fn invalidation_dooms_only_the_granted_window() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        let pv3 = cc.assign_pv();
+        // T1 accesses and releases early; T2 accesses.
+        cc.wait_access(pv1, None).unwrap();
+        cc.release(pv1);
+        cc.wait_access(pv2, None).unwrap();
+        // T1 aborts: marks invalid. T2 (already granted) is doomed; T3 is not.
+        cc.mark_invalid(pv1);
+        assert!(cc.doomed(pv2));
+        assert!(!cc.doomed(pv3), "pv3 never observed invalid state");
+        assert!(!cc.doomed(pv1), "the marker itself is not doomed");
+    }
+
+    #[test]
+    fn marks_prune_after_doomed_window_terminates() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        cc.wait_access(pv1, None).unwrap();
+        cc.release(pv1);
+        cc.wait_access(pv2, None).unwrap();
+        cc.mark_invalid(pv1);
+        assert_eq!(cc.marks().len(), 1);
+        cc.terminate(pv1);
+        cc.release(pv2);
+        cc.terminate(pv2); // ltv reaches up_to → mark pruned
+        assert!(cc.marks().is_empty());
+    }
+
+    #[test]
+    fn restore_epoch_distinguishes_lineages() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        cc.wait_access(pv1, None).unwrap();
+        cc.release(pv1);
+        // T2 checkpoints while T1's (dirty) state is visible.
+        cc.wait_access(pv2, None).unwrap();
+        let t2_epoch = cc.epoch();
+        // T1 aborts: restores, bumping the epoch.
+        cc.mark_invalid(pv1);
+        cc.note_restored();
+        // T2's checkpoint is from the invalidated lineage: must not restore.
+        assert_ne!(t2_epoch, cc.epoch());
+        // A fresh transaction checkpointing *after* the restore holds a
+        // valid-lineage checkpoint and restores on abort.
+        let pv3 = cc.assign_pv();
+        cc.terminate(pv1);
+        cc.release(pv2);
+        cc.wait_access(pv3, None).unwrap();
+        assert_eq!(cc.epoch(), cc.epoch());
+        let t3_epoch = cc.epoch();
+        assert_eq!(t3_epoch, cc.epoch(), "no restore since T3's checkpoint");
+    }
+
+    #[test]
+    fn watchers_poked_on_release_and_terminate() {
+        let cc = ObjectCc::new();
+        let sig = Arc::new(Signal::new());
+        cc.watch(Arc::clone(&sig));
+        let g0 = sig.generation();
+        let pv = cc.assign_pv();
+        cc.release(pv);
+        assert!(sig.generation() > g0);
+        let g1 = sig.generation();
+        cc.terminate(pv);
+        assert!(sig.generation() > g1);
+    }
+}

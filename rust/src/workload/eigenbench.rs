@@ -1,0 +1,405 @@
+//! The distributed Eigenbench driver (paper §4.2–§4.3).
+//!
+//! Builds the hot/mild/cold arrays over a simulated cluster, spawns client
+//! threads, and drives any [`Framework`] through the configured mix of
+//! transactional reads and writes. Reports throughput in *operations on
+//! shared data per second* — the paper's y-axis.
+
+use super::frameworks::FrameworkKind;
+use crate::api::{AccessDecl, ObjHandle, Suprema, TxError};
+use crate::cluster::{Cluster, NetworkModel};
+use crate::object::{OpCall, RegisterObject};
+use crate::util::hist::Histogram;
+use crate::util::prng::Prng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Eigenbench scenario parameters. Defaults are the paper's Fig 10 setup
+/// scaled to a single evaluation box (see DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct EigenbenchParams {
+    pub kind: FrameworkKind,
+    /// Cluster size (paper: 16).
+    pub nodes: u16,
+    /// Client threads per node (paper: 4–64).
+    pub clients_per_node: u32,
+    /// Hot-array objects per node (paper: 5 or 10).
+    pub arrays_per_node: u32,
+    /// Consecutive transactions per client (paper: 10).
+    pub txns_per_client: u32,
+    /// Operations on the hot array per transaction (paper: 10).
+    pub hot_ops: u32,
+    /// Operations on the client's own mild array per transaction
+    /// (paper: 0 in Figs 10–11, 10 in Fig 12).
+    pub mild_ops: u32,
+    /// Non-transactional cold-array operations per transaction.
+    pub cold_ops: u32,
+    /// Percentage of reads among shared-array operations (90 / 50 / 10
+    /// for the paper's 9÷1, 5÷5, 1÷9 ratios).
+    pub read_pct: u8,
+    /// Probability of re-selecting an object from the client's history.
+    pub locality: f64,
+    /// Length of the per-client access history (paper: 5).
+    pub history: usize,
+    /// Operation body duration (paper: ~3 ms).
+    pub op_delay: Duration,
+    /// Simulated interconnect.
+    pub net: NetworkModel,
+    /// Run irrevocable transactions instead of ordinary ones.
+    pub irrevocable: bool,
+    pub seed: u64,
+}
+
+impl Default for EigenbenchParams {
+    fn default() -> Self {
+        EigenbenchParams {
+            kind: FrameworkKind::Optsva,
+            nodes: 4,
+            clients_per_node: 4,
+            arrays_per_node: 10,
+            txns_per_client: 10,
+            hot_ops: 10,
+            mild_ops: 0,
+            cold_ops: 0,
+            read_pct: 90,
+            locality: 0.5,
+            history: 5,
+            op_delay: Duration::from_millis(3),
+            net: NetworkModel::lan(),
+            irrevocable: false,
+            seed: 0xE16E_5EED,
+        }
+    }
+}
+
+impl EigenbenchParams {
+    pub fn total_clients(&self) -> u32 {
+        self.nodes as u32 * self.clients_per_node
+    }
+
+    /// Paper ratio label, e.g. "9÷1".
+    pub fn ratio_label(&self) -> String {
+        format!("{}÷{}", self.read_pct / 10, 10 - self.read_pct / 10)
+    }
+}
+
+/// Outcome of one Eigenbench run.
+#[derive(Debug, Clone)]
+pub struct EigenbenchResult {
+    pub params_label: String,
+    pub framework: &'static str,
+    /// Committed shared-data operations per second (the paper's metric).
+    pub throughput: f64,
+    pub committed_txns: u64,
+    pub committed_ops: u64,
+    pub aborts: u64,
+    /// Fraction of transactions that aborted ≥ once (Fig 13).
+    pub abort_rate: f64,
+    pub wall: Duration,
+    /// Per-transaction latency distribution (µs).
+    pub latency: Histogram,
+}
+
+impl EigenbenchResult {
+    /// One CSV row: `framework,clients,nodes,ratio,throughput,aborts,...`.
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{},{},{},{:.3},{}",
+            self.framework,
+            self.params_label,
+            self.throughput,
+            self.committed_txns,
+            self.committed_ops,
+            self.aborts,
+            self.abort_rate,
+            self.wall.as_millis(),
+        )
+    }
+}
+
+/// One randomly generated transaction program: the access declarations and
+/// the operation sequence over them.
+struct TxProgram {
+    decls: Vec<AccessDecl>,
+    ops: Vec<(usize, OpCall)>,
+    shared_ops: u64,
+}
+
+/// Generate one transaction: pick objects with locality, interleave hot and
+/// mild accesses in random order, derive exact per-mode suprema.
+fn gen_tx(
+    rng: &mut Prng,
+    params: &EigenbenchParams,
+    hot_names: &[String],
+    mild_names: &[String],
+    history: &mut Vec<String>,
+) -> TxProgram {
+    // (name, is_read) picks, hot then mild, then shuffled together.
+    let mut picks: Vec<(String, bool)> = Vec::new();
+    for _ in 0..params.hot_ops {
+        let name = if !history.is_empty() && rng.chance(params.locality) {
+            rng.pick(history).clone()
+        } else {
+            rng.pick(hot_names).clone()
+        };
+        if history.len() >= params.history {
+            history.remove(0);
+        }
+        history.push(name.clone());
+        picks.push((name, rng.below(100) < params.read_pct as u64));
+    }
+    for _ in 0..params.mild_ops {
+        let name = rng.pick(mild_names).clone();
+        picks.push((name, rng.below(100) < params.read_pct as u64));
+    }
+    rng.shuffle(&mut picks);
+
+    // Aggregate exact suprema per distinct object (perfect a-priori
+    // knowledge, as the paper's preamble provides).
+    let mut decls: Vec<AccessDecl> = Vec::new();
+    let mut ops: Vec<(usize, OpCall)> = Vec::with_capacity(picks.len());
+    for (name, is_read) in picks {
+        let idx = match decls.iter().position(|d| d.name == name) {
+            Some(i) => i,
+            None => {
+                decls.push(AccessDecl::new(name.clone(), Suprema::new(0, 0, 0)));
+                decls.len() - 1
+            }
+        };
+        if is_read {
+            decls[idx].suprema.reads += 1;
+            ops.push((idx, OpCall::nullary("get")));
+        } else {
+            decls[idx].suprema.writes += 1;
+            ops.push((idx, OpCall::unary("set", rng.next_u64() as i64 & 0xFFFF)));
+        }
+    }
+    let shared = ops.len() as u64;
+    TxProgram { decls, ops, shared_ops: shared }
+}
+
+/// Run one Eigenbench scenario end to end. Builds a fresh cluster and
+/// framework, hosts the arrays, spawns `total_clients` threads, runs
+/// `txns_per_client` transactions each, and aggregates the results.
+pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
+    let cluster = Arc::new(Cluster::new(params.nodes, params.net));
+    let fw = Arc::new(params.kind.build(Arc::clone(&cluster)));
+
+    // Hot arrays: `arrays_per_node` objects on every node, shared by all.
+    let mut hot_names = Vec::new();
+    for node in cluster.node_ids() {
+        for i in 0..params.arrays_per_node {
+            let name = format!("hot-{}-{}", node.0, i);
+            fw.host(node, &name, Box::new(RegisterObject::with_delay(0, params.op_delay)));
+            hot_names.push(name);
+        }
+    }
+    let hot_names = Arc::new(hot_names);
+
+    // Mild arrays: `arrays_per_node` objects per client on the client's
+    // node — TM-controlled but conflict-free by partitioning.
+    let mut mild_per_client: Vec<Arc<Vec<String>>> = Vec::new();
+    for node in cluster.node_ids() {
+        for c in 0..params.clients_per_node {
+            let mut names = Vec::new();
+            if params.mild_ops > 0 {
+                for i in 0..params.arrays_per_node {
+                    let name = format!("mild-{}-{}-{}", node.0, c, i);
+                    fw.host(node, &name, Box::new(RegisterObject::with_delay(0, params.op_delay)));
+                    names.push(name);
+                }
+            }
+            mild_per_client.push(Arc::new(names));
+        }
+    }
+
+    let committed_txns = Arc::new(AtomicU64::new(0));
+    let committed_ops = Arc::new(AtomicU64::new(0));
+    let latency = Arc::new(Mutex::new(Histogram::new()));
+    let txns_with_retry = Arc::new(AtomicU64::new(0));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let mut client_id = 0usize;
+    for node in cluster.node_ids() {
+        for _ in 0..params.clients_per_node {
+            let fw = Arc::clone(&fw);
+            let params = params.clone();
+            let hot_names = Arc::clone(&hot_names);
+            let mild_names = Arc::clone(&mild_per_client[client_id]);
+            let committed_txns = Arc::clone(&committed_txns);
+            let committed_ops = Arc::clone(&committed_ops);
+            let latency = Arc::clone(&latency);
+            let txns_with_retry = Arc::clone(&txns_with_retry);
+            let mut rng = Prng::seeded(params.seed).split(client_id as u64);
+            client_id += 1;
+            handles.push(std::thread::spawn(move || {
+                let mut history: Vec<String> = Vec::new();
+                // Cold array: client-local, non-transactional.
+                let mut cold: Vec<i64> = vec![0; params.arrays_per_node as usize];
+                let mut local_hist = Histogram::new();
+                for _ in 0..params.txns_per_client {
+                    let prog = gen_tx(&mut rng, &params, &hot_names, &mild_names, &mut history);
+                    let t_tx = Instant::now();
+                    let r = fw.dtm().run(node, &prog.decls, params.irrevocable, &mut |t| {
+                        for (idx, call) in &prog.ops {
+                            t.call(ObjHandle(*idx), call.clone())?;
+                        }
+                        Ok(())
+                    });
+                    local_hist.record_duration(t_tx.elapsed());
+                    match r {
+                        Ok(stats) => {
+                            committed_txns.fetch_add(1, Ordering::Relaxed);
+                            committed_ops.fetch_add(prog.shared_ops, Ordering::Relaxed);
+                            if stats.attempts > 1 {
+                                txns_with_retry.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(TxError::ManualAbort) => {}
+                        Err(e) => panic!("eigenbench transaction failed: {e}"),
+                    }
+                    // Cold accesses: outside any transaction.
+                    for _ in 0..params.cold_ops {
+                        let i = rng.index(cold.len());
+                        if rng.below(100) < params.read_pct as u64 {
+                            std::hint::black_box(cold[i]);
+                        } else {
+                            cold[i] = rng.next_u64() as i64;
+                        }
+                    }
+                }
+                latency.lock().unwrap().merge(&local_hist);
+            }));
+        }
+    }
+    for h in handles {
+        h.join().expect("eigenbench client panicked");
+    }
+    let wall = t0.elapsed();
+    fw.shutdown();
+
+    let txns = committed_txns.load(Ordering::Relaxed);
+    let ops = committed_ops.load(Ordering::Relaxed);
+    let aborts = fw.dtm().aborts();
+    let retried = txns_with_retry.load(Ordering::Relaxed);
+    EigenbenchResult {
+        params_label: format!(
+            "{}n/{}c/{}a/{}",
+            params.nodes,
+            params.total_clients(),
+            params.arrays_per_node,
+            params.ratio_label()
+        ),
+        framework: fw.dtm().framework_name(),
+        throughput: ops as f64 / wall.as_secs_f64(),
+        committed_txns: txns,
+        committed_ops: ops,
+        aborts,
+        abort_rate: if txns == 0 { 0.0 } else { retried as f64 / txns as f64 },
+        wall,
+        latency: Arc::try_unwrap(latency).map(|m| m.into_inner().unwrap()).unwrap_or_default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick(kind: FrameworkKind, read_pct: u8) -> EigenbenchResult {
+        run_eigenbench(&EigenbenchParams {
+            kind,
+            nodes: 2,
+            clients_per_node: 2,
+            arrays_per_node: 4,
+            txns_per_client: 3,
+            hot_ops: 4,
+            mild_ops: 0,
+            cold_ops: 2,
+            read_pct,
+            op_delay: Duration::from_micros(200),
+            net: NetworkModel::instant(),
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn every_framework_completes_the_benchmark() {
+        for kind in super::super::ALL_FRAMEWORKS {
+            let r = quick(*kind, 50);
+            assert_eq!(r.committed_txns, 2 * 2 * 3, "{}", r.framework);
+            assert_eq!(r.committed_ops, r.committed_txns * 4);
+            assert!(r.throughput > 0.0);
+        }
+    }
+
+    #[test]
+    fn pessimistic_frameworks_never_abort() {
+        for kind in [FrameworkKind::Optsva, FrameworkKind::Sva] {
+            let r = quick(kind, 10);
+            assert_eq!(r.aborts, 0, "{} must be abort-free", r.framework);
+            assert_eq!(r.abort_rate, 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_program_generation() {
+        let params = EigenbenchParams::default();
+        let hot: Vec<String> = (0..8).map(|i| format!("hot-{i}")).collect();
+        let mild: Vec<String> = vec![];
+        let mut h1 = Vec::new();
+        let mut h2 = Vec::new();
+        let mut r1 = Prng::seeded(7);
+        let mut r2 = Prng::seeded(7);
+        let p1 = gen_tx(&mut r1, &params, &hot, &mild, &mut h1);
+        let p2 = gen_tx(&mut r2, &params, &hot, &mild, &mut h2);
+        assert_eq!(p1.ops.len(), p2.ops.len());
+        for (a, b) in p1.ops.iter().zip(&p2.ops) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.method, b.1.method);
+        }
+        assert_eq!(p1.shared_ops, 10);
+    }
+
+    #[test]
+    fn suprema_exactly_cover_the_ops() {
+        let params = EigenbenchParams { hot_ops: 20, ..Default::default() };
+        let hot: Vec<String> = (0..4).map(|i| format!("hot-{i}")).collect();
+        let mut hist = Vec::new();
+        let mut rng = Prng::seeded(42);
+        let prog = gen_tx(&mut rng, &params, &hot, &[], &mut hist);
+        let mut reads = vec![0u64; prog.decls.len()];
+        let mut writes = vec![0u64; prog.decls.len()];
+        for (idx, call) in &prog.ops {
+            if call.method == "get" {
+                reads[*idx] += 1;
+            } else {
+                writes[*idx] += 1;
+            }
+        }
+        for (i, d) in prog.decls.iter().enumerate() {
+            assert_eq!(d.suprema.reads, reads[i]);
+            assert_eq!(d.suprema.writes, writes[i]);
+            assert_eq!(d.suprema.updates, 0);
+        }
+    }
+
+    #[test]
+    fn irrevocable_mode_runs_clean() {
+        let r = run_eigenbench(&EigenbenchParams {
+            kind: FrameworkKind::Optsva,
+            nodes: 1,
+            clients_per_node: 2,
+            arrays_per_node: 2,
+            txns_per_client: 2,
+            hot_ops: 3,
+            op_delay: Duration::from_micros(100),
+            net: NetworkModel::instant(),
+            irrevocable: true,
+            ..Default::default()
+        });
+        assert_eq!(r.committed_txns, 4);
+        assert_eq!(r.aborts, 0);
+    }
+}

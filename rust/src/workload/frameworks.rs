@@ -1,0 +1,210 @@
+//! Framework registry: every concurrency-control system the paper
+//! evaluates (§4.1), behind one constructor and the common [`Dtm`] trait.
+
+use crate::api::Dtm;
+use crate::cluster::{Cluster, NodeId, Oid};
+use crate::locks::{Discipline, LockKind, LockSystem};
+use crate::object::SharedObject;
+use crate::optsva::{AtomicRmi2, OptsvaConfig};
+use crate::sva::AtomicRmi1;
+use crate::tfa::TfaSystem;
+use std::sync::Arc;
+
+/// Which framework to build (paper §4.1 names in comments).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FrameworkKind {
+    /// Atomic RMI 2 — OptSVA-CF (the paper's contribution).
+    Optsva,
+    /// Ablation: OptSVA-CF with asynchronous tasks executed inline.
+    OptsvaNoAsync,
+    /// Atomic RMI — SVA, operation-type agnostic.
+    Sva,
+    /// HyFlow2 stand-in — optimistic TFA, data-flow.
+    Tfa,
+    /// Distributed mutual-exclusion locks, conservative strict 2PL.
+    MutexS2pl,
+    /// Distributed mutual-exclusion locks, early unlock after last use.
+    Mutex2pl,
+    /// Distributed readers–writer locks, S2PL.
+    RwS2pl,
+    /// Distributed readers–writer locks, 2PL.
+    Rw2pl,
+    /// Single global lock — the serial baseline.
+    GLock,
+}
+
+/// Every framework, in the order the paper's plots list them.
+pub const ALL_FRAMEWORKS: &[FrameworkKind] = &[
+    FrameworkKind::Optsva,
+    FrameworkKind::Sva,
+    FrameworkKind::Tfa,
+    FrameworkKind::MutexS2pl,
+    FrameworkKind::Mutex2pl,
+    FrameworkKind::RwS2pl,
+    FrameworkKind::Rw2pl,
+    FrameworkKind::GLock,
+];
+
+impl FrameworkKind {
+    /// Short stable label (CSV columns, CLI flags).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FrameworkKind::Optsva => "atomic-rmi2",
+            FrameworkKind::OptsvaNoAsync => "atomic-rmi2-sync",
+            FrameworkKind::Sva => "atomic-rmi",
+            FrameworkKind::Tfa => "hyflow2",
+            FrameworkKind::MutexS2pl => "mutex-s2pl",
+            FrameworkKind::Mutex2pl => "mutex-2pl",
+            FrameworkKind::RwS2pl => "rw-s2pl",
+            FrameworkKind::Rw2pl => "rw-2pl",
+            FrameworkKind::GLock => "glock",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn parse(s: &str) -> Option<FrameworkKind> {
+        let all = [
+            FrameworkKind::Optsva,
+            FrameworkKind::OptsvaNoAsync,
+            FrameworkKind::Sva,
+            FrameworkKind::Tfa,
+            FrameworkKind::MutexS2pl,
+            FrameworkKind::Mutex2pl,
+            FrameworkKind::RwS2pl,
+            FrameworkKind::Rw2pl,
+            FrameworkKind::GLock,
+        ];
+        all.into_iter().find(|k| k.label() == s)
+    }
+
+    /// Build an instance over `cluster`.
+    pub fn build(&self, cluster: Arc<Cluster>) -> Framework {
+        match self {
+            FrameworkKind::Optsva => Framework::Optsva(AtomicRmi2::new(cluster)),
+            FrameworkKind::OptsvaNoAsync => Framework::Optsva(AtomicRmi2::with_config(
+                cluster,
+                OptsvaConfig { asynchrony: false, ..OptsvaConfig::default() },
+            )),
+            FrameworkKind::Sva => Framework::Sva(AtomicRmi1::new(cluster)),
+            FrameworkKind::Tfa => Framework::Tfa(TfaSystem::new(cluster)),
+            FrameworkKind::MutexS2pl => {
+                Framework::Locks(LockSystem::new(cluster, LockKind::Mutex, Discipline::S2pl))
+            }
+            FrameworkKind::Mutex2pl => {
+                Framework::Locks(LockSystem::new(cluster, LockKind::Mutex, Discipline::Tpl))
+            }
+            FrameworkKind::RwS2pl => {
+                Framework::Locks(LockSystem::new(cluster, LockKind::ReadWrite, Discipline::S2pl))
+            }
+            FrameworkKind::Rw2pl => {
+                Framework::Locks(LockSystem::new(cluster, LockKind::ReadWrite, Discipline::Tpl))
+            }
+            FrameworkKind::GLock => {
+                Framework::Locks(LockSystem::new(cluster, LockKind::Global, Discipline::S2pl))
+            }
+        }
+    }
+}
+
+/// A built framework instance: hosts objects and runs transactions.
+pub enum Framework {
+    Optsva(Arc<AtomicRmi2>),
+    Sva(Arc<AtomicRmi1>),
+    Tfa(Arc<TfaSystem>),
+    Locks(Arc<LockSystem>),
+}
+
+impl Framework {
+    /// Host `object` on `node` under `name`.
+    pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
+        match self {
+            Framework::Optsva(s) => s.host(node, name, object),
+            Framework::Sva(s) => s.host(node, name, object),
+            Framework::Tfa(s) => s.host(node, name, object),
+            Framework::Locks(s) => s.host(node, name, object),
+        }
+    }
+
+    /// The polymorphic transaction runner.
+    pub fn dtm(&self) -> &dyn Dtm {
+        match self {
+            Framework::Optsva(s) => s,
+            Framework::Sva(s) => s,
+            Framework::Tfa(s) => s,
+            Framework::Locks(s) => s,
+        }
+    }
+
+    /// Peek at an object's state (test/verification helper).
+    pub fn with_object<R>(
+        &self,
+        oid: Oid,
+        f: impl FnOnce(&dyn SharedObject) -> R,
+    ) -> R {
+        match self {
+            Framework::Optsva(s) => s.with_object(oid, f),
+            Framework::Sva(s) => s.with_object(oid, f),
+            Framework::Tfa(s) => s.with_object(oid, f),
+            Framework::Locks(s) => s.with_object(oid, f),
+        }
+    }
+
+    /// Drain executors and background machinery (OptSVA-CF only).
+    pub fn shutdown(&self) {
+        if let Framework::Optsva(s) = self {
+            s.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{AccessDecl, ObjHandle, Suprema};
+    use crate::cluster::NetworkModel;
+    use crate::object::{account::ops, Account};
+
+    #[test]
+    fn labels_roundtrip() {
+        for k in ALL_FRAMEWORKS {
+            assert_eq!(FrameworkKind::parse(k.label()), Some(*k));
+        }
+        assert_eq!(FrameworkKind::parse("atomic-rmi2-sync"), Some(FrameworkKind::OptsvaNoAsync));
+        assert_eq!(FrameworkKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn every_framework_runs_the_same_transfer() {
+        for kind in ALL_FRAMEWORKS.iter().chain([&FrameworkKind::OptsvaNoAsync]) {
+            let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+            let fw = kind.build(cluster);
+            let a = fw.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+            let b = fw.host(NodeId(1), "B", Box::new(Account::with_balance(0)));
+            let decls = vec![
+                AccessDecl::new("A", Suprema::updates(1)),
+                AccessDecl::new("B", Suprema::updates(1)),
+            ];
+            fw.dtm()
+                .run(NodeId(0), &decls, false, &mut |t| {
+                    t.call(ObjHandle(0), ops::withdraw(40))?;
+                    t.call(ObjHandle(1), ops::deposit(40))?;
+                    Ok(())
+                })
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+            assert_eq!(
+                fw.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()),
+                60,
+                "{}",
+                kind.label()
+            );
+            assert_eq!(
+                fw.with_object(b, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()),
+                40,
+                "{}",
+                kind.label()
+            );
+            assert_eq!(fw.dtm().commits(), 1, "{}", kind.label());
+            fw.shutdown();
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Distributed Eigenbench (paper §4.2) and the framework registry.
+//!
+//! Eigenbench [Hong et al., IISWC'10] drives each TM through a synthetic
+//! transactional application with orthogonally tunable characteristics:
+//!
+//!   * a **hot** array per node — objects shared by every client,
+//!     TM-controlled (the contention knob);
+//!   * a **mild** array per client — TM-controlled but partitioned so no
+//!     two transactions ever conflict on them;
+//!   * a **cold** array per client — accessed non-transactionally.
+//!
+//! Every object is a reference cell ([`RegisterObject`]) whose operations
+//! take a configurable time (~3 ms in the paper — "fairly long, which
+//! represents the complex computations"). Transactions access
+//! semi-randomly selected objects in random order with a configured
+//! read-to-write ratio and locality (probability of re-picking from the
+//! client's recent-access history).
+
+pub mod eigenbench;
+pub mod frameworks;
+pub mod sweeps;
+
+pub use eigenbench::{run_eigenbench, EigenbenchParams, EigenbenchResult};
+pub use frameworks::{Framework, FrameworkKind, ALL_FRAMEWORKS};
+pub use sweeps::Scale;

@@ -1,0 +1,139 @@
+//! Fault-tolerance integration tests (§3.4): crash-stop object failures
+//! and crashed-client recovery via the failure detector, under load.
+
+use atomic_rmi2::api::{Suprema, TxCtx, TxError};
+use atomic_rmi2::faults::Detector;
+use atomic_rmi2::object::{account::ops, Account};
+use atomic_rmi2::optsva::{AtomicRmi2, OptsvaConfig};
+use atomic_rmi2::{Cluster, NetworkModel, NodeId};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sys() -> Arc<AtomicRmi2> {
+    let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+    AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: true },
+    )
+}
+
+/// A crashed object surfaces as an exception in every later transaction
+/// (crash-stop model), and the name is unbound.
+#[test]
+fn object_crash_stop_is_visible_and_permanent() {
+    let sys = sys();
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(5)));
+    sys.host(NodeId(1), "B", Box::new(Account::with_balance(5)));
+    sys.crash_object(a);
+
+    // Begin on the crashed object fails (the registry entry is gone).
+    let mut tx = sys.tx(NodeId(0));
+    tx.updates("A", 1);
+    assert!(matches!(tx.begin(), Err(TxError::NotDeclared(_))));
+
+    // Other objects keep working.
+    let mut tx = sys.tx(NodeId(0));
+    let hb = tx.updates("B", 1);
+    tx.run(|t| {
+        t.call(hb, ops::deposit(1))?;
+        Ok(())
+    })
+    .unwrap();
+    sys.shutdown();
+}
+
+/// A client that crashes mid-transaction (no Drop, no abort) is detected;
+/// its objects roll themselves back; waiting transactions proceed; and the
+/// overall state stays consistent under continued load.
+#[test]
+fn crashed_client_recovery_under_load() {
+    let sys = sys();
+    for i in 0..4 {
+        sys.host(NodeId(i % 2), &format!("a{i}"), Box::new(Account::with_balance(100)));
+    }
+    let det = Detector::start(
+        Arc::clone(&sys),
+        Duration::from_millis(60),
+        Duration::from_millis(15),
+    );
+
+    // Crash two clients mid-flight, holding different objects.
+    for victim in 0..2 {
+        let mut dead = sys.tx(NodeId(0));
+        let h = dead.updates(&format!("a{victim}"), 2);
+        dead.begin().unwrap();
+        dead.call(h, ops::withdraw(37)).unwrap();
+        std::mem::forget(dead);
+    }
+
+    // Live clients keep transferring across all four accounts.
+    let mut threads = vec![];
+    for c in 0..3u64 {
+        let sys = Arc::clone(&sys);
+        threads.push(std::thread::spawn(move || {
+            let mut rng = atomic_rmi2::util::prng::Prng::seeded(c);
+            for _ in 0..10 {
+                let from = rng.index(4);
+                let to = (from + 1 + rng.index(3)) % 4;
+                let amt = 1 + rng.below(20) as i64;
+                loop {
+                    let mut tx = sys.tx(NodeId(0));
+                    let hf = tx.updates(&format!("a{from}"), 1);
+                    let ht = tx.updates(&format!("a{to}"), 1);
+                    let r = tx.run(|t| {
+                        t.call(hf, ops::withdraw(amt))?;
+                        t.call(ht, ops::deposit(amt))?;
+                        Ok(())
+                    });
+                    match r {
+                        Ok(_) => break,
+                        // Cascades from the victims' rollbacks: retry.
+                        Err(TxError::ForcedAbort(_)) => continue,
+                        Err(e) => panic!("{e}"),
+                    }
+                }
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert!(det.evictions() >= 2, "both victims detected");
+    det.stop();
+
+    // The victims' withdrawals were rolled back; transfers conserved.
+    let total: i64 = (0..4)
+        .map(|i| {
+            let oid = sys.cluster().registry.locate(&format!("a{i}")).unwrap();
+            sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance())
+        })
+        .sum();
+    assert_eq!(total, 400, "crashed clients' effects must be rolled back");
+    sys.shutdown();
+}
+
+/// An undetected crash (no detector) is still bounded by the versioning
+/// wait timeout: the blocked transaction reports `Timeout` rather than
+/// hanging forever.
+#[test]
+fn waits_are_bounded_by_failure_suspicion_timeout() {
+    let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+    let sys = AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_millis(120)), asynchrony: true },
+    );
+    sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+
+    let mut dead = sys.tx(NodeId(0));
+    let h = dead.updates("A", 2);
+    dead.begin().unwrap();
+    dead.call(h, ops::deposit(1)).unwrap();
+    std::mem::forget(dead);
+
+    let mut tx = sys.tx(NodeId(0));
+    let h2 = tx.updates("A", 1);
+    tx.begin().unwrap();
+    let r = tx.call(h2, ops::deposit(1));
+    assert!(matches!(r, Err(TxError::Timeout(_))), "got {r:?}");
+    sys.shutdown();
+}

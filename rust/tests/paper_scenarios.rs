@@ -1,0 +1,289 @@
+//! Integration tests: the paper's illustrative executions (Figs 1–5) as
+//! deterministic interleavings, plus §2.4 irrevocability semantics.
+//!
+//! Each test reconstructs the history from the paper's figure and asserts
+//! the blocking/parallelism structure OptSVA-CF promises.
+
+use atomic_rmi2::object::{account::ops, Account, OpCall, RegisterObject};
+use atomic_rmi2::optsva::{AtomicRmi2, OptsvaConfig};
+use atomic_rmi2::{Cluster, NetworkModel, NodeId, Suprema, TxCtx, TxError};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sys() -> Arc<AtomicRmi2> {
+    let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+    AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(20)), asynchrony: true },
+    )
+}
+
+fn balance_of(sys: &AtomicRmi2, name: &str) -> i64 {
+    let oid = sys.cluster().registry.locate(name).unwrap();
+    sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance())
+}
+
+/// Fig 1: versioning orders conflicting accesses; an unrelated object is
+/// accessed fully in parallel.
+#[test]
+fn fig1_versioning_orders_access() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(0)));
+    sys.host(NodeId(1), "y", Box::new(Account::with_balance(0)));
+
+    // T_i holds x (pv 1); T_j (pv 2) must wait until T_i commits.
+    let mut ti = sys.tx(NodeId(0));
+    let hxi = ti.updates("x", 2);
+    ti.begin().unwrap();
+    ti.call(hxi, ops::deposit(1)).unwrap();
+
+    let sys_j = Arc::clone(&sys);
+    let tj = std::thread::spawn(move || {
+        let mut tj = sys_j.tx(NodeId(0));
+        let hxj = tj.updates("x", 1);
+        tj.begin().unwrap();
+        // blocks until T_i releases x at commit
+        tj.call(hxj, ops::deposit(10)).unwrap();
+        tj.commit().unwrap();
+    });
+
+    // T_k accesses y completely in parallel, unaffected by x's queue.
+    let mut tk = sys.tx(NodeId(1));
+    let hy = tk.updates("y", 1);
+    let t0 = std::time::Instant::now();
+    tk.run(|t| {
+        t.call(hy, ops::deposit(5))?;
+        Ok(())
+    })
+    .unwrap();
+    assert!(t0.elapsed() < Duration::from_millis(200), "T_k must not block");
+
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!tj.is_finished(), "T_j must wait for T_i");
+    ti.call(hxi, ops::deposit(1)).unwrap(); // second (last) access: releases
+    ti.commit().unwrap();
+    tj.join().unwrap();
+    assert_eq!(balance_of(&sys, "x"), 12);
+    sys.shutdown();
+}
+
+/// Fig 2: early release via upper bounds — T_j proceeds as soon as T_i's
+/// supremum is reached, *before* T_i commits.
+#[test]
+fn fig2_early_release_before_commit() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(0)));
+
+    let mut ti = sys.tx(NodeId(0));
+    let hxi = ti.updates("x", 1); // ub = 1
+    ti.begin().unwrap();
+    ti.call(hxi, ops::deposit(1)).unwrap(); // supremum reached ⇒ release
+
+    // T_j can access x while T_i is still running (not yet committed).
+    let mut tj = sys.tx(NodeId(0));
+    let hxj = tj.updates("x", 1);
+    tj.begin().unwrap();
+    let t0 = std::time::Instant::now();
+    tj.call(hxj, ops::deposit(10)).unwrap();
+    assert!(
+        t0.elapsed() < Duration::from_millis(200),
+        "T_j must not wait for T_i's commit after early release"
+    );
+    // Commit order is still enforced: T_j's commit waits for T_i.
+    let sys_j = Arc::clone(&sys);
+    let tj_thread = std::thread::spawn(move || {
+        tj.commit().unwrap();
+        drop(sys_j);
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!tj_thread.is_finished(), "T_j's commit must wait for T_i's");
+    ti.commit().unwrap();
+    tj_thread.join().unwrap();
+    assert_eq!(balance_of(&sys, "x"), 11);
+    sys.shutdown();
+}
+
+/// Fig 3: cascading abort — T_j read T_i's early-released state; T_i
+/// aborts, so T_j must abort too, and the state is reverted.
+#[test]
+fn fig3_cascading_abort() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(100)));
+
+    let mut ti = sys.tx(NodeId(0));
+    let hxi = ti.updates("x", 1);
+    ti.begin().unwrap();
+    ti.call(hxi, ops::deposit(900)).unwrap(); // early release
+
+    let mut tj = sys.tx(NodeId(0));
+    let hxj = tj.accesses("x", Suprema::new(1, 0, 0));
+    tj.begin().unwrap();
+    assert_eq!(tj.call(hxj, ops::balance()).unwrap().as_int(), 1000);
+
+    // T_j's commit cannot complete until T_i terminates…
+    let tj_thread = std::thread::spawn(move || tj.commit());
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!tj_thread.is_finished());
+    // …and when T_i aborts, T_j is forced to abort as well.
+    ti.abort().unwrap();
+    let r = tj_thread.join().unwrap();
+    assert!(matches!(r, Err(TxError::ForcedAbort(_))), "got {r:?}");
+    assert_eq!(balance_of(&sys, "x"), 100, "state reverted");
+    sys.shutdown();
+}
+
+/// Fig 4: asynchronous read-only buffering — the read-only object is
+/// released before the transaction's first read executes, letting a
+/// writer proceed while the reader still uses its buffer.
+#[test]
+fn fig4_async_read_only_buffering() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(7)));
+
+    let mut tj = sys.tx(NodeId(0));
+    let hxj = tj.reads("x", 2);
+    tj.begin().unwrap();
+    // Wait for the buffering task (scheduled at start) to fire.
+    tj.proxy(hxj).join_task().unwrap();
+    assert!(tj.proxy(hxj).released(), "buffered and released before any read");
+
+    // T_k modifies x while T_j is still running.
+    let mut tk = sys.tx(NodeId(0));
+    let hxk = tk.updates("x", 1);
+    tk.begin().unwrap();
+    tk.call(hxk, ops::deposit(100)).unwrap();
+
+    // T_j's reads see the *buffered* (pre-T_k) state.
+    assert_eq!(tj.call(hxj, ops::balance()).unwrap().as_int(), 7);
+    assert_eq!(tj.call(hxj, ops::balance()).unwrap().as_int(), 7);
+    tj.commit().unwrap();
+    tk.commit().unwrap();
+    assert_eq!(balance_of(&sys, "x"), 107);
+    sys.shutdown();
+}
+
+/// Fig 5: asynchronous release on last write — T_j's pure writes execute
+/// on the log buffer with no synchronization while T_i holds the object;
+/// after T_i finishes, T_j's async task applies the log and releases so
+/// T_k can proceed, while T_j keeps working.
+#[test]
+fn fig5_async_last_write_release() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(RegisterObject::new(0)));
+    sys.host(NodeId(0), "y", Box::new(RegisterObject::new(0)));
+
+    // T_i takes direct access to x.
+    let mut ti = sys.tx(NodeId(0));
+    let hxi = ti.accesses("x", Suprema::new(1, 1, 0));
+    ti.begin().unwrap();
+    assert_eq!(ti.call(hxi, OpCall::nullary("get")).unwrap().as_int(), 0);
+
+    // T_j: two pure writes on x — no waiting, even though T_i holds x.
+    let mut tj = sys.tx(NodeId(0));
+    let hxj = tj.accesses("x", Suprema::new(1, 2, 0));
+    let hyj = tj.updates("y", 1);
+    tj.begin().unwrap();
+    let t0 = std::time::Instant::now();
+    tj.call(hxj, OpCall::unary("set", 5i64)).unwrap();
+    tj.call(hxj, OpCall::unary("set", 9i64)).unwrap(); // last write ⇒ async task
+    assert!(t0.elapsed() < Duration::from_millis(200), "writes must not block");
+
+    // T_j continues with y immediately (Fig 5's point).
+    let t1 = std::time::Instant::now();
+    tj.call(hyj, OpCall::unary("add", 3i64)).unwrap();
+    assert!(t1.elapsed() < Duration::from_millis(200));
+
+    // T_i finishes with x; T_j's async task applies the log and releases.
+    ti.call(hxi, OpCall::unary("set", 1i64)).unwrap();
+    ti.commit().unwrap();
+    tj.proxy(hxj).join_task().unwrap();
+    assert!(tj.proxy(hxj).released());
+
+    // T_k can now access x (sees T_j's writes) while T_j is still open.
+    let mut tk = sys.tx(NodeId(0));
+    let hxk = tk.accesses("x", Suprema::new(1, 0, 0));
+    tk.begin().unwrap();
+    assert_eq!(tk.call(hxk, OpCall::nullary("get")).unwrap().as_int(), 9);
+
+    // T_j's final read is served from its copy buffer.
+    assert_eq!(tj.call(hxj, OpCall::nullary("get")).unwrap().as_int(), 9);
+    tj.commit().unwrap();
+    tk.commit().unwrap();
+    sys.shutdown();
+}
+
+/// §2.4: irrevocable transactions never accept early-released state, so a
+/// preceding abort cannot cascade into them.
+#[test]
+fn irrevocable_never_joins_a_cascade() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(100)));
+
+    let mut ti = sys.tx(NodeId(0));
+    let hxi = ti.updates("x", 1);
+    ti.begin().unwrap();
+    ti.call(hxi, ops::deposit(900)).unwrap(); // dirty, early released
+
+    let sys_j = Arc::clone(&sys);
+    let tj = std::thread::spawn(move || {
+        let mut tj = sys_j.tx(NodeId(0)).irrevocable();
+        let hxj = tj.accesses("x", Suprema::new(1, 0, 0));
+        tj.begin().unwrap();
+        let v = tj.call(hxj, ops::balance()).unwrap().as_int();
+        tj.commit().unwrap();
+        v
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!tj.is_finished(), "irrevocable read must ignore the early release");
+    ti.abort().unwrap(); // T_i aborts: x reverts to 100
+    let seen = tj.join().unwrap();
+    assert_eq!(seen, 100, "irrevocable transaction saw only committed state");
+    sys.shutdown();
+}
+
+/// Suprema violations abort the offending transaction (§2.2).
+#[test]
+fn exceeding_the_supremum_aborts() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(0)));
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.updates("x", 1);
+    let r = tx.run(|t| {
+        t.call(h, ops::deposit(1))?;
+        t.call(h, ops::deposit(1))?; // supremum exceeded
+        Ok(())
+    });
+    assert!(matches!(r, Err(TxError::SupremaExceeded { .. })), "got {r:?}");
+    assert_eq!(balance_of(&sys, "x"), 0, "aborted transaction left no effects");
+    sys.shutdown();
+}
+
+/// Unknown suprema (∞) keep full guarantees — objects are simply held to
+/// commit (no early release).
+#[test]
+fn unknown_suprema_hold_until_commit() {
+    let sys = sys();
+    sys.host(NodeId(0), "x", Box::new(Account::with_balance(0)));
+    let mut t1 = sys.tx(NodeId(0));
+    let h1 = t1.accesses("x", Suprema::unknown());
+    t1.begin().unwrap();
+    t1.call(h1, ops::deposit(1)).unwrap();
+    assert!(!t1.proxy(h1).released(), "∞ supremum ⇒ no early release");
+
+    let sys2 = Arc::clone(&sys);
+    let t2 = std::thread::spawn(move || {
+        let mut t2 = sys2.tx(NodeId(0));
+        let h2 = t2.updates("x", 1);
+        t2.run(|t| {
+            t.call(h2, ops::deposit(10))?;
+            Ok(())
+        })
+        .unwrap();
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(!t2.is_finished(), "x held until T1 commits");
+    t1.commit().unwrap();
+    t2.join().unwrap();
+    assert_eq!(balance_of(&sys, "x"), 11);
+    sys.shutdown();
+}

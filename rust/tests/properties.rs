@@ -1,0 +1,327 @@
+//! Property-based tests (hand-rolled harness over the deterministic
+//! splittable PRNG — `proptest` is not in the offline mirror).
+//!
+//! Random transaction programs over random object graphs, checked against
+//! the §2.1 versioning properties and the system-level invariants the
+//! paper claims: zero forced aborts absent manual aborts, deadlock
+//! freedom (bounded-time completion), conservation, and OptSVA-CF/SVA
+//! final-state agreement on identical serializable programs.
+
+use atomic_rmi2::api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError};
+use atomic_rmi2::object::{OpCall, RegisterObject};
+use atomic_rmi2::util::prng::Prng;
+use atomic_rmi2::versioning::ObjectCc;
+use atomic_rmi2::workload::FrameworkKind;
+use atomic_rmi2::{Cluster, NetworkModel, NodeId};
+use std::sync::Arc;
+
+/// One randomly generated transaction program.
+#[derive(Debug, Clone)]
+struct Program {
+    /// (object index, op) — op ∈ {get, set k, add k}.
+    ops: Vec<(usize, OpCall)>,
+}
+
+fn gen_program(rng: &mut Prng, n_objects: usize, max_ops: usize) -> Program {
+    let n_ops = 1 + rng.index(max_ops);
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let obj = rng.index(n_objects);
+        let op = match rng.index(3) {
+            0 => OpCall::nullary("get"),
+            1 => OpCall::unary("set", rng.below(100) as i64),
+            _ => OpCall::unary("add", rng.below(10) as i64),
+        };
+        ops.push((obj, op));
+    }
+    Program { ops }
+}
+
+/// Exact per-mode suprema for a program (perfect a-priori knowledge).
+fn decls_for(prog: &Program, n_objects: usize) -> Vec<AccessDecl> {
+    let mut sup = vec![Suprema::new(0, 0, 0); n_objects];
+    for (o, call) in &prog.ops {
+        match call.method {
+            "get" => sup[*o].reads += 1,
+            "set" => sup[*o].writes += 1,
+            _ => sup[*o].updates += 1,
+        }
+    }
+    (0..n_objects)
+        .map(|i| AccessDecl::new(format!("r{i}"), sup[i]))
+        .collect()
+}
+
+/// §2.1 properties (a)–(d) under concurrent starts.
+#[test]
+fn prop_private_version_assignment() {
+    for case in 0..30u64 {
+        let mut rng = Prng::seeded(0x9906 ^ case);
+        let n_objects = 2 + rng.index(4);
+        let ccs: Vec<Arc<ObjectCc>> = (0..n_objects).map(|_| Arc::new(ObjectCc::new())).collect();
+        let n_threads = 2 + rng.index(6);
+        let mut handles = vec![];
+        for _ in 0..n_threads {
+            let ccs: Vec<_> = ccs.iter().map(Arc::clone).collect();
+            handles.push(std::thread::spawn(move || {
+                let view: Vec<_> = ccs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, cc)| {
+                        (atomic_rmi2::Oid::new(NodeId(0), i as u32), cc.as_ref())
+                    })
+                    .collect();
+                atomic_rmi2::versioning::acquire_start_locks(&view, |_| {})
+            }));
+        }
+        let results: Vec<Vec<u64>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // (a) uniqueness per object.
+        for obj in 0..n_objects {
+            let mut pvs: Vec<u64> = results.iter().map(|r| r[obj]).collect();
+            pvs.sort_unstable();
+            pvs.dedup();
+            assert_eq!(pvs.len(), results.len(), "duplicate pv on object {obj}");
+            // (d) consecutive from 1 (everyone declared every object).
+            assert_eq!(pvs, (1..=results.len() as u64).collect::<Vec<_>>());
+        }
+        // (c) cross-object order agreement.
+        let mut sorted = results.clone();
+        sorted.sort_by_key(|r| r[0]);
+        for w in sorted.windows(2) {
+            for obj in 0..n_objects {
+                assert!(
+                    w[0][obj] < w[1][obj],
+                    "inconsistent pv order across objects: {sorted:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Without manual aborts, pessimistic frameworks never force an abort and
+/// every transaction completes (deadlock freedom) — over random programs.
+#[test]
+fn prop_no_forced_aborts_and_bounded_completion() {
+    for case in 0..12u64 {
+        for kind in [FrameworkKind::Optsva, FrameworkKind::Sva] {
+            let mut seed_rng = Prng::seeded(case * 7 + 1);
+            let n_objects = 2 + seed_rng.index(4);
+            let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+            let fw = Arc::new(kind.build(cluster));
+            for i in 0..n_objects {
+                fw.host(
+                    NodeId((i % 2) as u16),
+                    &format!("r{i}"),
+                    Box::new(RegisterObject::new(0)),
+                );
+            }
+            let mut threads = vec![];
+            for t in 0..4u64 {
+                let fw = Arc::clone(&fw);
+                threads.push(std::thread::spawn(move || {
+                    let mut rng = Prng::seeded(case * 1000 + t);
+                    for _ in 0..8 {
+                        let prog = gen_program(&mut rng, n_objects, 6);
+                        let decls = decls_for(&prog, n_objects);
+                        let stats = fw
+                            .dtm()
+                            .run(NodeId(0), &decls, false, &mut |ctx| {
+                                for (o, call) in &prog.ops {
+                                    ctx.call(ObjHandle(*o), call.clone())?;
+                                }
+                                Ok(())
+                            })
+                            .expect("transaction must complete");
+                        assert_eq!(stats.attempts, 1, "pessimistic: no retries");
+                    }
+                }));
+            }
+            for t in threads {
+                t.join().unwrap(); // bounded completion: join() returns
+            }
+            assert_eq!(fw.dtm().aborts(), 0, "{}: forced abort without manual abort", kind.label());
+            fw.shutdown();
+        }
+    }
+}
+
+/// OptSVA-CF and SVA agree with a serial oracle on single-threaded
+/// programs (the optimizations must be semantically invisible).
+#[test]
+fn prop_single_thread_matches_serial_oracle() {
+    for case in 0..40u64 {
+        let mut rng = Prng::seeded(0xACE ^ case);
+        let n_objects = 1 + rng.index(5);
+        let progs: Vec<Program> = (0..5).map(|_| gen_program(&mut rng, n_objects, 8)).collect();
+
+        // Serial oracle: plain registers.
+        let mut oracle = vec![0i64; n_objects];
+        let mut oracle_results: Vec<Vec<i64>> = Vec::new();
+        for prog in &progs {
+            let mut res = Vec::new();
+            for (o, call) in &prog.ops {
+                match call.method {
+                    "get" => res.push(oracle[*o]),
+                    "set" => {
+                        oracle[*o] = call.args[0].as_int();
+                        res.push(0);
+                    }
+                    _ => {
+                        oracle[*o] += call.args[0].as_int();
+                        res.push(oracle[*o]);
+                    }
+                }
+            }
+            oracle_results.push(res);
+        }
+
+        for kind in [FrameworkKind::Optsva, FrameworkKind::OptsvaNoAsync, FrameworkKind::Sva] {
+            let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+            let fw = kind.build(cluster);
+            for i in 0..n_objects {
+                fw.host(NodeId(0), &format!("r{i}"), Box::new(RegisterObject::new(0)));
+            }
+            for (p, prog) in progs.iter().enumerate() {
+                let decls = decls_for(prog, n_objects);
+                let mut got: Vec<i64> = Vec::new();
+                fw.dtm()
+                    .run(NodeId(0), &decls, false, &mut |ctx| {
+                        got.clear();
+                        for (o, call) in &prog.ops {
+                            let v = ctx.call(ObjHandle(*o), call.clone())?;
+                            got.push(match v {
+                                atomic_rmi2::object::Value::Int(x) => x,
+                                _ => 0,
+                            });
+                        }
+                        Ok(())
+                    })
+                    .unwrap();
+                assert_eq!(
+                    got, oracle_results[p],
+                    "{} case {case} prog {p}: diverged from serial oracle\nprog: {prog:?}",
+                    kind.label()
+                );
+            }
+            // Final states agree too.
+            for i in 0..n_objects {
+                let oid = match &fw {
+                    atomic_rmi2::workload::Framework::Optsva(s) => {
+                        s.cluster().registry.locate(&format!("r{i}")).unwrap()
+                    }
+                    atomic_rmi2::workload::Framework::Sva(s) => {
+                        s.cluster().registry.locate(&format!("r{i}")).unwrap()
+                    }
+                    _ => unreachable!(),
+                };
+                let v = fw.with_object(oid, |o| {
+                    o.as_any().downcast_ref::<RegisterObject>().unwrap().value()
+                });
+                assert_eq!(v, oracle[i], "{} case {case}: final state", kind.label());
+            }
+            fw.shutdown();
+        }
+    }
+}
+
+/// `add`-only concurrent programs: the final value must equal the sum of
+/// all committed increments for every framework (atomicity of updates).
+#[test]
+fn prop_concurrent_adds_sum_exactly() {
+    for kind in [
+        FrameworkKind::Optsva,
+        FrameworkKind::Sva,
+        FrameworkKind::Tfa,
+        FrameworkKind::Rw2pl,
+    ] {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let fw = Arc::new(kind.build(cluster));
+        fw.host(NodeId(0), "r0", Box::new(RegisterObject::new(0)));
+        let mut threads = vec![];
+        for t in 0..6u64 {
+            let fw = Arc::clone(&fw);
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Prng::seeded(t);
+                let mut sum = 0i64;
+                for _ in 0..20 {
+                    let k = 1 + rng.below(9) as i64;
+                    let decls = vec![AccessDecl::new("r0", Suprema::updates(1))];
+                    fw.dtm()
+                        .run(NodeId(0), &decls, false, &mut |ctx| {
+                            ctx.call(ObjHandle(0), OpCall::unary("add", k))?;
+                            Ok(())
+                        })
+                        .unwrap();
+                    sum += k;
+                }
+                sum
+            }));
+        }
+        let want: i64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        let oid = match fw.as_ref() {
+            atomic_rmi2::workload::Framework::Optsva(s) => {
+                s.cluster().registry.locate("r0").unwrap()
+            }
+            atomic_rmi2::workload::Framework::Sva(s) => s.cluster().registry.locate("r0").unwrap(),
+            atomic_rmi2::workload::Framework::Tfa(s) => s.cluster().registry.locate("r0").unwrap(),
+            atomic_rmi2::workload::Framework::Locks(s) => {
+                s.cluster().registry.locate("r0").unwrap()
+            }
+        };
+        let got = fw.with_object(oid, |o| {
+            o.as_any().downcast_ref::<RegisterObject>().unwrap().value()
+        });
+        assert_eq!(got, want, "{}: lost update", kind.label());
+        fw.shutdown();
+    }
+}
+
+/// Early release must never let two transactions hold direct access at
+/// once: a register that checks invariant "single writer" via add/get
+/// round trips under randomized concurrent programs.
+#[test]
+fn prop_manual_abort_then_retry_converges() {
+    for case in 0..10u64 {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let fw = Arc::new(FrameworkKind::Optsva.build(cluster));
+        fw.host(NodeId(0), "r0", Box::new(RegisterObject::new(0)));
+        let mut threads = vec![];
+        for t in 0..4u64 {
+            let fw = Arc::clone(&fw);
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Prng::seeded(case * 31 + t);
+                let mut committed = 0i64;
+                for _ in 0..10 {
+                    let k = 1 + rng.below(5) as i64;
+                    let drop_it = rng.chance(0.4);
+                    let decls = vec![AccessDecl::new("r0", Suprema::new(0, 0, 1))];
+                    let r = fw.dtm().run(NodeId(0), &decls, false, &mut |ctx| {
+                        ctx.call(ObjHandle(0), OpCall::unary("add", k))?;
+                        if drop_it {
+                            return ctx.abort();
+                        }
+                        Ok(())
+                    });
+                    match r {
+                        Ok(_) => committed += k,
+                        Err(TxError::ManualAbort) => {}
+                        Err(e) => panic!("{e}"),
+                    }
+                }
+                committed
+            }));
+        }
+        let want: i64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+        let oid = match fw.as_ref() {
+            atomic_rmi2::workload::Framework::Optsva(s) => {
+                s.cluster().registry.locate("r0").unwrap()
+            }
+            _ => unreachable!(),
+        };
+        let got = fw.with_object(oid, |o| {
+            o.as_any().downcast_ref::<RegisterObject>().unwrap().value()
+        });
+        assert_eq!(got, want, "case {case}: aborted adds leaked into the register");
+        fw.shutdown();
+    }
+}

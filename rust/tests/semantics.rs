@@ -1,0 +1,214 @@
+//! Remaining API-semantics coverage: `retry()`, log-buffer apply failures
+//! surfacing at commit, complex objects (KvStore, Queue, ComputeObject)
+//! under transactions, and network accounting.
+
+use atomic_rmi2::api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError};
+use atomic_rmi2::object::{
+    ComputeObject, KvStore, OpCall, QueueObject, SpinBackend, Value,
+};
+use atomic_rmi2::optsva::AtomicRmi2;
+use atomic_rmi2::{Cluster, NetworkModel, NodeId};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn sys() -> (Arc<Cluster>, Arc<AtomicRmi2>) {
+    let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+    let sys = AtomicRmi2::new(Arc::clone(&cluster));
+    (cluster, sys)
+}
+
+/// `retry()` aborts the attempt (rolling back its effects) and re-executes
+/// the body from scratch (paper Fig 8).
+#[test]
+fn retry_reexecutes_the_body_with_clean_state() {
+    let (_c, sys) = sys();
+    sys.host(NodeId(0), "kv", Box::new(KvStore::from_pairs(&[("n", 0)])));
+    let attempts = Arc::new(AtomicU64::new(0));
+    let decls = vec![AccessDecl::new("kv", Suprema::unknown())];
+    let a = Arc::clone(&attempts);
+    let stats = sys
+        .run(NodeId(0), &decls, false, &mut |t| {
+            let n = a.fetch_add(1, Ordering::SeqCst);
+            t.call(
+                ObjHandle(0),
+                OpCall::new("put", vec![Value::from("n"), Value::from(n as i64 + 10)]),
+            )?;
+            if n < 2 {
+                return t.retry();
+            }
+            Ok(())
+        })
+        .unwrap();
+    assert_eq!(stats.attempts, 3);
+    let oid = sys.cluster().registry.locate("kv").unwrap();
+    // Only the final attempt's put survives (earlier ones rolled back).
+    let v = sys.with_object(oid, |o| {
+        o.as_any()
+            .downcast_ref::<KvStore>()
+            .unwrap()
+            .peek("n")
+            .unwrap()
+    });
+    assert_eq!(v, 12);
+    sys.shutdown();
+}
+
+/// A pure write recorded in the log buffer that *fails on replay* (bad
+/// arguments) surfaces at commit and aborts the transaction cleanly.
+#[test]
+fn log_buffer_replay_failure_aborts_at_commit() {
+    let (_c, sys) = sys();
+    sys.host(NodeId(0), "q", Box::new(QueueObject::new()));
+    let mut tx = sys.tx(NodeId(0));
+    // Declare more writes than we perform so the log is applied at commit
+    // (the last-write async path never fires).
+    let h = tx.writes("q", 5);
+    tx.begin().unwrap();
+    // "push" with no argument: records fine (no synchronization), fails
+    // on replay.
+    tx.call(h, OpCall::nullary("push")).unwrap();
+    let r = tx.commit();
+    assert!(matches!(r, Err(TxError::Object(_))), "got {r:?}");
+    let oid = sys.cluster().registry.locate("q").unwrap();
+    assert!(sys.with_object(oid, |o| o
+        .as_any()
+        .downcast_ref::<QueueObject>()
+        .unwrap()
+        .is_empty()));
+    sys.shutdown();
+}
+
+/// Transactional FIFO handoff through a QueueObject: concurrent producers
+/// and one consumer; nothing lost, nothing duplicated.
+#[test]
+fn queue_handoff_is_exactly_once() {
+    let (_c, sys) = sys();
+    sys.host(NodeId(0), "q", Box::new(QueueObject::new()));
+    let mut producers = vec![];
+    for p in 0..4i64 {
+        let sys = Arc::clone(&sys);
+        producers.push(std::thread::spawn(move || {
+            for i in 0..10i64 {
+                let decls = vec![AccessDecl::new("q", Suprema::writes(1))];
+                sys.run(NodeId(0), &decls, false, &mut |t| {
+                    t.call(ObjHandle(0), OpCall::unary("push", p * 100 + i))?;
+                    Ok(())
+                })
+                .unwrap();
+            }
+        }));
+    }
+    for p in producers {
+        p.join().unwrap();
+    }
+    // Drain transactionally.
+    let mut seen = Vec::new();
+    loop {
+        let decls = vec![AccessDecl::new("q", Suprema::unknown())];
+        let mut got: Option<i64> = None;
+        sys.run(NodeId(0), &decls, false, &mut |t| {
+            got = None;
+            if t.call(ObjHandle(0), OpCall::nullary("len"))?.as_int() > 0 {
+                got = Some(t.call(ObjHandle(0), OpCall::nullary("pop"))?.as_int());
+            }
+            Ok(())
+        })
+        .unwrap();
+        match got {
+            Some(v) => seen.push(v),
+            None => break,
+        }
+    }
+    assert_eq!(seen.len(), 40);
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), 40, "duplicated or lost queue elements");
+    sys.shutdown();
+}
+
+/// ComputeObject transactions: the mix/digest operations behave
+/// transactionally — an aborted mix leaves the state untouched.
+#[test]
+fn compute_object_mix_is_transactional() {
+    let (_c, sys) = sys();
+    let backend = Arc::new(SpinBackend::new(8, 2));
+    sys.host(NodeId(0), "c", Box::new(ComputeObject::new(backend)));
+    let oid = sys.cluster().registry.locate("c").unwrap();
+    let before = sys.with_object(oid, |o| {
+        o.as_any().downcast_ref::<ComputeObject>().unwrap().state().to_vec()
+    });
+
+    // Aborted mix: no effect.
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.updates("c", 2);
+    tx.begin().unwrap();
+    tx.call(h, OpCall::new("mix", vec![Value::Floats(vec![0.5; 8])])).unwrap();
+    tx.abort().unwrap();
+    let after_abort = sys.with_object(oid, |o| {
+        o.as_any().downcast_ref::<ComputeObject>().unwrap().state().to_vec()
+    });
+    assert_eq!(before, after_abort, "aborted mix must be rolled back");
+
+    // Committed mix: digest changes deterministically.
+    let decls = vec![AccessDecl::new("c", Suprema::new(1, 0, 1))];
+    let mut digest = 0.0f64;
+    sys.run(NodeId(0), &decls, false, &mut |t| {
+        t.call(ObjHandle(0), OpCall::new("mix", vec![Value::Floats(vec![0.5; 8])]))?;
+        digest = t.call(ObjHandle(0), OpCall::nullary("digest"))?.as_float();
+        Ok(())
+    })
+    .unwrap();
+    assert!(digest.is_finite() && digest > 0.0);
+    sys.shutdown();
+}
+
+/// The network model charges every remote interaction and none of the
+/// co-located ones.
+#[test]
+fn network_accounting_matches_interaction_pattern() {
+    let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+    let sys = AtomicRmi2::new(Arc::clone(&cluster));
+    sys.host(NodeId(0), "local", Box::new(KvStore::from_pairs(&[("k", 1)])));
+    sys.host(NodeId(1), "remote", Box::new(KvStore::from_pairs(&[("k", 2)])));
+
+    // Local-only transaction: zero messages.
+    let decls = vec![AccessDecl::new("local", Suprema::reads(1))];
+    sys.run(NodeId(0), &decls, false, &mut |t| {
+        t.call(ObjHandle(0), OpCall::unary("get", "k"))?;
+        Ok(())
+    })
+    .unwrap();
+    let (msgs, _, local) = cluster.stats.snapshot();
+    assert_eq!(msgs, 0, "co-located transaction must not touch the network");
+    assert!(local >= 3, "start + op + commit accounted as local calls");
+
+    // Remote transaction: start + op + commit ⇒ ≥ 3 round trips.
+    let decls = vec![AccessDecl::new("remote", Suprema::reads(1))];
+    sys.run(NodeId(0), &decls, false, &mut |t| {
+        t.call(ObjHandle(0), OpCall::unary("get", "k"))?;
+        Ok(())
+    })
+    .unwrap();
+    let (msgs, bytes, _) = cluster.stats.snapshot();
+    assert!(msgs >= 6, "expected ≥3 round trips (6 messages), got {msgs}");
+    assert!(bytes > 0);
+    sys.shutdown();
+}
+
+/// Suprema of zero in one mode are enforced independently per mode.
+#[test]
+fn per_mode_suprema_are_independent() {
+    let (_c, sys) = sys();
+    sys.host(NodeId(0), "kv", Box::new(KvStore::from_pairs(&[("k", 7)])));
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.accesses("kv", Suprema::new(2, 0, 0)); // reads only
+    tx.begin().unwrap();
+    assert_eq!(tx.call(h, OpCall::unary("get", "k")).unwrap().as_int(), 7);
+    // A write against a read-only declaration must be rejected.
+    let err = tx
+        .call(h, OpCall::new("put", vec![Value::from("k"), Value::from(9i64)]))
+        .unwrap_err();
+    assert!(matches!(err, TxError::SupremaExceeded { mode: "write", .. }), "got {err:?}");
+    let _ = tx.abort();
+    sys.shutdown();
+}

@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make the `compile` package importable regardless of
+where pytest is invoked from (repo root in CI: `python -m pytest
+python/tests -q`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

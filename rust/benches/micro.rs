@@ -6,6 +6,7 @@
 
 use atomic_rmi2::api::Suprema;
 use atomic_rmi2::buffers::CopyBuffer;
+use atomic_rmi2::clock::{Clock, RealClock};
 use atomic_rmi2::executor::Executor;
 use atomic_rmi2::object::{account::ops, Account, ComputeBackend, SpinBackend};
 use atomic_rmi2::optsva::AtomicRmi2;
@@ -60,9 +61,11 @@ fn main() {
 
     // 3. Executor: submit + run an immediately-true task.
     let ex = Executor::spawn();
+    let clock = RealClock::shared();
     bench("executor: submit+complete (ready task)", 20, 200, || {
         let h = ex.submit(|| true, || {});
-        h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        h.join(clock.as_ref(), Some(clock.now() + Duration::from_secs(5)))
+            .unwrap();
     });
     ex.shutdown();
 

@@ -10,6 +10,7 @@
 use crate::cluster::{NodeId, Oid};
 use crate::object::{ObjectError, OpCall, Value};
 use crate::versioning::WaitTimeout;
+use std::fmt;
 
 /// Upper bounds on the number of operations a transaction will perform on
 /// one object, by mode. `u64::MAX` means "unknown" (paper: "If suprema are
@@ -66,39 +67,73 @@ impl Suprema {
 }
 
 /// Why a transaction terminated abnormally.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TxError {
     /// The programmer called `abort()` (paper Fig 9).
-    #[error("transaction aborted manually")]
     ManualAbort,
     /// The programmer called `retry()`: abort and re-execute the body.
-    #[error("transaction requested retry")]
     Retry,
     /// Cascading abort: the transaction observed state released early by a
     /// transaction that later aborted (§2.3).
-    #[error("transaction forcibly aborted: {0}")]
     ForcedAbort(String),
     /// An object was accessed more times than its declared supremum (§2.2).
-    #[error("supremum exceeded on {oid}: {mode} count {count} > bound {bound}")]
     SupremaExceeded { oid: Oid, mode: &'static str, count: u64, bound: u64 },
     /// Optimistic conflict (TFA only): retry the transaction.
-    #[error("optimistic conflict: {0}")]
     Conflict(String),
     /// The object suffered a crash-stop failure (§3.4).
-    #[error("remote object {0} crashed")]
     ObjectCrashed(Oid),
     /// A versioning wait exceeded the failure-suspicion deadline (§3.4).
-    #[error("wait timed out: {0}")]
-    Timeout(#[from] WaitTimeout),
+    Timeout(WaitTimeout),
     /// The body touched an object that was not declared in the preamble.
-    #[error("object {0:?} not declared in transaction preamble")]
     NotDeclared(String),
     /// The object's method raised an application error.
-    #[error("object error: {0}")]
-    Object(#[from] ObjectError),
+    Object(ObjectError),
     /// The transaction was used after completion.
-    #[error("transaction already completed")]
     Completed,
+}
+
+impl fmt::Display for TxError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TxError::ManualAbort => write!(f, "transaction aborted manually"),
+            TxError::Retry => write!(f, "transaction requested retry"),
+            TxError::ForcedAbort(why) => write!(f, "transaction forcibly aborted: {why}"),
+            TxError::SupremaExceeded { oid, mode, count, bound } => write!(
+                f,
+                "supremum exceeded on {oid}: {mode} count {count} > bound {bound}"
+            ),
+            TxError::Conflict(why) => write!(f, "optimistic conflict: {why}"),
+            TxError::ObjectCrashed(oid) => write!(f, "remote object {oid} crashed"),
+            TxError::Timeout(t) => write!(f, "wait timed out: {t}"),
+            TxError::NotDeclared(name) => {
+                write!(f, "object {name:?} not declared in transaction preamble")
+            }
+            TxError::Object(e) => write!(f, "object error: {e}"),
+            TxError::Completed => write!(f, "transaction already completed"),
+        }
+    }
+}
+
+impl std::error::Error for TxError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TxError::Timeout(t) => Some(t),
+            TxError::Object(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<WaitTimeout> for TxError {
+    fn from(t: WaitTimeout) -> Self {
+        TxError::Timeout(t)
+    }
+}
+
+impl From<ObjectError> for TxError {
+    fn from(e: ObjectError) -> Self {
+        TxError::Object(e)
+    }
 }
 
 impl TxError {

@@ -69,9 +69,8 @@ impl Recorder {
 }
 
 /// A serializability violation found by replay.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum CheckError {
-    #[error("tx {tag} op #{index} on {object}: live run saw {live}, serial replay got {replayed}")]
     Divergence {
         tag: String,
         index: usize,
@@ -79,11 +78,28 @@ pub enum CheckError {
         live: String,
         replayed: String,
     },
-    #[error("tx {tag} references unknown object {object}")]
     UnknownObject { tag: String, object: String },
-    #[error("replay error on {object}: {error}")]
     ReplayFailed { object: String, error: String },
 }
+
+impl std::fmt::Display for CheckError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckError::Divergence { tag, index, object, live, replayed } => write!(
+                f,
+                "tx {tag} op #{index} on {object}: live run saw {live}, serial replay got {replayed}"
+            ),
+            CheckError::UnknownObject { tag, object } => {
+                write!(f, "tx {tag} references unknown object {object}")
+            }
+            CheckError::ReplayFailed { object, error } => {
+                write!(f, "replay error on {object}: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckError {}
 
 /// Replay `records` (in commit order) against `initial` object states and
 /// verify every recorded return value. On success returns the number of

@@ -15,13 +15,21 @@
 //! state, then pays response latency. This is behaviourally identical to a
 //! server worker thread executing the handler while the caller blocks, but
 //! does not require thousands of OS threads on the 1-core evaluation box.
+//!
+//! All latency is paid through the cluster's [`Clock`]: under the default
+//! [`RealClock`](crate::clock::RealClock) the calling thread really
+//! sleeps; under a [`VirtualClock`](crate::clock::VirtualClock) the delay
+//! is accounted in simulated time and costs no wall time (see
+//! [`Cluster::new_virtual`]).
 
 pub mod registry;
 
 pub use registry::Registry;
 
+use crate::clock::{Clock, RealClock};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Logical node identifier.
@@ -112,19 +120,37 @@ impl NetStats {
 pub struct Cluster {
     nodes: u16,
     net: NetworkModel,
+    clock: Arc<dyn Clock>,
     pub registry: Registry,
     pub stats: NetStats,
 }
 
 impl Cluster {
+    /// Cluster on the shared wall clock (interactive runs, latency tests).
     pub fn new(nodes: u16, net: NetworkModel) -> Self {
+        Self::with_clock(nodes, net, RealClock::shared())
+    }
+
+    /// Cluster on a fresh [`crate::clock::VirtualClock`]: every injected
+    /// latency, timeout and detector scan runs in simulated time.
+    pub fn new_virtual(nodes: u16, net: NetworkModel) -> Self {
+        Self::with_clock(nodes, net, Arc::new(crate::clock::VirtualClock::new()))
+    }
+
+    pub fn with_clock(nodes: u16, net: NetworkModel, clock: Arc<dyn Clock>) -> Self {
         assert!(nodes > 0, "cluster needs at least one node");
         Cluster {
             nodes,
             net,
+            clock,
             registry: Registry::new(),
             stats: NetStats::default(),
         }
+    }
+
+    /// The time source all latency, timeouts, and fault detection use.
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
     }
 
     pub fn node_count(&self) -> u16 {
@@ -157,12 +183,12 @@ impl Cluster {
         }
         let req_delay = self.net.delay(req_bytes);
         if !req_delay.is_zero() {
-            std::thread::sleep(req_delay);
+            self.clock.sleep(req_delay);
         }
         let (result, resp_bytes) = f();
         let resp_delay = self.net.delay(resp_bytes);
         if !resp_delay.is_zero() {
-            std::thread::sleep(resp_delay);
+            self.clock.sleep(resp_delay);
         }
         self.stats.messages.fetch_add(2, Ordering::Relaxed);
         self.stats
@@ -179,7 +205,7 @@ impl Cluster {
         }
         let delay = self.net.delay(bytes);
         if !delay.is_zero() {
-            std::thread::sleep(delay);
+            self.clock.sleep(delay);
         }
         self.stats.messages.fetch_add(1, Ordering::Relaxed);
         self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
@@ -242,5 +268,32 @@ mod tests {
         let c = Cluster::new(4, NetworkModel::instant());
         let ids: Vec<_> = c.node_ids().collect();
         assert_eq!(ids, vec![NodeId(0), NodeId(1), NodeId(2), NodeId(3)]);
+    }
+
+    #[test]
+    fn virtual_cluster_accounts_latency_without_real_sleeping() {
+        // A delay that would take 10 real seconds per message.
+        let c = Cluster::new_virtual(2, NetworkModel {
+            one_way: Duration::from_secs(10),
+            per_kib: Duration::ZERO,
+        });
+        let t0 = Instant::now();
+        let v = c.rpc(NodeId(0), NodeId(1), 100, || (7, 100));
+        assert_eq!(v, 7);
+        assert!(t0.elapsed() < Duration::from_secs(2), "no wall-clock sleeping");
+        assert_eq!(c.clock().now(), Duration::from_secs(20), "2 one-way trips accounted");
+        let (msgs, bytes, _) = c.stats.snapshot();
+        assert_eq!(msgs, 2);
+        assert_eq!(bytes, 200);
+    }
+
+    #[test]
+    fn virtual_send_accounts_one_way_latency() {
+        let c = Cluster::new_virtual(2, NetworkModel {
+            one_way: Duration::from_millis(500),
+            per_kib: Duration::ZERO,
+        });
+        c.send(NodeId(0), NodeId(1), 24);
+        assert_eq!(c.clock().now(), Duration::from_millis(500));
     }
 }

@@ -29,17 +29,28 @@ pub struct KvConfig {
 }
 
 /// Configuration/argument errors.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ConfigError {
-    #[error("line {0}: expected `key = value`, got {1:?}")]
     Syntax(usize, String),
-    #[error("key {0:?}: {1}")]
     BadValue(String, String),
-    #[error("unknown framework {0:?}")]
     UnknownFramework(String),
-    #[error("io: {0}")]
     Io(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Syntax(line, got) => {
+                write!(f, "line {line}: expected `key = value`, got {got:?}")
+            }
+            ConfigError::BadValue(key, why) => write!(f, "key {key:?}: {why}"),
+            ConfigError::UnknownFramework(fw) => write!(f, "unknown framework {fw:?}"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl KvConfig {
     /// Parse `key = value` lines; `#` starts a comment; blanks ignored.
@@ -139,6 +150,9 @@ impl KvConfig {
         }
         if let Some(v) = self.typed::<bool>("irrevocable")? {
             p.irrevocable = v;
+        }
+        if let Some(v) = self.typed::<bool>("virtual_time")? {
+            p.virtual_time = v;
         }
         if let Some(v) = self.typed::<u64>("seed")? {
             p.seed = v;

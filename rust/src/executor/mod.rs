@@ -12,6 +12,7 @@
 //! `ObjectCc` pokes the node's [`Signal`] whenever `lv`/`ltv` change;
 //! the executor re-scans its queue on every poke.
 
+use crate::clock::{wait_deadline, Clock};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -99,20 +100,15 @@ impl TaskHandle {
         *self.inner.done.lock().unwrap()
     }
 
-    /// Block until the task has run. `deadline` None ⇒ wait forever.
-    pub fn join(&self, deadline: Option<Instant>) -> Result<(), ()> {
+    /// Block until the task has run. `deadline` is absolute in `clock`
+    /// time; `None` ⇒ wait forever.
+    pub fn join(&self, clock: &dyn Clock, deadline: Option<Duration>) -> Result<(), ()> {
         let mut d = self.inner.done.lock().unwrap();
         while !*d {
-            match deadline {
-                None => d = self.inner.cond.wait(d).unwrap(),
-                Some(dl) => {
-                    let now = Instant::now();
-                    if now >= dl {
-                        return Err(());
-                    }
-                    let (g, _) = self.inner.cond.wait_timeout(d, dl - now).unwrap();
-                    d = g;
-                }
+            let (g, expired) = wait_deadline(clock, &self.inner.cond, d, deadline);
+            d = g;
+            if expired && !*d {
+                return Err(());
             }
         }
         Ok(())
@@ -242,7 +238,15 @@ impl Drop for Executor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::RealClock;
     use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    /// Join with a generous real-time deadline (test hangs become failures).
+    fn join_within_5s(h: &TaskHandle) {
+        let clock = RealClock::shared();
+        let deadline = Some(clock.now() + Duration::from_secs(5));
+        h.join(clock.as_ref(), deadline).unwrap();
+    }
 
     #[test]
     fn immediately_true_condition_runs() {
@@ -250,7 +254,7 @@ mod tests {
         let ran = Arc::new(AtomicBool::new(false));
         let r = Arc::clone(&ran);
         let h = ex.submit(|| true, move || r.store(true, Ordering::SeqCst));
-        h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        join_within_5s(&h);
         assert!(ran.load(Ordering::SeqCst));
         ex.shutdown();
     }
@@ -269,7 +273,7 @@ mod tests {
         assert!(!h.is_done(), "must not run before the condition holds");
         gate.store(true, Ordering::SeqCst);
         ex.signal().poke();
-        h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+        join_within_5s(&h);
         assert!(ran.load(Ordering::SeqCst));
         ex.shutdown();
     }
@@ -284,7 +288,7 @@ mod tests {
             handles.push(ex.submit(|| true, move || o.lock().unwrap().push(i)));
         }
         for h in &handles {
-            h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+            join_within_5s(h);
         }
         assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
         ex.shutdown();
@@ -294,7 +298,9 @@ mod tests {
     fn join_timeout_on_never_true_condition() {
         let ex = Executor::spawn();
         let h = ex.submit(|| false, || {});
-        let r = h.join(Some(Instant::now() + Duration::from_millis(50)));
+        let clock = RealClock::shared();
+        let deadline = Some(clock.now() + Duration::from_millis(50));
+        let r = h.join(clock.as_ref(), deadline);
         assert!(r.is_err());
         // unblock shutdown: drop the task by flipping shutdown with queue
         // non-empty is fine — run_loop exits only when queue empties, so
@@ -338,7 +344,7 @@ mod tests {
             std::thread::sleep(Duration::from_millis(5));
         }
         for h in &handles {
-            h.join(Some(Instant::now() + Duration::from_secs(5))).unwrap();
+            join_within_5s(h);
         }
         assert_eq!(counter.load(Ordering::SeqCst), 20);
         ex.shutdown();

@@ -21,6 +21,7 @@
 //! `lv`/`ltv` remain consistent; a chain of crashed transactions is
 //! cleaned up over successive scans.
 
+use crate::clock::Clock;
 use crate::optsva::AtomicRmi2;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -36,18 +37,28 @@ pub struct Detector {
 
 impl Detector {
     /// Start scanning `sys` every `scan_every`; a transaction is suspected
-    /// once it has not dispatched to an object for `suspect_after`.
+    /// once it has not dispatched to an object for `suspect_after`. Both
+    /// intervals are measured on the system's cluster clock.
+    ///
+    /// **Virtual-clock caveat:** a background detector *drives* simulated
+    /// time forward (each scan sleep advances the clock), so real-time
+    /// gaps in a live client's call stream get compressed into large
+    /// simulated staleness and the client can be falsely suspected. On a
+    /// virtual clock prefer driving detection explicitly with
+    /// [`Detector::scan`] after advancing the clock, and reserve
+    /// `Detector::start` for real-clock systems.
     pub fn start(sys: Arc<AtomicRmi2>, suspect_after: Duration, scan_every: Duration) -> Detector {
         let stop = Arc::new(AtomicBool::new(false));
         let evictions = Arc::new(AtomicU64::new(0));
         let (stop2, evictions2) = (Arc::clone(&stop), Arc::clone(&evictions));
+        let clock = Arc::clone(sys.cluster().clock());
         let thread = std::thread::Builder::new()
             .name("fault-detector".into())
             .spawn(move || {
                 while !stop2.load(Ordering::Acquire) {
                     evictions2
                         .fetch_add(Self::scan(&sys, suspect_after), Ordering::Relaxed);
-                    std::thread::sleep(scan_every);
+                    clock.sleep(scan_every);
                 }
             })
             .expect("spawn fault detector");
@@ -111,8 +122,10 @@ mod tests {
     use crate::object::{account::ops, Account};
     use crate::optsva::OptsvaConfig;
 
+    /// Fault machinery runs on a *virtual* clock: staleness accrues by
+    /// advancing simulated time, so none of these tests really sleeps.
     fn sys() -> Arc<AtomicRmi2> {
-        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let cluster = Arc::new(Cluster::new_virtual(1, NetworkModel::instant()));
         AtomicRmi2::with_config(
             cluster,
             OptsvaConfig { wait_timeout: Some(Duration::from_secs(5)), asynchrony: true },
@@ -131,7 +144,7 @@ mod tests {
         tx.call(h, ops::withdraw(60)).unwrap();
         std::mem::forget(tx); // no Drop rollback: a real crash
 
-        std::thread::sleep(Duration::from_millis(30));
+        sys.cluster().clock().sleep(Duration::from_millis(30));
         let n = Detector::scan(&sys, Duration::from_millis(10));
         assert_eq!(n, 1, "the abandoned object must be evicted");
         // State reverted, object released: a new transaction proceeds.
@@ -156,7 +169,7 @@ mod tests {
         tx.call(h, ops::withdraw(60)).unwrap();
 
         // The detector (too aggressively) suspects the client.
-        std::thread::sleep(Duration::from_millis(30));
+        sys.cluster().clock().sleep(Duration::from_millis(30));
         assert_eq!(Detector::scan(&sys, Duration::from_millis(10)), 1);
 
         // The client was actually alive; its next call must be refused.
@@ -186,7 +199,15 @@ mod tests {
 
     #[test]
     fn background_detector_unblocks_waiters() {
-        let sys = sys();
+        // Real clock on purpose: with a background detector driving
+        // virtual time forward at CPU speed, a client could be suspected
+        // in the gap between its begin() and first call. Wall-clock
+        // staleness keeps the suspicion threshold meaningful here.
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let sys = AtomicRmi2::with_config(
+            cluster,
+            OptsvaConfig { wait_timeout: Some(Duration::from_secs(5)), asynchrony: true },
+        );
         sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
         let det = Detector::start(
             Arc::clone(&sys),

@@ -10,6 +10,9 @@
 //!
 //! ## Layout
 //!
+//! * [`clock`] — swappable time substrate: [`RealClock`] (wall clock) and
+//!   [`VirtualClock`] (discrete-event simulated time; latency injection,
+//!   timeouts and fault detection with zero real sleeping);
 //! * [`cluster`] — simulated distributed substrate (nodes, latency-injected
 //!   RPC, name registry);
 //! * [`object`] — the complex shared-object model (§2.5): black-box objects
@@ -32,6 +35,7 @@
 
 pub mod api;
 pub mod checker;
+pub mod clock;
 pub mod config;
 pub mod buffers;
 pub mod cluster;
@@ -49,5 +53,6 @@ pub mod workload;
 pub mod versioning;
 
 pub use api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError, TxStats};
+pub use clock::{Clock, RealClock, VirtualClock};
 pub use cluster::{Cluster, NetworkModel, NodeId, Oid};
 pub use optsva::{AtomicRmi2, OptsvaConfig};

@@ -6,6 +6,13 @@
 //! plain condvar-based implementation with writer preference (a waiting
 //! writer blocks new readers), which is what a fair distributed lock
 //! service would provide.
+//!
+//! The wait loops here are purely notify-driven — no timeouts, no
+//! sleeping — so they are virtual-time neutral by construction: under a
+//! [`crate::clock::VirtualClock`] a waiter blocks only until the holder
+//! (whose simulated work costs zero wall time) releases. The *latency* of
+//! acquiring a remote lock is charged by the caller through
+//! [`crate::cluster::Cluster::rpc`], which runs on the cluster clock.
 
 use std::sync::{Condvar, Mutex};
 

@@ -85,7 +85,8 @@ fn eigenbench(args: &CliArgs) {
     println!("throughput         : {} ops/s", fmt_throughput(r.throughput));
     println!("committed txns/ops : {}/{}", r.committed_txns, r.committed_ops);
     println!("aborts             : {} (rate {:.1}%)", r.aborts, r.abort_rate * 100.0);
-    println!("wall time          : {:.1} ms", r.wall.as_millis());
+    println!("wall time          : {} ms", r.wall.as_millis());
+    println!("simulated time     : {} ms (virtual_time=false to sleep for real)", r.sim.as_millis());
     println!("txn latency        : {}", r.latency.summary());
 }
 

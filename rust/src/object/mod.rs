@@ -78,17 +78,28 @@ impl OpCall {
 }
 
 /// Errors raised by object method execution.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ObjectError {
-    #[error("no such method: {0}")]
     NoSuchMethod(String),
-    #[error("bad arguments for {method}: {reason}")]
     BadArgs { method: String, reason: String },
-    #[error("object crashed (crash-stop)")]
     Crashed,
-    #[error("application error: {0}")]
     App(String),
 }
+
+impl fmt::Display for ObjectError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ObjectError::NoSuchMethod(m) => write!(f, "no such method: {m}"),
+            ObjectError::BadArgs { method, reason } => {
+                write!(f, "bad arguments for {method}: {reason}")
+            }
+            ObjectError::Crashed => write!(f, "object crashed (crash-stop)"),
+            ObjectError::App(e) => write!(f, "application error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ObjectError {}
 
 /// A method descriptor in an object's interface.
 #[derive(Debug, Clone, Copy)]

@@ -6,6 +6,8 @@
 //! delay that models the paper's ~3 ms operation bodies.
 
 use super::{MethodSpec, Mode, ObjectError, OpCall, SharedObject, Value};
+use crate::clock::{Clock, RealClock};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// A single-value reference cell with configurable operation latency.
@@ -15,6 +17,9 @@ pub struct RegisterObject {
     /// Simulated operation body duration; models the "complex computation"
     /// each Eigenbench operation performs (~3 ms in the paper).
     op_delay: Duration,
+    /// Time source the delay is paid on (the hosting cluster's clock, so
+    /// virtual-time runs burn no wall time).
+    clock: Arc<dyn Clock>,
 }
 
 const INTERFACE: &[MethodSpec] = &[
@@ -26,12 +31,19 @@ const INTERFACE: &[MethodSpec] = &[
 
 impl RegisterObject {
     pub fn new(value: i64) -> Self {
-        RegisterObject { value, op_delay: Duration::ZERO }
+        Self::with_delay(value, Duration::ZERO)
     }
 
-    /// Cell whose every operation takes `delay` to execute (op body cost).
+    /// Cell whose every operation takes `delay` of wall-clock time.
     pub fn with_delay(value: i64, delay: Duration) -> Self {
-        RegisterObject { value, op_delay: delay }
+        Self::with_delay_on(value, delay, RealClock::shared())
+    }
+
+    /// Cell whose every operation takes `delay` on the given clock — pass
+    /// the hosting cluster's clock so virtual-time runs account the delay
+    /// without sleeping.
+    pub fn with_delay_on(value: i64, delay: Duration, clock: Arc<dyn Clock>) -> Self {
+        RegisterObject { value, op_delay: delay, clock }
     }
 
     pub fn value(&self) -> i64 {
@@ -42,7 +54,8 @@ impl RegisterObject {
         if !self.op_delay.is_zero() {
             // Sleep, not spin: on the oversubscribed evaluation box the
             // operation models remote/complex work, not local CPU burn.
-            std::thread::sleep(self.op_delay);
+            // Under a virtual clock this is pure accounting.
+            self.clock.sleep(self.op_delay);
         }
     }
 }
@@ -143,5 +156,21 @@ mod tests {
         r.invoke(&OpCall::unary("set", 99i64)).unwrap();
         r.restore(snap.as_ref());
         assert_eq!(r.value(), 1);
+    }
+
+    #[test]
+    fn op_delay_is_paid_on_the_given_clock() {
+        use crate::clock::VirtualClock;
+        let clock = std::sync::Arc::new(VirtualClock::new());
+        let mut r = RegisterObject::with_delay_on(
+            0,
+            std::time::Duration::from_millis(3),
+            std::sync::Arc::clone(&clock),
+        );
+        let t0 = std::time::Instant::now();
+        r.invoke(&OpCall::nullary("get")).unwrap();
+        r.invoke(&OpCall::unary("set", 1i64)).unwrap();
+        assert_eq!(clock.now(), std::time::Duration::from_millis(6));
+        assert!(t0.elapsed() < std::time::Duration::from_millis(500), "no real sleep");
     }
 }

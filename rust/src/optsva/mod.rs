@@ -47,10 +47,14 @@ pub struct ObjectSlot {
 }
 
 impl ObjectSlot {
-    fn new(oid: Oid, object: Box<dyn SharedObject>) -> Arc<Self> {
+    fn new(
+        oid: Oid,
+        object: Box<dyn SharedObject>,
+        clock: Arc<dyn crate::clock::Clock>,
+    ) -> Arc<Self> {
         Arc::new(ObjectSlot {
             oid,
-            cc: ObjectCc::new(),
+            cc: ObjectCc::with_clock(clock),
             interface: object.interface(),
             object: Mutex::new(object),
             crashed: AtomicBool::new(false),
@@ -138,7 +142,7 @@ impl AtomicRmi2 {
         let state = &self.nodes[node.0 as usize];
         let mut slots = state.slots.write().unwrap();
         let oid = Oid::new(node, slots.len() as u32);
-        let slot = ObjectSlot::new(oid, object);
+        let slot = ObjectSlot::new(oid, object, Arc::clone(self.cluster.clock()));
         slot.cc.watch(state.executor.signal());
         slots.push(slot);
         drop(slots);

@@ -24,13 +24,14 @@
 
 use crate::api::{Suprema, TxError};
 use crate::buffers::{CopyBuffer, LogBuffer};
+use crate::clock::Clock;
 use crate::cluster::Oid;
 use crate::executor::{Executor, TaskHandle};
 use crate::object::{Mode, OpCall, Value};
 use crate::versioning::ObjectCc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::{ObjectSlot, SysStats};
 
@@ -44,11 +45,14 @@ pub struct ProxyConfig {
     pub irrevocable: bool,
     /// When false, "asynchronous" tasks run inline (ablation mode).
     pub asynchrony: bool,
+    /// The cluster's time source: deadlines, heartbeats and staleness all
+    /// run against it (virtual under [`crate::clock::VirtualClock`]).
+    pub clock: Arc<dyn Clock>,
 }
 
 impl ProxyConfig {
-    fn deadline(&self) -> Option<Instant> {
-        self.wait_timeout.map(|t| Instant::now() + t)
+    fn deadline(&self) -> Option<Duration> {
+        self.wait_timeout.map(|t| self.clock.now() + t)
     }
 }
 
@@ -97,8 +101,9 @@ pub struct Proxy {
     /// back after suspecting the client crashed. Every later use of this
     /// proxy fails.
     evicted: AtomicBool,
-    /// Last time the client was heard from (updated on every dispatch).
-    last_beat: Mutex<Instant>,
+    /// Last time (in clock time) the client was heard from (updated on
+    /// every dispatch).
+    last_beat: Mutex<Duration>,
     inner: Mutex<ProxyState>,
 }
 
@@ -112,6 +117,7 @@ impl Proxy {
         config: ProxyConfig,
         tx_doomed: Arc<AtomicBool>,
     ) -> Arc<Self> {
+        let now = config.clock.now();
         let proxy = Arc::new(Proxy {
             oid: slot.oid,
             pv,
@@ -122,7 +128,7 @@ impl Proxy {
             config,
             tx_doomed,
             evicted: AtomicBool::new(false),
-            last_beat: Mutex::new(Instant::now()),
+            last_beat: Mutex::new(now),
             inner: Mutex::new(ProxyState {
                 rc: 0,
                 wc: 0,
@@ -199,7 +205,7 @@ impl Proxy {
     /// object's home node (the caller pays RPC latency).
     pub fn invoke(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
         self.slot.check_alive()?;
-        *self.last_beat.lock().unwrap() = Instant::now();
+        *self.last_beat.lock().unwrap() = self.config.clock.now();
         if self.evicted.load(Ordering::Acquire) {
             return Err(TxError::ForcedAbort(format!(
                 "object {} rolled itself back (client suspected crashed)",
@@ -418,7 +424,7 @@ impl Proxy {
     pub fn join_task(&self) -> Result<(), TxError> {
         let task = self.inner.lock().unwrap().task.clone();
         if let Some(h) = task {
-            h.join(self.config.deadline()).map_err(|()| {
+            h.join(self.config.clock.as_ref(), self.config.deadline()).map_err(|()| {
                 TxError::Timeout(crate::versioning::WaitTimeout {
                     what: "async task join",
                     waited_ms: self
@@ -600,9 +606,12 @@ impl Proxy {
         self.evicted.load(Ordering::Acquire)
     }
 
-    /// Seconds since the client last dispatched through this proxy.
+    /// Clock time since the client last dispatched through this proxy.
     pub(crate) fn staleness(&self) -> Duration {
-        self.last_beat.lock().unwrap().elapsed()
+        self.config
+            .clock
+            .now()
+            .saturating_sub(*self.last_beat.lock().unwrap())
     }
 
     /// Is this proxy finished (its `ltv` advanced past it)?

@@ -131,6 +131,7 @@ impl Transaction {
             wait_timeout: self.sys.config().wait_timeout,
             irrevocable: self.irrevocable,
             asynchrony: self.sys.config().asynchrony,
+            clock: Arc::clone(cluster.clock()),
         };
         let mut proxies: Vec<Option<Arc<Proxy>>> = vec![None; resolved.len()];
         for (pos, &i) in order.iter().enumerate() {

@@ -18,12 +18,13 @@
 
 use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
 use crate::buffers::CopyBuffer;
+use crate::clock::Clock;
 use crate::cluster::{Cluster, NodeId, Oid};
 use crate::object::{OpCall, SharedObject, Value};
 use crate::versioning::{acquire_start_locks, ObjectCc};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A hosted object under SVA control.
 struct Slot {
@@ -62,7 +63,7 @@ impl AtomicRmi1 {
         let oid = Oid::new(node, slots.len() as u32);
         slots.push(Arc::new(Slot {
             oid,
-            cc: ObjectCc::new(),
+            cc: ObjectCc::with_clock(Arc::clone(self.cluster.clock())),
             object: Mutex::new(object),
             crashed: AtomicBool::new(false),
         }));
@@ -180,8 +181,9 @@ impl SvaTransaction {
         Ok(())
     }
 
-    fn deadline(&self) -> Option<Instant> {
-        self.sys.wait_timeout.map(|t| Instant::now() + t)
+    fn deadline(&self) -> Option<Duration> {
+        let clock = self.sys.cluster.clock();
+        self.sys.wait_timeout.map(|t| clock.now() + t)
     }
 
     /// Execute one operation: wait at the access condition (first call),
@@ -203,7 +205,10 @@ impl SvaTransaction {
                 bound: o.ub,
             });
         }
-        let deadline = self.sys.wait_timeout.map(|t| Instant::now() + t);
+        let deadline = self
+            .sys
+            .wait_timeout
+            .map(|t| self.sys.cluster.clock().now() + t);
         if !o.accessed {
             o.slot.cc.wait_access(o.pv, deadline)?;
             o.accessed = true;

@@ -25,6 +25,7 @@
 //! transactions re-execute their bodies (Fig 13 counts how often).
 
 use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::clock::Clock;
 use crate::cluster::{Cluster, NodeId, Oid};
 use crate::locks::{DistRwLock, LockMode};
 use crate::object::{OpCall, SharedObject, Value};
@@ -271,7 +272,7 @@ impl Dtm for Arc<TfaSystem> {
             );
         }
         let mut rng = Prng::seeded(
-            0x7FA0_5EED ^ (client.0 as u64) << 32 ^ self.commit_count.load(Ordering::Relaxed),
+            0x7FA0_5EED ^ ((client.0 as u64) << 32) ^ self.commit_count.load(Ordering::Relaxed),
         );
         let mut attempts = 0u64;
         loop {
@@ -294,10 +295,11 @@ impl Dtm for Arc<TfaSystem> {
                 }
                 Err(TxError::Conflict(_)) | Err(TxError::Retry) if attempts < 10_000 => {
                     self.abort_count.fetch_add(1, Ordering::Relaxed);
-                    // Randomized exponential backoff, capped at 32× base.
+                    // Randomized exponential backoff, capped at 32× base —
+                    // paid through the cluster clock (virtual-time safe).
                     let factor = 1u64 << attempts.min(5);
                     let jitter = rng.below(self.backoff.as_micros() as u64 * factor + 1);
-                    std::thread::sleep(Duration::from_micros(jitter));
+                    self.cluster.clock().sleep(Duration::from_micros(jitter));
                     continue;
                 }
                 Err(e) => {

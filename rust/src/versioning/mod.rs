@@ -25,21 +25,32 @@ pub mod startlock;
 
 pub use startlock::acquire_start_locks;
 
+use crate::clock::{wait_deadline, Clock, RealClock};
 use crate::executor::Signal;
+use std::fmt;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
-#[cfg(test)]
 use std::time::Duration;
 
 /// Error returned when a versioning wait exceeds its deadline. Used by the
 /// fault-tolerance layer (§3.4) to suspect crashed transactions, and by
 /// tests to detect deadlock regressions.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("versioning wait timed out after {waited_ms} ms ({what})")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WaitTimeout {
     pub what: &'static str,
     pub waited_ms: u64,
 }
+
+impl fmt::Display for WaitTimeout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "versioning wait timed out after {} ms ({})",
+            self.waited_ms, self.what
+        )
+    }
+}
+
+impl std::error::Error for WaitTimeout {}
 
 /// An invalidation mark left by an aborted transaction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,6 +80,9 @@ struct CcState {
 pub struct ObjectCc {
     state: Mutex<CcState>,
     cond: Condvar,
+    /// Time source for deadline-bounded waits (the hosting cluster's
+    /// clock; real or virtual).
+    clock: Arc<dyn Clock>,
     /// Start-lock for atomic pv acquisition (never held while waiting on
     /// conditions; see `startlock`).
     pub start_lock: Mutex<()>,
@@ -83,13 +97,31 @@ impl Default for ObjectCc {
 }
 
 impl ObjectCc {
+    /// Block on the shared wall clock (unit tests, microbenches).
     pub fn new() -> Self {
+        Self::with_clock(RealClock::shared())
+    }
+
+    /// Block whose deadline waits run against `clock` — the hosting
+    /// cluster's clock, so virtual-time systems time out in virtual time.
+    pub fn with_clock(clock: Arc<dyn Clock>) -> Self {
         ObjectCc {
             state: Mutex::new(CcState::default()),
             cond: Condvar::new(),
+            clock,
             start_lock: Mutex::new(()),
             watchers: Mutex::new(Vec::new()),
         }
+    }
+
+    /// The clock this block waits against.
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.clock
+    }
+
+    /// Absolute deadline `timeout` from now, in this block's clock time.
+    pub fn deadline_in(&self, timeout: Option<Duration>) -> Option<Duration> {
+        timeout.map(|t| self.clock.now() + t)
     }
 
     /// Register an executor signal to be poked on counter changes.
@@ -128,12 +160,18 @@ impl ObjectCc {
     }
 
     /// Block until the access condition holds, then record the grant in
-    /// `max_granted`. `deadline` of `None` waits forever.
-    pub fn wait_access(&self, pv: u64, deadline: Option<Instant>) -> Result<(), WaitTimeout> {
-        let started = Instant::now();
+    /// `max_granted`. `deadline` is absolute, in this block's clock time;
+    /// `None` waits forever.
+    pub fn wait_access(&self, pv: u64, deadline: Option<Duration>) -> Result<(), WaitTimeout> {
+        let started = self.clock.now();
         let mut s = self.state.lock().unwrap();
         while s.lv != pv - 1 {
-            s = self.wait_step(s, deadline, started, "access condition")?;
+            let (g, expired) = wait_deadline(self.clock.as_ref(), &self.cond, s, deadline);
+            s = g;
+            // A wake-up racing the deadline: the condition wins.
+            if expired && s.lv != pv - 1 {
+                return Err(self.timeout(started, "access condition"));
+            }
         }
         s.max_granted = s.max_granted.max(pv);
         Ok(())
@@ -143,42 +181,24 @@ impl ObjectCc {
     /// and abort, and — for *irrevocable* transactions (§2.4) — in place
     /// of every access-condition wait, so they never observe early-released
     /// state. On success also records the grant.
-    pub fn wait_commit_cond(&self, pv: u64, deadline: Option<Instant>) -> Result<(), WaitTimeout> {
-        let started = Instant::now();
+    pub fn wait_commit_cond(&self, pv: u64, deadline: Option<Duration>) -> Result<(), WaitTimeout> {
+        let started = self.clock.now();
         let mut s = self.state.lock().unwrap();
         while s.ltv != pv - 1 {
-            s = self.wait_step(s, deadline, started, "commit condition")?;
+            let (g, expired) = wait_deadline(self.clock.as_ref(), &self.cond, s, deadline);
+            s = g;
+            if expired && s.ltv != pv - 1 {
+                return Err(self.timeout(started, "commit condition"));
+            }
         }
         s.max_granted = s.max_granted.max(pv);
         Ok(())
     }
 
-    fn wait_step<'a>(
-        &'a self,
-        guard: std::sync::MutexGuard<'a, CcState>,
-        deadline: Option<Instant>,
-        started: Instant,
-        what: &'static str,
-    ) -> Result<std::sync::MutexGuard<'a, CcState>, WaitTimeout> {
-        match deadline {
-            None => Ok(self.cond.wait(guard).unwrap()),
-            Some(d) => {
-                let now = Instant::now();
-                if now >= d {
-                    return Err(WaitTimeout {
-                        what,
-                        waited_ms: started.elapsed().as_millis() as u64,
-                    });
-                }
-                let (g, timeout) = self
-                    .cond
-                    .wait_timeout(guard, d - now)
-                    .unwrap();
-                if timeout.timed_out() && g.lv == u64::MAX {
-                    // unreachable; keeps the borrow checker simple
-                }
-                Ok(g)
-            }
+    fn timeout(&self, started: Duration, what: &'static str) -> WaitTimeout {
+        WaitTimeout {
+            what,
+            waited_ms: self.clock.now().saturating_sub(started).as_millis() as u64,
         }
     }
 
@@ -291,7 +311,8 @@ mod tests {
 
         let cc2 = Arc::clone(&cc);
         let waiter = thread::spawn(move || {
-            cc2.wait_access(pv2, Some(Instant::now() + Duration::from_secs(5)))
+            let deadline = cc2.deadline_in(Some(Duration::from_secs(5)));
+            cc2.wait_access(pv2, deadline)
                 .expect("pv2 should eventually be granted");
         });
         thread::sleep(Duration::from_millis(20));
@@ -318,8 +339,28 @@ mod tests {
         let cc = ObjectCc::new();
         let _pv1 = cc.assign_pv();
         let pv2 = cc.assign_pv();
-        let r = cc.wait_access(pv2, Some(Instant::now() + Duration::from_millis(30)));
+        let deadline = cc.deadline_in(Some(Duration::from_millis(30)));
+        let r = cc.wait_access(pv2, deadline);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn wait_times_out_in_virtual_time_without_real_sleeping() {
+        use crate::clock::VirtualClock;
+        let cc = ObjectCc::with_clock(Arc::new(VirtualClock::new()));
+        let _pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        // A 30-second *virtual* deadline on a stalled clock must fire in
+        // bounded real time via the stall escape hatch.
+        let deadline = cc.deadline_in(Some(Duration::from_secs(30)));
+        let t0 = std::time::Instant::now();
+        let r = cc.wait_access(pv2, deadline);
+        assert!(r.is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "virtual timeout must not consume real time"
+        );
+        assert!(cc.clock().now() >= Duration::from_secs(30));
     }
 
     #[test]

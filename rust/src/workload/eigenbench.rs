@@ -7,6 +7,7 @@
 
 use super::frameworks::FrameworkKind;
 use crate::api::{AccessDecl, ObjHandle, Suprema, TxError};
+use crate::clock::Clock;
 use crate::cluster::{Cluster, NetworkModel};
 use crate::object::{OpCall, RegisterObject};
 use crate::util::hist::Histogram;
@@ -48,6 +49,11 @@ pub struct EigenbenchParams {
     pub net: NetworkModel,
     /// Run irrevocable transactions instead of ordinary ones.
     pub irrevocable: bool,
+    /// Run on a [`crate::clock::VirtualClock`]: operation delays and
+    /// network latency are accounted in simulated time (no real sleeping)
+    /// and throughput is reported against simulated elapsed time. The
+    /// default; set `false` to measure wall-clock blocking for real.
+    pub virtual_time: bool,
     pub seed: u64,
 }
 
@@ -68,6 +74,7 @@ impl Default for EigenbenchParams {
             op_delay: Duration::from_millis(3),
             net: NetworkModel::lan(),
             irrevocable: false,
+            virtual_time: true,
             seed: 0xE16E_5EED,
         }
     }
@@ -96,8 +103,11 @@ pub struct EigenbenchResult {
     pub aborts: u64,
     /// Fraction of transactions that aborted ≥ once (Fig 13).
     pub abort_rate: f64,
+    /// Real elapsed time of the run.
     pub wall: Duration,
-    /// Per-transaction latency distribution (µs).
+    /// Simulated elapsed time (equals `wall` on a real clock).
+    pub sim: Duration,
+    /// Per-transaction latency distribution (µs, simulated time).
     pub latency: Histogram,
 }
 
@@ -105,7 +115,7 @@ impl EigenbenchResult {
     /// One CSV row: `framework,clients,nodes,ratio,throughput,aborts,...`.
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{:.1},{},{},{},{:.3},{}",
+            "{},{},{:.1},{},{},{},{:.3},{},{}",
             self.framework,
             self.params_label,
             self.throughput,
@@ -114,6 +124,7 @@ impl EigenbenchResult {
             self.aborts,
             self.abort_rate,
             self.wall.as_millis(),
+            self.sim.as_millis(),
         )
     }
 }
@@ -183,15 +194,25 @@ fn gen_tx(
 /// framework, hosts the arrays, spawns `total_clients` threads, runs
 /// `txns_per_client` transactions each, and aggregates the results.
 pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
-    let cluster = Arc::new(Cluster::new(params.nodes, params.net));
+    let cluster = Arc::new(if params.virtual_time {
+        Cluster::new_virtual(params.nodes, params.net)
+    } else {
+        Cluster::new(params.nodes, params.net)
+    });
+    let clock = Arc::clone(cluster.clock());
     let fw = Arc::new(params.kind.build(Arc::clone(&cluster)));
 
     // Hot arrays: `arrays_per_node` objects on every node, shared by all.
+    // Operation bodies burn their ~3 ms on the cluster's clock.
     let mut hot_names = Vec::new();
     for node in cluster.node_ids() {
         for i in 0..params.arrays_per_node {
             let name = format!("hot-{}-{}", node.0, i);
-            fw.host(node, &name, Box::new(RegisterObject::with_delay(0, params.op_delay)));
+            fw.host(
+                node,
+                &name,
+                Box::new(RegisterObject::with_delay_on(0, params.op_delay, Arc::clone(&clock))),
+            );
             hot_names.push(name);
         }
     }
@@ -206,7 +227,15 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
             if params.mild_ops > 0 {
                 for i in 0..params.arrays_per_node {
                     let name = format!("mild-{}-{}-{}", node.0, c, i);
-                    fw.host(node, &name, Box::new(RegisterObject::with_delay(0, params.op_delay)));
+                    fw.host(
+                        node,
+                        &name,
+                        Box::new(RegisterObject::with_delay_on(
+                            0,
+                            params.op_delay,
+                            Arc::clone(&clock),
+                        )),
+                    );
                     names.push(name);
                 }
             }
@@ -220,12 +249,14 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
     let txns_with_retry = Arc::new(AtomicU64::new(0));
 
     let t0 = Instant::now();
+    let sim0 = clock.now();
     let mut handles = Vec::new();
     let mut client_id = 0usize;
     for node in cluster.node_ids() {
         for _ in 0..params.clients_per_node {
             let fw = Arc::clone(&fw);
             let params = params.clone();
+            let clock = Arc::clone(&clock);
             let hot_names = Arc::clone(&hot_names);
             let mild_names = Arc::clone(&mild_per_client[client_id]);
             let committed_txns = Arc::clone(&committed_txns);
@@ -241,14 +272,14 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
                 let mut local_hist = Histogram::new();
                 for _ in 0..params.txns_per_client {
                     let prog = gen_tx(&mut rng, &params, &hot_names, &mild_names, &mut history);
-                    let t_tx = Instant::now();
+                    let t_tx = clock.now();
                     let r = fw.dtm().run(node, &prog.decls, params.irrevocable, &mut |t| {
                         for (idx, call) in &prog.ops {
                             t.call(ObjHandle(*idx), call.clone())?;
                         }
                         Ok(())
                     });
-                    local_hist.record_duration(t_tx.elapsed());
+                    local_hist.record_duration(clock.now().saturating_sub(t_tx));
                     match r {
                         Ok(stats) => {
                             committed_txns.fetch_add(1, Ordering::Relaxed);
@@ -278,12 +309,17 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
         h.join().expect("eigenbench client panicked");
     }
     let wall = t0.elapsed();
+    let sim = clock.now().saturating_sub(sim0);
     fw.shutdown();
 
     let txns = committed_txns.load(Ordering::Relaxed);
     let ops = committed_ops.load(Ordering::Relaxed);
     let aborts = fw.dtm().aborts();
     let retried = txns_with_retry.load(Ordering::Relaxed);
+    // Throughput is measured against the time base the run blocked on:
+    // simulated time under a virtual clock (falling back to wall time if
+    // the scenario injected no delays at all), wall time otherwise.
+    let elapsed = if params.virtual_time && !sim.is_zero() { sim } else { wall };
     EigenbenchResult {
         params_label: format!(
             "{}n/{}c/{}a/{}",
@@ -293,12 +329,13 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
             params.ratio_label()
         ),
         framework: fw.dtm().framework_name(),
-        throughput: ops as f64 / wall.as_secs_f64(),
+        throughput: ops as f64 / elapsed.as_secs_f64().max(f64::MIN_POSITIVE),
         committed_txns: txns,
         committed_ops: ops,
         aborts,
         abort_rate: if txns == 0 { 0.0 } else { retried as f64 / txns as f64 },
         wall,
+        sim,
         latency: Arc::try_unwrap(latency).map(|m| m.into_inner().unwrap()).unwrap_or_default(),
     }
 }
@@ -383,6 +420,36 @@ mod tests {
             assert_eq!(d.suprema.writes, writes[i]);
             assert_eq!(d.suprema.updates, 0);
         }
+    }
+
+    #[test]
+    fn virtual_time_accounts_latency_without_wall_clock_cost() {
+        // 50 ms per op × 4 ops × 2 txns per client would cost seconds of
+        // real sleeping; under the virtual clock it must be near-instant
+        // while still accounting at least one client's serial chain.
+        let r = run_eigenbench(&EigenbenchParams {
+            kind: FrameworkKind::Optsva,
+            nodes: 2,
+            clients_per_node: 2,
+            arrays_per_node: 4,
+            txns_per_client: 2,
+            hot_ops: 4,
+            op_delay: Duration::from_millis(50),
+            net: NetworkModel::lan(),
+            ..Default::default()
+        });
+        assert_eq!(r.committed_txns, 2 * 2 * 2);
+        assert!(
+            r.sim >= Duration::from_millis(400),
+            "one client's serial chain is ≥ 400 ms simulated, got {:?}",
+            r.sim
+        );
+        assert!(
+            r.wall < Duration::from_secs(10),
+            "virtual run must not sleep for real, took {:?}",
+            r.wall
+        );
+        assert!(r.throughput > 0.0);
     }
 
     #[test]

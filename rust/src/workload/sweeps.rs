@@ -7,6 +7,12 @@
 //! Absolute throughput differs from the paper's; the comparisons —
 //! who wins, by roughly what factor, where the crossovers are — are what
 //! the harness regenerates.
+//!
+//! All sweeps run in **virtual time** ([`EigenbenchParams::virtual_time`],
+//! on by default): injected operation and network latency is accounted on
+//! a [`crate::clock::VirtualClock`], so regenerating a figure costs
+//! seconds of CPU instead of minutes of sleeping, and throughput is
+//! reported against simulated elapsed time.
 
 use super::eigenbench::{run_eigenbench, EigenbenchParams, EigenbenchResult};
 use super::frameworks::FrameworkKind;
@@ -208,7 +214,7 @@ pub fn write_results_csv(name: &str, results: &[EigenbenchResult]) -> std::io::R
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
     let mut out = String::from(
-        "framework,label,throughput_ops_s,committed_txns,committed_ops,aborts,abort_rate,wall_ms\n",
+        "framework,label,throughput_ops_s,committed_txns,committed_ops,aborts,abort_rate,wall_ms,sim_ms\n",
     );
     for r in results {
         out.push_str(&r.csv_row());

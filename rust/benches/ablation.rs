@@ -1,11 +1,17 @@
 //! Ablation bench: which OptSVA-CF optimization buys what (DESIGN.md §5).
 //!
-//! Compares on the write-dominated Fig 10 point:
-//!   * `atomic-rmi2`       — full OptSVA-CF;
+//! Compares on the Fig 10 point, three read-write ratios:
+//!   * `atomic-rmi2+pipe`  — full OptSVA-CF, operations issued through the
+//!     asynchronous `submit` API (submit-then-wait pipelining);
+//!   * `atomic-rmi2`       — full OptSVA-CF, blocking `call` per op;
 //!   * `atomic-rmi2-sync`  — asynchrony disabled (buffering/last-write
-//!     release run inline on the caller's thread);
+//!     release run inline, `submit` degrades to `call`);
 //!   * `atomic-rmi`        — SVA (no buffering, no mode distinction):
 //!     isolates the entire OptSVA-CF optimization stack.
+//!
+//! Speedups in parentheses are relative to blocking `atomic-rmi2`; the
+//! pipelined row is where submit-then-wait beats blocking `call` on
+//! simulated time.
 //!
 //! `cargo bench --bench ablation` (`ARMI2_BENCH_QUICK=1` to smoke).
 
@@ -20,14 +26,17 @@ fn main() {
         "Ablation: throughput [ops/s], 4 nodes x 8 clients, 10 arrays/node",
         &["variant", "9÷1", "5÷5", "1÷9"],
     );
-    let kinds = [
-        FrameworkKind::Optsva,
-        FrameworkKind::OptsvaNoAsync,
-        FrameworkKind::Sva,
+    // (kind, pipelined, label) — the blocking baseline runs first so every
+    // later row can report its speedup against it.
+    let variants = [
+        (FrameworkKind::Optsva, false, "atomic-rmi2"),
+        (FrameworkKind::Optsva, true, "atomic-rmi2+pipe"),
+        (FrameworkKind::OptsvaNoAsync, false, "atomic-rmi2-sync"),
+        (FrameworkKind::Sva, false, "atomic-rmi"),
     ];
     let mut base: Vec<f64> = Vec::new();
-    for kind in kinds {
-        let mut row = vec![kind.label().to_string()];
+    for (kind, pipeline_ops, label) in variants {
+        let mut row = vec![label.to_string()];
         for read_pct in [90u8, 50, 10] {
             let r = run_eigenbench(&EigenbenchParams {
                 kind,
@@ -39,17 +48,20 @@ fn main() {
                 read_pct,
                 op_delay: Duration::from_micros(if quick { 100 } else { 800 }),
                 net: NetworkModel::lan(),
+                pipeline_ops,
                 ..Default::default()
             });
-            if kind == FrameworkKind::Optsva {
+            if kind == FrameworkKind::Optsva && !pipeline_ops {
                 base.push(r.throughput);
             }
             row.push(fmt_throughput(r.throughput));
-            if kind != FrameworkKind::Optsva {
+            if label != "atomic-rmi2" && !base.is_empty() {
                 let i = row.len() - 2;
-                let s = fmt_speedup(r.throughput, base[i]);
-                let last = row.last_mut().unwrap();
-                *last = format!("{last} ({s})");
+                if let Some(b) = base.get(i) {
+                    let s = fmt_speedup(r.throughput, *b);
+                    let last = row.last_mut().unwrap();
+                    *last = format!("{last} ({s})");
+                }
             }
         }
         table.add_row(row);

@@ -82,11 +82,24 @@ fn main() {
     bench("optsva: full 1-object update txn", 20, 200, || {
         let mut tx = sys.tx(NodeId(0));
         let h = tx.accesses("A", Suprema::updates(1));
-        tx.run(|t| {
-            t.call(h, ops::deposit(1))?;
-            Ok(())
-        })
-        .unwrap();
+        let _ = tx
+            .run(|t| {
+                t.call(h, ops::deposit(1))?;
+                Ok(())
+            })
+            .unwrap();
+    });
+
+    // 5b. Same transaction through the asynchronous submit path.
+    bench("optsva: full 1-object txn (submit+wait)", 20, 200, || {
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::updates(1));
+        let _ = tx
+            .run(|t| {
+                t.submit(h, ops::deposit(1))?.wait()?;
+                Ok(())
+            })
+            .unwrap();
     });
 
     // 6. Kernel call: spin reference vs AOT XLA artifact.

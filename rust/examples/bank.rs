@@ -13,7 +13,7 @@
 //!   total, because irrevocable transactions never read early-released
 //!   state and never abort.
 
-use atomic_rmi2::object::{account::ops, Account};
+use atomic_rmi2::object::{Account, AccountRef};
 use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx, TxError};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -46,19 +46,21 @@ fn main() {
         std::thread::spawn(move || {
             while !stop.load(Ordering::Acquire) {
                 let mut tx = sys.tx(NodeId(0)).irrevocable();
-                let handles: Vec<_> =
-                    (0..ACCOUNTS).map(|i| tx.reads(&format!("acct-{i}"), 1)).collect();
-                let mut total = 0i64;
-                tx.run(|t| {
-                    total = 0;
-                    for h in &handles {
-                        total += t.call(*h, ops::balance())?.as_int();
-                    }
-                    // The irrevocable side effect: printing mid-transaction.
-                    print!("");
-                    Ok(())
-                })
-                .expect("irrevocable audit can never abort");
+                let accounts: Vec<AccountRef> = (0..ACCOUNTS)
+                    .map(|i| AccountRef::new(tx.reads(&format!("acct-{i}"), 1)))
+                    .collect();
+                // The audited total is the body's return value.
+                let (total, _ops) = tx
+                    .run(|t| {
+                        let mut total = 0i64;
+                        for acct in &accounts {
+                            total += acct.balance(t)?;
+                        }
+                        // The irrevocable side effect: printing mid-transaction.
+                        print!("");
+                        Ok(total)
+                    })
+                    .expect("irrevocable audit can never abort");
                 assert_eq!(
                     total,
                     INITIAL * ACCOUNTS as i64,
@@ -86,12 +88,17 @@ fn main() {
                 // early-released state is forcibly aborted — retry it.
                 loop {
                     let mut tx = sys.tx(client);
-                    let hf = tx.accesses(&format!("acct-{from}"), Suprema::new(1, 0, 1));
-                    let ht = tx.updates(&format!("acct-{to}"), 1);
+                    let src =
+                        AccountRef::new(tx.accesses(&format!("acct-{from}"), Suprema::new(1, 0, 1)));
+                    let dst = AccountRef::new(tx.updates(&format!("acct-{to}"), 1));
                     let r = tx.run(|t| {
-                        t.call(hf, ops::withdraw(amount))?;
-                        t.call(ht, ops::deposit(amount))?;
-                        if t.call(hf, ops::balance())?.as_int() < 0 {
+                        // Both legs of the transfer are submitted without
+                        // waiting (§2.6); the overdraw check then reads src.
+                        let w = src.withdraw_async(t, amount)?;
+                        let d = dst.deposit_async(t, amount)?;
+                        w.wait()?;
+                        d.wait()?;
+                        if src.balance(t)? < 0 {
                             return t.abort(); // would overdraw: roll back
                         }
                         Ok(())

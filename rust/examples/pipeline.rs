@@ -13,9 +13,9 @@
 //! its last operation ran, so consecutive pipeline transactions overlap.
 //! Falls back to the pure-rust `SpinBackend` when artifacts are missing.
 
-use atomic_rmi2::object::{ComputeBackend, ComputeObject, OpCall, SpinBackend, Value};
+use atomic_rmi2::object::{ComputeBackend, ComputeObject, ComputeRef, SpinBackend};
 use atomic_rmi2::runtime::{XlaBackend, XlaRuntime};
-use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx};
+use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -55,15 +55,19 @@ fn main() {
                 for s in 0..STAGES - 1 {
                     // Read stage s (digest), update stage s+1 (mix).
                     let mut tx = sys.tx(NodeId(s as u16));
-                    let src = tx.reads(&format!("stage-{s}"), 1);
-                    let dst = tx.updates(&format!("stage-{}", s + 1), 1);
+                    let src = ComputeRef::new(tx.reads(&format!("stage-{s}"), 1));
+                    let dst = ComputeRef::new(tx.updates(&format!("stage-{}", s + 1), 1));
                     tx.run(|t| {
-                        let d = t.call(src, OpCall::nullary("digest"))?.as_float() as f32;
+                        let d = src.digest(t)? as f32;
                         // Parameters derived from the upstream digest.
                         let params: Vec<f32> = (0..dim)
                             .map(|i| (d + (c * 31 + round * 7 + i) as f32 * 0.01).sin() * 0.1)
                             .collect();
-                        t.call(dst, OpCall::new("mix", vec![Value::Floats(params)]))?;
+                        // Fire-and-forget: the mix is submitted and never
+                        // awaited — commit drains it (and would surface any
+                        // kernel failure), so the client thread is free
+                        // immediately (§2.6 write-behind).
+                        let _mix = dst.mix_async(t, params)?;
                         Ok(())
                     })
                     .expect("pipeline transaction failed");

@@ -1,4 +1,5 @@
-//! Quickstart: the paper's bank-transfer example (Fig 9), end to end.
+//! Quickstart: the paper's bank-transfer example (Fig 9), end to end, on
+//! the typed builder/futures API.
 //!
 //! ```text
 //! cargo run --release --example quickstart
@@ -6,10 +7,11 @@
 //!
 //! Builds a 2-node simulated cluster, hosts two `Account` objects, and
 //! runs the canonical Atomic RMI 2 transaction: declare the access set
-//! with suprema in the preamble, transfer money, abort manually if the
-//! balance went negative.
+//! with suprema in the preamble, transfer money asynchronously (the
+//! withdraw and the deposit are `submit`ted and overlap, §2.6/§2.8),
+//! abort manually if the balance went negative.
 
-use atomic_rmi2::object::{account::ops, Account};
+use atomic_rmi2::object::{Account, AccountRef};
 use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx};
 use std::sync::Arc;
 
@@ -23,16 +25,23 @@ fn main() {
     sys.host(NodeId(1), "B", Box::new(Account::with_balance(100)));
 
     // Fig 9: the preamble declares objects + suprema, then the body runs.
+    // Typed facades replace hand-rolled OpCall/Value plumbing.
     let mut tx = sys.tx(NodeId(0));
-    let a = tx.accesses("A", Suprema::new(1, 0, 1)); // 1 read, 1 update
-    let b = tx.updates("B", 1); //                      1 update
+    let a = AccountRef::new(tx.accesses("A", Suprema::new(1, 0, 1))); // 1 read, 1 update
+    let b = AccountRef::new(tx.updates("B", 1)); //                      1 update
     let result = tx.run(|t| {
-        t.call(a, ops::withdraw(100))?;
-        t.call(b, ops::deposit(100))?;
-        if t.call(a, ops::balance())?.as_int() < 0 {
-            return t.abort(); // manual rollback, like the paper
+        // Submit both legs of the transfer without waiting: they run on
+        // their home nodes concurrently while this thread continues.
+        let w = a.withdraw_async(t, 100)?;
+        let d = b.deposit_async(t, 100)?;
+        w.wait()?;
+        d.wait()?;
+        // The balance check reads A synchronously, like a classic stub.
+        let bal = a.balance(t)?;
+        if bal < 0 {
+            t.abort()?; // manual rollback, like the paper (always Err)
         }
-        Ok(())
+        Ok(bal)
     });
 
     println!("transaction: {result:?}");
@@ -46,6 +55,8 @@ fn main() {
     println!("A = {}, B = {}", bal(oid_a), bal(oid_b));
     assert_eq!(bal(oid_a), 400);
     assert_eq!(bal(oid_b), 200);
+    let (remaining, _ops) = result.expect("transfer commits");
+    assert_eq!(remaining, 400, "the body's return value is the A balance");
 
     let (msgs, bytes, local) = cluster.stats.snapshot();
     println!("network: {msgs} messages, {bytes} bytes, {local} co-located calls");

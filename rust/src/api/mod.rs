@@ -1,16 +1,44 @@
 //! Public transactional API, common to every framework in the repo.
 //!
-//! Mirrors the paper's `Transaction` interface (Fig 8): a preamble declares
-//! the access set with optional *suprema* (upper bounds on read / write /
-//! update counts per object), then `run` executes the transaction body.
-//! The same API drives OptSVA-CF (Atomic RMI 2), SVA (Atomic RMI), TFA
-//! (HyFlow2 stand-in), and the lock-based baselines, so Eigenbench and the
-//! examples are framework-agnostic.
+//! Mirrors the paper's `Transaction` interface (Fig 8) with one addition:
+//! remote operations are **asynchronous by default**. A *preamble* —
+//! expressed through [`TxBuilder`] — declares the access set with optional
+//! *suprema* (upper bounds on read / write / update counts per object,
+//! §2.2) and per-transaction knobs (irrevocability §2.4, failure-suspicion
+//! timeout §3.4, the asynchrony ablation switch), then [`TxBuilder::run`]
+//! executes the transaction body with the framework's retry policy and
+//! returns the body's value together with [`TxStats`].
+//!
+//! Inside the body, [`TxCtx::submit`] dispatches an operation to the
+//! object's home node and returns an [`OpFuture`] immediately — buffered
+//! writes resolve without any synchronization (§2.6) and reads resolve as
+//! soon as the copy buffer or the access condition is ready (§2.7, §2.8) —
+//! while [`TxCtx::call`] remains the blocking `submit(..).wait()`
+//! convenience. The same API drives OptSVA-CF (Atomic RMI 2), SVA
+//! (Atomic RMI), TFA (the HyFlow2 stand-in) and the lock-based baselines,
+//! so Eigenbench and the examples stay framework-agnostic.
+//!
+//! # Migration from the pre-futures API
+//!
+//! | pre-redesign                                           | now |
+//! |--------------------------------------------------------|-----|
+//! | `dtm.run(client, &[AccessDecl], irrevocable, body)`    | `dtm.tx(client).with_decls(&decls).irrevocable_if(b).run(body)` |
+//! | `tx.reads("x", 2)` only on the concrete OptSVA builder | `dtm.tx(client).reads("x", 2).writes("y", 1)` on any framework |
+//! | body smuggles results through captured `&mut` outvars  | body returns `Result<R, TxError>`; `run` yields `(R, TxStats)` |
+//! | `TxCtx::call` (always blocks for the round trip)       | `TxCtx::submit -> OpFuture` + [`OpFuture::wait`]; `call` still works |
+//! | timeout/asynchrony fixed system-wide in `OptsvaConfig` | per-transaction `.timeout(..)` / `.no_timeout()` / `.asynchronous(..)` |
+//! | hand-rolled `OpCall` / `Value` casts in user code      | typed facades ([`crate::object::refs`]: `AccountRef`, `KvRef`, …) |
+//!
+//! Paper map: preamble/suprema — Fig 8 & §2.2; `submit` for writes — §2.6
+//! (buffering, no synchronization); read-only asynchrony — §2.7;
+//! irrevocability — §2.4; the retry driver's cascading-abort handling —
+//! §2.3.
 
 use crate::cluster::{NodeId, Oid};
 use crate::object::{ObjectError, OpCall, Value};
 use crate::versioning::WaitTimeout;
 use std::fmt;
+use std::time::Duration;
 
 /// Upper bounds on the number of operations a transaction will perform on
 /// one object, by mode. `u64::MAX` means "unknown" (paper: "If suprema are
@@ -137,7 +165,9 @@ impl From<ObjectError> for TxError {
 }
 
 impl TxError {
-    /// Should the driver re-execute the transaction body?
+    /// Could the driver re-execute the transaction body? Note that
+    /// cascading aborts ([`TxError::ForcedAbort`]) are retryable only up
+    /// to [`FORCED_ABORT_RETRY_CAP`] — the shared driver enforces the cap.
     pub fn is_retryable(&self) -> bool {
         matches!(
             self,
@@ -146,16 +176,102 @@ impl TxError {
     }
 }
 
-/// Handle to a declared object within a running transaction.
+/// Handle to a declared object within a running transaction. Handles are
+/// assigned in declaration order, starting at 0.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ObjHandle(pub usize);
 
-/// A transaction body's view: invoke operations, abort, or retry.
+// ---------------------------------------------------------------------------
+// Operation futures
+// ---------------------------------------------------------------------------
+
+/// Framework hook behind a pending [`OpFuture`]: a poll/wait handle for an
+/// operation dispatched to its object's home node.
+pub trait PendingOp: Send {
+    /// Has the operation executed (wait would not block)?
+    fn is_ready(&self) -> bool;
+    /// Block until the result is available, paying any remaining simulated
+    /// response latency, and return it.
+    fn wait(self: Box<Self>) -> Result<Value, TxError>;
+}
+
+/// Handle to one submitted operation (paper §2.6/§2.8: buffered writes
+/// return without synchronization; reads resolve when the buffer or the
+/// access condition is ready).
+///
+/// Dropping an `OpFuture` does **not** cancel the operation: it still
+/// executes, still counts toward the declared suprema, and a failure
+/// surfaces at commit. `wait()` only observes the result earlier.
+#[must_use = "the operation still runs if dropped, but its result is only observed via wait()"]
+pub enum OpFuture {
+    /// Already resolved (synchronous frameworks, ablation mode, writes).
+    Ready(Result<Value, TxError>),
+    /// In flight on the home node.
+    Pending(Box<dyn PendingOp>),
+}
+
+impl OpFuture {
+    /// A future that resolved at submission time.
+    pub fn ready(r: Result<Value, TxError>) -> Self {
+        OpFuture::Ready(r)
+    }
+
+    /// Wrap a framework-specific pending operation.
+    pub fn pending(p: Box<dyn PendingOp>) -> Self {
+        OpFuture::Pending(p)
+    }
+
+    /// Non-blocking: would `wait` return immediately?
+    pub fn is_ready(&self) -> bool {
+        match self {
+            OpFuture::Ready(_) => true,
+            OpFuture::Pending(p) => p.is_ready(),
+        }
+    }
+
+    /// Block until the operation has executed and its response arrived,
+    /// then return the operation's result.
+    pub fn wait(self) -> Result<Value, TxError> {
+        match self {
+            OpFuture::Ready(r) => r,
+            OpFuture::Pending(p) => p.wait(),
+        }
+    }
+
+    /// Wait on a batch in order, failing fast on the first error.
+    pub fn wait_all(futures: impl IntoIterator<Item = OpFuture>) -> Result<Vec<Value>, TxError> {
+        futures.into_iter().map(OpFuture::wait).collect()
+    }
+}
+
+impl fmt::Debug for OpFuture {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            OpFuture::Ready(r) => write!(f, "OpFuture::Ready({r:?})"),
+            OpFuture::Pending(p) => write!(f, "OpFuture::Pending(ready={})", p.is_ready()),
+        }
+    }
+}
+
+/// A transaction body's view: submit operations, abort, or retry.
 /// Implemented by every framework.
 pub trait TxCtx {
-    /// Invoke `call` on the declared object `h`. The mode is derived from
-    /// the object's interface annotations.
-    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError>;
+    /// Dispatch `call` on the declared object `h` without waiting for the
+    /// result. Frameworks without asynchronous machinery (and OptSVA-CF in
+    /// the `asynchrony = false` ablation) execute the operation inline and
+    /// return an already-resolved future, which preserves the sequential
+    /// semantics exactly.
+    ///
+    /// OptSVA-CF additionally guarantees that a future dropped unresolved
+    /// surfaces its failure at commit; on the synchronous frameworks
+    /// (SVA, TFA, locks) an unobserved inline error is lost with the
+    /// dropped future — `wait()` (or `call`) to observe errors there.
+    fn submit(&mut self, h: ObjHandle, call: OpCall) -> Result<OpFuture, TxError>;
+
+    /// Blocking convenience: `submit(h, call)?.wait()`.
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+        self.submit(h, call)?.wait()
+    }
 
     /// Manual rollback (paper Fig 9): returns `Err(ManualAbort)` so the
     /// body can `return t.abort()` / `?`-propagate out; the framework
@@ -176,14 +292,15 @@ pub trait TxCtx {
 /// Outcome statistics for one committed transaction.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TxStats {
-    /// Operations executed on shared objects.
+    /// Operations executed on shared objects (final attempt).
     pub ops: u64,
     /// Times the body was (re-)executed before commit (1 = no retries).
+    /// Counted by the shared retry driver, so an attempt that aborts
+    /// before its first operation still counts.
     pub attempts: u64,
 }
 
-/// A framework: creates and runs transactions over a shared cluster.
-/// `AccessDecl` names an object and its suprema.
+/// One preamble entry: an object name and its suprema.
 #[derive(Debug, Clone)]
 pub struct AccessDecl {
     pub name: String,
@@ -196,19 +313,55 @@ impl AccessDecl {
     }
 }
 
-/// Framework-polymorphic transaction runner: executes `body` with
-/// at-most-`max_attempts` retries (manual `retry()`, optimistic conflicts,
-/// forced aborts). Returns the body's value and stats.
+/// Default bound on body re-executions (manual retries) for the
+/// pessimistic frameworks. Optimistic TFA defaults to a higher bound
+/// (conflict-retries are its normal operating mode); a [`TxSpec`] /
+/// [`TxBuilder::max_attempts`] override beats either default.
+pub const DEFAULT_MAX_ATTEMPTS: u64 = 1000;
+
+/// Bound on *cascading-abort* retries: a transaction forced to abort
+/// because it observed early-released state of an aborter (§2.3) is
+/// re-executed at most this many times. An unbounded cascade (e.g. an
+/// aborter stuck in a crash loop) would otherwise retry forever, since
+/// every [`TxError::ForcedAbort`] looks retryable in isolation.
+pub const FORCED_ABORT_RETRY_CAP: u64 = 64;
+
+/// The complete, framework-agnostic transaction preamble: access
+/// declarations plus per-transaction knobs. Built by [`TxBuilder`] and
+/// consumed by [`Dtm::run_tx`].
+#[derive(Debug, Clone, Default)]
+pub struct TxSpec {
+    /// Declared access set; handle `i` is `decls[i]`.
+    pub decls: Vec<AccessDecl>,
+    /// Run irrevocably (§2.4): never observe early-released state, never
+    /// abort. Frameworks without the distinction ignore it.
+    pub irrevocable: bool,
+    /// Failure-suspicion deadline override: `None` keeps the framework
+    /// default, `Some(None)` disables suspicion (unbounded waits),
+    /// `Some(Some(t))` suspects after `t`.
+    pub wait_timeout: Option<Option<Duration>>,
+    /// Asynchrony override for OptSVA-CF (`None` keeps the system
+    /// configuration): `Some(false)` is the ablation mode in which
+    /// `submit` degrades to the sequential blocking path.
+    pub asynchrony: Option<bool>,
+    /// Bound on body re-executions; `None` keeps the framework default
+    /// ([`DEFAULT_MAX_ATTEMPTS`] for the pessimistic frameworks, a higher
+    /// bound for optimistic TFA whose conflicts retry routinely).
+    pub max_attempts: Option<u64>,
+}
+
+/// Framework-polymorphic transaction runner.
 pub trait Dtm: Send + Sync {
     fn framework_name(&self) -> &'static str;
 
-    /// Run a transaction from `client` over the declared access set.
-    /// The implementation handles start/commit/abort and retries.
-    fn run(
+    /// Run a transaction from `client` over the preamble in `spec`,
+    /// handling start/commit/abort and the retry policy. Prefer the
+    /// [`TxBuilder`] front end (`dtm.tx(client)`), which also carries the
+    /// body's return value.
+    fn run_tx(
         &self,
         client: NodeId,
-        decls: &[AccessDecl],
-        irrevocable: bool,
+        spec: &TxSpec,
         body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
     ) -> Result<TxStats, TxError>;
 
@@ -218,6 +371,177 @@ pub trait Dtm: Send + Sync {
 
     /// Total commits so far.
     fn commits(&self) -> u64;
+}
+
+impl<'a> dyn Dtm + 'a {
+    /// Begin building a transaction from `client` (the Fig 8 preamble).
+    pub fn tx(&self, client: NodeId) -> TxBuilder<'_> {
+        TxBuilder::new(self, client)
+    }
+}
+
+/// Chainable transaction preamble over any [`Dtm`] (paper Fig 8):
+///
+/// ```ignore
+/// let (sum, stats) = dtm
+///     .tx(client)
+///     .reads("x", 2)
+///     .writes("y", 1)
+///     .irrevocable()
+///     .run(|t| { /* body using ObjHandle(0), ObjHandle(1) */ Ok(0i64) })?;
+/// ```
+///
+/// Declarations yield handles in order: the first declared object is
+/// `ObjHandle(0)`, the second `ObjHandle(1)`, … — or use
+/// [`TxBuilder::declare`] to capture the handle directly, and
+/// [`TxBuilder::handle`] to look one up by name.
+pub struct TxBuilder<'d> {
+    dtm: &'d (dyn Dtm + 'd),
+    client: NodeId,
+    spec: TxSpec,
+}
+
+impl<'d> TxBuilder<'d> {
+    pub fn new(dtm: &'d (dyn Dtm + 'd), client: NodeId) -> Self {
+        TxBuilder { dtm, client, spec: TxSpec::default() }
+    }
+
+    /// Preamble: declare read-only access with supremum `n` (Fig 8).
+    pub fn reads(mut self, name: &str, n: u64) -> Self {
+        self.declare(name, Suprema::reads(n));
+        self
+    }
+
+    /// Preamble: declare write-only access with supremum `n`.
+    pub fn writes(mut self, name: &str, n: u64) -> Self {
+        self.declare(name, Suprema::writes(n));
+        self
+    }
+
+    /// Preamble: declare update access with supremum `n`.
+    pub fn updates(mut self, name: &str, n: u64) -> Self {
+        self.declare(name, Suprema::updates(n));
+        self
+    }
+
+    /// Preamble: declare mixed access with full per-mode suprema.
+    pub fn accesses(mut self, name: &str, sup: Suprema) -> Self {
+        self.declare(name, sup);
+        self
+    }
+
+    /// Declare and return the object's handle (incremental style).
+    pub fn declare(&mut self, name: &str, sup: Suprema) -> ObjHandle {
+        self.spec.decls.push(AccessDecl::new(name, sup));
+        ObjHandle(self.spec.decls.len() - 1)
+    }
+
+    /// Append a pre-built declaration list (handles follow list order).
+    pub fn with_decls(mut self, decls: &[AccessDecl]) -> Self {
+        self.spec.decls.extend_from_slice(decls);
+        self
+    }
+
+    /// Mark the transaction irrevocable (§2.4).
+    pub fn irrevocable(mut self) -> Self {
+        self.spec.irrevocable = true;
+        self
+    }
+
+    /// Conditionally mark the transaction irrevocable.
+    pub fn irrevocable_if(mut self, on: bool) -> Self {
+        self.spec.irrevocable |= on;
+        self
+    }
+
+    /// Per-transaction failure-suspicion deadline (§3.4).
+    pub fn timeout(mut self, t: Duration) -> Self {
+        self.spec.wait_timeout = Some(Some(t));
+        self
+    }
+
+    /// Disable failure suspicion for this transaction: waits are unbounded.
+    pub fn no_timeout(mut self) -> Self {
+        self.spec.wait_timeout = Some(None);
+        self
+    }
+
+    /// Per-transaction asynchrony override (OptSVA-CF ablation switch).
+    pub fn asynchronous(mut self, on: bool) -> Self {
+        self.spec.asynchrony = Some(on);
+        self
+    }
+
+    /// Bound body re-executions (retries / conflicts), overriding the
+    /// framework default.
+    pub fn max_attempts(mut self, n: u64) -> Self {
+        self.spec.max_attempts = Some(n.max(1));
+        self
+    }
+
+    /// Handle of a previously declared object, by name.
+    pub fn handle(&self, name: &str) -> Option<ObjHandle> {
+        self.spec.decls.iter().position(|d| d.name == name).map(ObjHandle)
+    }
+
+    /// The accumulated preamble.
+    pub fn spec(&self) -> &TxSpec {
+        &self.spec
+    }
+
+    /// Execute the transaction body: begin, run, commit — with the
+    /// framework's retry policy. Returns the body's value (from the
+    /// attempt that committed) and the run's statistics.
+    pub fn run<R>(
+        self,
+        mut body: impl FnMut(&mut dyn TxCtx) -> Result<R, TxError>,
+    ) -> Result<(R, TxStats), TxError> {
+        let mut out: Option<R> = None;
+        let stats = self.dtm.run_tx(self.client, &self.spec, &mut |ctx| {
+            out = Some(body(ctx)?);
+            Ok(())
+        })?;
+        let r = out.expect("committed transaction ran its body");
+        Ok((r, stats))
+    }
+}
+
+/// Shared retry driver used by every framework's [`Dtm::run_tx`]:
+/// re-executes `attempt` (one full begin/body/commit cycle returning the
+/// attempt's operation count) while the error is retryable — at most
+/// `max_attempts` executions, with a dedicated cap on cascading-abort
+/// retries — and counts **every** body execution in
+/// [`TxStats::attempts`], including attempts that abort before their
+/// first operation.
+///
+/// `on_retry(attempt_no, err)` runs before each re-execution (TFA uses it
+/// for abort accounting and randomized backoff).
+pub fn run_with_retries(
+    max_attempts: u64,
+    mut attempt: impl FnMut() -> Result<u64, TxError>,
+    mut on_retry: impl FnMut(u64, &TxError),
+) -> Result<TxStats, TxError> {
+    let mut attempts = 0u64;
+    let mut forced = 0u64;
+    loop {
+        attempts += 1;
+        match attempt() {
+            Ok(ops) => return Ok(TxStats { ops, attempts }),
+            Err(e) => {
+                if matches!(e, TxError::ForcedAbort(_)) {
+                    forced += 1;
+                    if forced >= FORCED_ABORT_RETRY_CAP {
+                        return Err(e);
+                    }
+                }
+                if e.is_retryable() && attempts < max_attempts {
+                    on_retry(attempts, &e);
+                    continue;
+                }
+                return Err(e);
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -241,5 +565,138 @@ mod tests {
         assert!(TxError::ForcedAbort("cascade".into()).is_retryable());
         assert!(!TxError::ManualAbort.is_retryable());
         assert!(!TxError::Completed.is_retryable());
+    }
+
+    #[test]
+    fn ready_futures_resolve_immediately() {
+        let f = OpFuture::ready(Ok(Value::Int(7)));
+        assert!(f.is_ready());
+        assert_eq!(f.wait().unwrap(), Value::Int(7));
+        let f = OpFuture::ready(Err(TxError::ManualAbort));
+        assert_eq!(f.wait().unwrap_err(), TxError::ManualAbort);
+        let vals = OpFuture::wait_all([
+            OpFuture::ready(Ok(Value::Int(1))),
+            OpFuture::ready(Ok(Value::Int(2))),
+        ])
+        .unwrap();
+        assert_eq!(vals, vec![Value::Int(1), Value::Int(2)]);
+    }
+
+    #[test]
+    fn builder_assigns_handles_in_declaration_order() {
+        struct Nop;
+        impl Dtm for Nop {
+            fn framework_name(&self) -> &'static str {
+                "nop"
+            }
+            fn run_tx(
+                &self,
+                _client: NodeId,
+                spec: &TxSpec,
+                body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+            ) -> Result<TxStats, TxError> {
+                struct Ctx(NodeId);
+                impl TxCtx for Ctx {
+                    fn submit(&mut self, _h: ObjHandle, _c: OpCall) -> Result<OpFuture, TxError> {
+                        Ok(OpFuture::ready(Ok(Value::Unit)))
+                    }
+                    fn client(&self) -> NodeId {
+                        self.0
+                    }
+                }
+                assert!(spec.irrevocable);
+                assert_eq!(spec.wait_timeout, Some(None));
+                let mut ctx = Ctx(NodeId(0));
+                body(&mut ctx)?;
+                Ok(TxStats { ops: 0, attempts: 1 })
+            }
+            fn aborts(&self) -> u64 {
+                0
+            }
+            fn commits(&self) -> u64 {
+                0
+            }
+        }
+        let dtm: &dyn Dtm = &Nop;
+        let mut b = dtm.tx(NodeId(0)).reads("x", 2).writes("y", 1);
+        assert_eq!(b.handle("x"), Some(ObjHandle(0)));
+        assert_eq!(b.handle("y"), Some(ObjHandle(1)));
+        assert_eq!(b.handle("z"), None);
+        let h = b.declare("z", Suprema::updates(1));
+        assert_eq!(h, ObjHandle(2));
+        let (v, stats) = b.irrevocable().no_timeout().run(|t| {
+            t.call(ObjHandle(0), OpCall::nullary("get"))?;
+            Ok(42i64)
+        })
+        .unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(stats.attempts, 1);
+    }
+
+    #[test]
+    fn retry_driver_counts_zero_op_attempts() {
+        let mut calls = 0u64;
+        let stats = run_with_retries(
+            DEFAULT_MAX_ATTEMPTS,
+            || {
+                calls += 1;
+                if calls < 3 {
+                    Err(TxError::Retry) // aborts before any op
+                } else {
+                    Ok(5)
+                }
+            },
+            |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(stats.attempts, 3);
+        assert_eq!(stats.ops, 5);
+    }
+
+    #[test]
+    fn retry_driver_caps_cascading_aborts() {
+        let mut calls = 0u64;
+        let err = run_with_retries(
+            DEFAULT_MAX_ATTEMPTS,
+            || {
+                calls += 1;
+                Err(TxError::ForcedAbort("cascade".into()))
+            },
+            |_, _| {},
+        )
+        .unwrap_err();
+        assert!(matches!(err, TxError::ForcedAbort(_)));
+        assert_eq!(calls, FORCED_ABORT_RETRY_CAP, "cascades must be capped");
+    }
+
+    #[test]
+    fn retry_driver_respects_max_attempts_and_terminal_errors() {
+        let mut calls = 0u64;
+        let mut retries = 0u64;
+        let err = run_with_retries(
+            4,
+            || {
+                calls += 1;
+                Err(TxError::Conflict("v".into()))
+            },
+            |_, _| retries += 1,
+        )
+        .unwrap_err();
+        assert!(matches!(err, TxError::Conflict(_)));
+        assert_eq!(calls, 4);
+        assert_eq!(retries, 3);
+
+        let mut calls = 0u64;
+        let err = run_with_retries(
+            4,
+            || {
+                calls += 1;
+                Err(TxError::ManualAbort)
+            },
+            |_, _| {},
+        )
+        .unwrap_err();
+        assert_eq!(err, TxError::ManualAbort);
+        assert_eq!(calls, 1, "manual aborts are not retried");
     }
 }

@@ -197,6 +197,26 @@ impl Cluster {
         result
     }
 
+    /// Account a one-way message that was *sent at* `sent_at` (cluster
+    /// clock time) and block the calling thread only until its arrival —
+    /// the pipelined-delivery counterpart of [`Cluster::send`], used for
+    /// asynchronous operation responses: the transmission overlaps with
+    /// whatever the caller did since `sent_at`, so a caller that waits
+    /// late pays nothing.
+    pub fn deliver(&self, from: NodeId, to: NodeId, bytes: usize, sent_at: Duration) {
+        if from == to {
+            self.stats.local_calls.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        let arrival = sent_at + self.net.delay(bytes);
+        let now = self.clock.now();
+        if arrival > now {
+            self.clock.sleep(arrival - now);
+        }
+    }
+
     /// One-way message (no reply): fault-detection pings, invalidations.
     pub fn send(&self, from: NodeId, to: NodeId, bytes: usize) {
         if from == to {
@@ -285,6 +305,31 @@ mod tests {
         let (msgs, bytes, _) = c.stats.snapshot();
         assert_eq!(msgs, 2);
         assert_eq!(bytes, 200);
+    }
+
+    #[test]
+    fn deliver_overlaps_transmission_with_caller_work() {
+        let c = Cluster::new_virtual(
+            2,
+            NetworkModel { one_way: Duration::from_millis(10), per_kib: Duration::ZERO },
+        );
+        let sent_at = c.clock().now();
+        c.clock().sleep(Duration::from_millis(25)); // caller did other work meanwhile
+        c.deliver(NodeId(1), NodeId(0), 64, sent_at);
+        assert_eq!(
+            c.clock().now(),
+            Duration::from_millis(25),
+            "arrival already passed: no extra wait"
+        );
+        let sent_at = c.clock().now();
+        c.deliver(NodeId(1), NodeId(0), 64, sent_at);
+        assert_eq!(
+            c.clock().now(),
+            Duration::from_millis(35),
+            "fresh delivery pays the one-way latency"
+        );
+        let (msgs, _, _) = c.stats.snapshot();
+        assert_eq!(msgs, 2);
     }
 
     #[test]

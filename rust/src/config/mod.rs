@@ -151,6 +151,9 @@ impl KvConfig {
         if let Some(v) = self.typed::<bool>("irrevocable")? {
             p.irrevocable = v;
         }
+        if let Some(v) = self.typed::<bool>("pipeline_ops")? {
+            p.pipeline_ops = v;
+        }
         if let Some(v) = self.typed::<bool>("virtual_time")? {
             p.virtual_time = v;
         }
@@ -233,7 +236,7 @@ mod tests {
     #[test]
     fn eigenbench_overlay_applies_fields() {
         let kv = KvConfig::parse(
-            "framework = hyflow2\nnodes = 8\nclients_per_node = 16\nread_pct = 10\nop_delay_us = 500\nirrevocable = true",
+            "framework = hyflow2\nnodes = 8\nclients_per_node = 16\nread_pct = 10\nop_delay_us = 500\nirrevocable = true\npipeline_ops = true",
         )
         .unwrap();
         let p = kv.to_eigenbench().unwrap();
@@ -243,6 +246,7 @@ mod tests {
         assert_eq!(p.read_pct, 10);
         assert_eq!(p.op_delay, Duration::from_micros(500));
         assert!(p.irrevocable);
+        assert!(p.pipeline_ops);
         // untouched fields keep defaults
         assert_eq!(p.locality, 0.5);
     }

@@ -206,9 +206,17 @@ impl Executor {
                     }
                 }
             }
+            let ran_any = !runnable.is_empty();
             for (action, handle) in runnable {
                 action();
                 handle.complete();
+            }
+            if ran_any {
+                // A completed task may be exactly what a queued task's
+                // condition was gated on (submitted operations chain per
+                // object): rescan immediately instead of waiting for a
+                // poke or the staleness timeout.
+                continue;
             }
             // Sleep until a counter changes or a task arrives; the timeout
             // bounds staleness if a poke races with queue insertion.

@@ -52,7 +52,9 @@ pub mod util;
 pub mod workload;
 pub mod versioning;
 
-pub use api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError, TxStats};
+pub use api::{
+    AccessDecl, Dtm, ObjHandle, OpFuture, Suprema, TxBuilder, TxCtx, TxError, TxSpec, TxStats,
+};
 pub use clock::{Clock, RealClock, VirtualClock};
 pub use cluster::{Cluster, NetworkModel, NodeId, Oid};
 pub use optsva::{AtomicRmi2, OptsvaConfig};

@@ -24,7 +24,7 @@ mod rwlock;
 
 pub use rwlock::{DistRwLock, LockMode};
 
-use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::api::{Dtm, ObjHandle, OpFuture, TxCtx, TxError, TxSpec, TxStats};
 use crate::cluster::{Cluster, NodeId, Oid};
 use crate::object::{OpCall, SharedObject, Value};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -186,19 +186,22 @@ impl LockTx<'_> {
 }
 
 impl TxCtx for LockTx<'_> {
-    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+    /// Lock-based transactions hold their locks for the duration anyway:
+    /// `submit` executes inline and returns a resolved future, so `call`
+    /// (the trait default) is unchanged.
+    fn submit(&mut self, h: ObjHandle, call: OpCall) -> Result<OpFuture, TxError> {
         let node = self.held[h.0].slot.oid.node;
         let req = call.wire_size();
         let client = self.client;
         let cluster = Arc::clone(&self.sys.cluster);
-        cluster.rpc(client, node, req, || {
+        Ok(OpFuture::ready(cluster.rpc(client, node, req, || {
             let r = self.invoke(h, &call);
             let resp = match &r {
                 Ok(v) => v.wire_size(),
                 Err(_) => 16,
             };
             (r, resp)
-        })
+        })))
     }
 
     fn client(&self) -> NodeId {
@@ -211,14 +214,17 @@ impl Dtm for Arc<LockSystem> {
         self.label()
     }
 
-    fn run(
+    // Locks never abort (everything is effectively irrevocable) and never
+    // retry: the spec's irrevocable/timeout/asynchrony knobs are ignored
+    // and `attempts` is always 1.
+    fn run_tx(
         &self,
         client: NodeId,
-        decls: &[AccessDecl],
-        _irrevocable: bool, // locks never abort: everything is irrevocable
+        spec: &TxSpec,
         body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
     ) -> Result<TxStats, TxError> {
         let cluster = Arc::clone(&self.cluster);
+        let decls = &spec.decls;
 
         // Resolve and sort the access set by Oid — the global lock order.
         let mut resolved: Vec<(usize, Oid)> = Vec::with_capacity(decls.len());
@@ -302,9 +308,23 @@ impl Dtm for Arc<LockSystem> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::Suprema;
+    use crate::api::{AccessDecl, Suprema};
     use crate::cluster::NetworkModel;
     use crate::object::{account::ops, Account};
+
+    /// Run a body over a declaration list through the builder front end.
+    fn run(
+        sys: &Arc<LockSystem>,
+        client: NodeId,
+        decls: &[AccessDecl],
+        body: impl FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError> {
+        (sys as &dyn Dtm)
+            .tx(client)
+            .with_decls(decls)
+            .run(body)
+            .map(|((), stats)| stats)
+    }
 
     fn run_transfer(kind: LockKind, discipline: Discipline) {
         let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
@@ -315,13 +335,12 @@ mod tests {
             AccessDecl::new("A", Suprema::new(0, 0, 1)),
             AccessDecl::new("B", Suprema::new(0, 0, 1)),
         ];
-        let stats = sys
-            .run(NodeId(0), &decls, false, &mut |t| {
-                t.call(ObjHandle(0), ops::withdraw(30))?;
-                t.call(ObjHandle(1), ops::deposit(30))?;
-                Ok(())
-            })
-            .unwrap();
+        let stats = run(&sys, NodeId(0), &decls, |t| {
+            t.call(ObjHandle(0), ops::withdraw(30))?;
+            t.call(ObjHandle(1), ops::deposit(30))?;
+            Ok(())
+        })
+        .unwrap();
         assert_eq!(stats.ops, 2);
         assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 70);
         assert_eq!(sys.with_object(b, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 30);
@@ -346,7 +365,7 @@ mod tests {
             let sys = Arc::clone(&sys);
             handles.push(std::thread::spawn(move || {
                 let decls = vec![AccessDecl::new("A", Suprema::new(1, 0, 1))];
-                sys.run(NodeId(0), &decls, false, &mut |t| {
+                run(&sys, NodeId(0), &decls, |t| {
                     let v = t.call(ObjHandle(0), ops::balance())?.as_int();
                     t.call(ObjHandle(0), ops::deposit(v + 1 - v))?; // +1
                     Ok(())
@@ -373,7 +392,7 @@ mod tests {
         let sys2 = Arc::clone(&sys);
         let d2 = decls.clone();
         let t = std::thread::spawn(move || {
-            sys2.run(NodeId(0), &d2, false, &mut |t| {
+            run(&sys2, NodeId(0), &d2, |t| {
                 t.call(ObjHandle(0), ops::balance())?;
                 std::thread::sleep(std::time::Duration::from_millis(100));
                 Ok(())
@@ -382,7 +401,7 @@ mod tests {
         });
         std::thread::sleep(std::time::Duration::from_millis(20));
         let t0 = std::time::Instant::now();
-        sys.run(NodeId(0), &decls, false, &mut |t| {
+        run(&sys, NodeId(0), &decls, |t| {
             t.call(ObjHandle(0), ops::balance())?;
             Ok(())
         })

@@ -13,10 +13,10 @@
 
 use atomic_rmi2::config::{CliArgs, KvConfig};
 use atomic_rmi2::metrics::fmt_throughput;
-use atomic_rmi2::object::{account::ops, Account};
+use atomic_rmi2::object::{Account, AccountRef};
 use atomic_rmi2::workload::sweeps::{self, Scale};
 use atomic_rmi2::workload::{run_eigenbench, FrameworkKind, ALL_FRAMEWORKS};
-use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema};
+use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx};
 use std::sync::Arc;
 
 const USAGE: &str = "\
@@ -149,12 +149,12 @@ fn demo() {
     sys.host(NodeId(0), "A", Box::new(Account::with_balance(500)));
     sys.host(NodeId(1), "B", Box::new(Account::with_balance(100)));
     let mut tx = sys.tx(NodeId(0));
-    let a = tx.accesses("A", Suprema::new(1, 0, 1));
-    let b = tx.updates("B", 1);
+    let a = AccountRef::new(tx.accesses("A", Suprema::new(1, 0, 1)));
+    let b = AccountRef::new(tx.updates("B", 1));
     let r = tx.run(|t| {
-        t.call(a, ops::withdraw(100))?;
-        t.call(b, ops::deposit(100))?;
-        if t.call(a, ops::balance())?.as_int() < 0 {
+        a.withdraw(t, 100)?;
+        b.deposit(t, 100)?;
+        if a.balance(t)? < 0 {
             return t.abort();
         }
         Ok(())

@@ -51,7 +51,7 @@ impl SharedObject for Account {
                     method: "deposit".into(),
                     reason: "missing amount".into(),
                 })?;
-                self.balance += v.as_int();
+                self.balance += v.try_int()?;
                 Ok(Value::Unit)
             }
             "withdraw" => {
@@ -61,7 +61,7 @@ impl SharedObject for Account {
                 })?;
                 // NOTE: allowed to go negative; the paper's example transaction
                 // checks the balance afterwards and aborts manually (Fig 9).
-                self.balance -= v.as_int();
+                self.balance -= v.try_int()?;
                 Ok(Value::Unit)
             }
             "reset" => {

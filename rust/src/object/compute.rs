@@ -137,7 +137,7 @@ impl SharedObject for ComputeObject {
                     method: "load".into(),
                     reason: "missing state vector".into(),
                 })?;
-                let s = v.as_floats();
+                let s = v.try_floats()?;
                 if s.len() != self.backend.dim() {
                     return Err(ObjectError::BadArgs {
                         method: "load".into(),
@@ -158,7 +158,7 @@ impl SharedObject for ComputeObject {
                 })?;
                 self.state = self
                     .backend
-                    .mix(&self.state, v.as_floats())
+                    .mix(&self.state, v.try_floats()?)
                     .map_err(ObjectError::App)?;
                 Ok(Value::Unit)
             }

@@ -45,7 +45,10 @@ impl SharedObject for Counter {
                 Ok(Value::Unit)
             }
             "inc" => {
-                let by = call.args.first().map(|v| v.as_int()).unwrap_or(1);
+                let by = match call.args.first() {
+                    Some(v) => v.try_int()?,
+                    None => 1,
+                };
                 self.count += by;
                 Ok(Value::Int(self.count))
             }

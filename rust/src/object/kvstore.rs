@@ -93,7 +93,7 @@ impl SharedObject for KvStore {
                         method: "put".into(),
                         reason: "missing value".into(),
                     })?
-                    .as_int();
+                    .try_int()?;
                 self.map.insert(k, v);
                 Ok(Value::Unit)
             }
@@ -119,7 +119,7 @@ impl SharedObject for KvStore {
                         method: "merge_add".into(),
                         reason: "missing delta".into(),
                     })?
-                    .as_int();
+                    .try_int()?;
                 let slot = self.map.entry(k).or_insert(0);
                 *slot += v;
                 Ok(Value::Int(*slot))

@@ -19,6 +19,7 @@ pub mod compute;
 pub mod counter;
 pub mod kvstore;
 pub mod queue;
+pub mod refs;
 pub mod register;
 pub mod value;
 
@@ -27,6 +28,7 @@ pub use compute::{ComputeBackend, ComputeObject, SpinBackend};
 pub use counter::Counter;
 pub use kvstore::KvStore;
 pub use queue::QueueObject;
+pub use refs::{AccountRef, ComputeRef, CounterRef, KvRef, QueueRef, RegisterRef};
 pub use register::RegisterObject;
 pub use value::Value;
 
@@ -82,6 +84,9 @@ impl OpCall {
 pub enum ObjectError {
     NoSuchMethod(String),
     BadArgs { method: String, reason: String },
+    /// A dynamically typed [`Value`] held a different variant than the
+    /// accessor expected (fallible `try_*` accessors / `TryFrom`).
+    TypeMismatch { expected: &'static str, got: String },
     Crashed,
     App(String),
 }
@@ -92,6 +97,9 @@ impl fmt::Display for ObjectError {
             ObjectError::NoSuchMethod(m) => write!(f, "no such method: {m}"),
             ObjectError::BadArgs { method, reason } => {
                 write!(f, "bad arguments for {method}: {reason}")
+            }
+            ObjectError::TypeMismatch { expected, got } => {
+                write!(f, "type mismatch: expected {expected}, got {got}")
             }
             ObjectError::Crashed => write!(f, "object crashed (crash-stop)"),
             ObjectError::App(e) => write!(f, "application error: {e}"),

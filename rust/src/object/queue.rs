@@ -58,7 +58,7 @@ impl SharedObject for QueueObject {
                     method: "push".into(),
                     reason: "missing item".into(),
                 })?;
-                self.items.push_back(v.as_int());
+                self.items.push_back(v.try_int()?);
                 Ok(Value::Unit)
             }
             "pop" => Ok(self

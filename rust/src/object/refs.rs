@@ -1,0 +1,385 @@
+//! Typed object facades over [`ObjHandle`] — the statically typed face of
+//! the dynamically typed CF object model (paper §2.5, Fig 7).
+//!
+//! A facade binds a declared handle to an object interface, so transaction
+//! bodies call `account.deposit(t, 100)?` instead of hand-rolling
+//! `OpCall`/`Value` casts. Results go through the fallible `try_*`
+//! accessors, so an interface mismatch surfaces as
+//! [`TxError::Object`](crate::api::TxError) instead of a panic.
+//!
+//! Every mutating method also has an `*_async` variant returning an
+//! [`OpFuture`] (the §2.6 buffered-write / §2.8 asynchronous-dispatch
+//! path); the plain variants block like classic RMI stubs.
+
+use crate::api::{ObjHandle, OpFuture, TxCtx, TxError};
+use crate::object::{OpCall, Value};
+
+/// Interpret a `Value` that may be `Unit` (absent) as `Option<i64>`.
+fn opt_int(v: Value) -> Result<Option<i64>, TxError> {
+    match v {
+        Value::Unit => Ok(None),
+        other => Ok(Some(other.try_int()?)),
+    }
+}
+
+/// Facade over the paper's `Account` interface (Fig 7).
+#[derive(Debug, Clone, Copy)]
+pub struct AccountRef(pub ObjHandle);
+
+impl AccountRef {
+    pub fn new(h: ObjHandle) -> Self {
+        AccountRef(h)
+    }
+
+    pub fn handle(&self) -> ObjHandle {
+        self.0
+    }
+
+    /// READ `balance()`.
+    pub fn balance(&self, t: &mut dyn TxCtx) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("balance"))?.try_int()?)
+    }
+
+    /// UPDATE `deposit(amount)`.
+    pub fn deposit(&self, t: &mut dyn TxCtx, amount: i64) -> Result<(), TxError> {
+        t.call(self.0, OpCall::unary("deposit", amount)).map(|_| ())
+    }
+
+    /// UPDATE `withdraw(amount)`.
+    pub fn withdraw(&self, t: &mut dyn TxCtx, amount: i64) -> Result<(), TxError> {
+        t.call(self.0, OpCall::unary("withdraw", amount)).map(|_| ())
+    }
+
+    /// WRITE `reset()` — executable on the log buffer (§2.6).
+    pub fn reset(&self, t: &mut dyn TxCtx) -> Result<(), TxError> {
+        t.call(self.0, OpCall::nullary("reset")).map(|_| ())
+    }
+
+    pub fn balance_async(&self, t: &mut dyn TxCtx) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::nullary("balance"))
+    }
+
+    pub fn deposit_async(&self, t: &mut dyn TxCtx, amount: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("deposit", amount))
+    }
+
+    pub fn withdraw_async(&self, t: &mut dyn TxCtx, amount: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("withdraw", amount))
+    }
+}
+
+impl From<ObjHandle> for AccountRef {
+    fn from(h: ObjHandle) -> Self {
+        AccountRef(h)
+    }
+}
+
+/// Facade over [`crate::object::Counter`].
+#[derive(Debug, Clone, Copy)]
+pub struct CounterRef(pub ObjHandle);
+
+impl CounterRef {
+    pub fn new(h: ObjHandle) -> Self {
+        CounterRef(h)
+    }
+
+    /// READ `get()`.
+    pub fn get(&self, t: &mut dyn TxCtx) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("get"))?.try_int()?)
+    }
+
+    /// UPDATE `inc(by)`: returns the new count.
+    pub fn inc(&self, t: &mut dyn TxCtx, by: i64) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::unary("inc", by))?.try_int()?)
+    }
+
+    /// WRITE `zero()`.
+    pub fn zero(&self, t: &mut dyn TxCtx) -> Result<(), TxError> {
+        t.call(self.0, OpCall::nullary("zero")).map(|_| ())
+    }
+
+    pub fn inc_async(&self, t: &mut dyn TxCtx, by: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("inc", by))
+    }
+}
+
+impl From<ObjHandle> for CounterRef {
+    fn from(h: ObjHandle) -> Self {
+        CounterRef(h)
+    }
+}
+
+/// Facade over [`crate::object::RegisterObject`] (the Eigenbench cell).
+#[derive(Debug, Clone, Copy)]
+pub struct RegisterRef(pub ObjHandle);
+
+impl RegisterRef {
+    pub fn new(h: ObjHandle) -> Self {
+        RegisterRef(h)
+    }
+
+    /// READ `get()`.
+    pub fn get(&self, t: &mut dyn TxCtx) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("get"))?.try_int()?)
+    }
+
+    /// WRITE `set(v)` — executable on the log buffer (§2.6).
+    pub fn set(&self, t: &mut dyn TxCtx, v: i64) -> Result<(), TxError> {
+        t.call(self.0, OpCall::unary("set", v)).map(|_| ())
+    }
+
+    /// UPDATE `add(delta)`: returns the new value.
+    pub fn add(&self, t: &mut dyn TxCtx, delta: i64) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::unary("add", delta))?.try_int()?)
+    }
+
+    pub fn get_async(&self, t: &mut dyn TxCtx) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::nullary("get"))
+    }
+
+    pub fn set_async(&self, t: &mut dyn TxCtx, v: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("set", v))
+    }
+
+    pub fn add_async(&self, t: &mut dyn TxCtx, delta: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("add", delta))
+    }
+}
+
+impl From<ObjHandle> for RegisterRef {
+    fn from(h: ObjHandle) -> Self {
+        RegisterRef(h)
+    }
+}
+
+/// Facade over [`crate::object::KvStore`] (the §2.9 composite object).
+#[derive(Debug, Clone, Copy)]
+pub struct KvRef(pub ObjHandle);
+
+impl KvRef {
+    pub fn new(h: ObjHandle) -> Self {
+        KvRef(h)
+    }
+
+    /// READ `get(key)`: `None` if absent.
+    pub fn get(&self, t: &mut dyn TxCtx, key: &str) -> Result<Option<i64>, TxError> {
+        opt_int(t.call(self.0, OpCall::unary("get", key))?)
+    }
+
+    /// READ `contains(key)`.
+    pub fn contains(&self, t: &mut dyn TxCtx, key: &str) -> Result<bool, TxError> {
+        Ok(t.call(self.0, OpCall::unary("contains", key))?.try_bool()?)
+    }
+
+    /// READ `size()`.
+    pub fn size(&self, t: &mut dyn TxCtx) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("size"))?.try_int()?)
+    }
+
+    /// WRITE `put(key, v)` — blind overwrite, log-buffer executable.
+    pub fn put(&self, t: &mut dyn TxCtx, key: &str, v: i64) -> Result<(), TxError> {
+        t.call(self.0, OpCall::new("put", vec![Value::from(key), Value::from(v)]))
+            .map(|_| ())
+    }
+
+    /// WRITE `clear()`.
+    pub fn clear(&self, t: &mut dyn TxCtx) -> Result<(), TxError> {
+        t.call(self.0, OpCall::nullary("clear")).map(|_| ())
+    }
+
+    /// UPDATE `remove(key)`: the removed value, if any.
+    pub fn remove(&self, t: &mut dyn TxCtx, key: &str) -> Result<Option<i64>, TxError> {
+        opt_int(t.call(self.0, OpCall::unary("remove", key))?)
+    }
+
+    /// UPDATE `merge_add(key, delta)`: the merged value.
+    pub fn merge_add(&self, t: &mut dyn TxCtx, key: &str, delta: i64) -> Result<i64, TxError> {
+        Ok(t
+            .call(self.0, OpCall::new("merge_add", vec![Value::from(key), Value::from(delta)]))?
+            .try_int()?)
+    }
+
+    pub fn put_async(&self, t: &mut dyn TxCtx, key: &str, v: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::new("put", vec![Value::from(key), Value::from(v)]))
+    }
+}
+
+impl From<ObjHandle> for KvRef {
+    fn from(h: ObjHandle) -> Self {
+        KvRef(h)
+    }
+}
+
+/// Facade over [`crate::object::QueueObject`].
+#[derive(Debug, Clone, Copy)]
+pub struct QueueRef(pub ObjHandle);
+
+impl QueueRef {
+    pub fn new(h: ObjHandle) -> Self {
+        QueueRef(h)
+    }
+
+    /// READ `peek()`: front element, if any.
+    pub fn peek(&self, t: &mut dyn TxCtx) -> Result<Option<i64>, TxError> {
+        opt_int(t.call(self.0, OpCall::nullary("peek"))?)
+    }
+
+    /// READ `len()`.
+    pub fn len(&self, t: &mut dyn TxCtx) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("len"))?.try_int()?)
+    }
+
+    /// WRITE `push(v)` — log-buffer executable (§2.6).
+    pub fn push(&self, t: &mut dyn TxCtx, v: i64) -> Result<(), TxError> {
+        t.call(self.0, OpCall::unary("push", v)).map(|_| ())
+    }
+
+    /// UPDATE `pop()`: front element, if any.
+    pub fn pop(&self, t: &mut dyn TxCtx) -> Result<Option<i64>, TxError> {
+        opt_int(t.call(self.0, OpCall::nullary("pop"))?)
+    }
+
+    pub fn push_async(&self, t: &mut dyn TxCtx, v: i64) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("push", v))
+    }
+}
+
+impl From<ObjHandle> for QueueRef {
+    fn from(h: ObjHandle) -> Self {
+        QueueRef(h)
+    }
+}
+
+/// Facade over [`crate::object::ComputeObject`] (CF compute delegation).
+#[derive(Debug, Clone, Copy)]
+pub struct ComputeRef(pub ObjHandle);
+
+impl ComputeRef {
+    pub fn new(h: ObjHandle) -> Self {
+        ComputeRef(h)
+    }
+
+    /// READ `digest()`.
+    pub fn digest(&self, t: &mut dyn TxCtx) -> Result<f64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("digest"))?.try_float()?)
+    }
+
+    /// READ `dim()`.
+    pub fn dim(&self, t: &mut dyn TxCtx) -> Result<i64, TxError> {
+        Ok(t.call(self.0, OpCall::nullary("dim"))?.try_int()?)
+    }
+
+    /// WRITE `load(state)` — blind state replacement.
+    pub fn load(&self, t: &mut dyn TxCtx, state: Vec<f32>) -> Result<(), TxError> {
+        t.call(self.0, OpCall::unary("load", state)).map(|_| ())
+    }
+
+    /// UPDATE `mix(params)` — runs the kernel on the home node.
+    pub fn mix(&self, t: &mut dyn TxCtx, params: Vec<f32>) -> Result<(), TxError> {
+        t.call(self.0, OpCall::unary("mix", params)).map(|_| ())
+    }
+
+    pub fn mix_async(&self, t: &mut dyn TxCtx, params: Vec<f32>) -> Result<OpFuture, TxError> {
+        t.submit(self.0, OpCall::unary("mix", params))
+    }
+}
+
+impl From<ObjHandle> for ComputeRef {
+    fn from(h: ObjHandle) -> Self {
+        ComputeRef(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{Suprema, TxError};
+    use crate::cluster::{Cluster, NetworkModel, NodeId};
+    use crate::object::{Account, KvStore, ObjectError, QueueObject};
+    use crate::optsva::AtomicRmi2;
+    use std::sync::Arc;
+
+    fn sys() -> Arc<AtomicRmi2> {
+        AtomicRmi2::new(Arc::new(Cluster::new(1, NetworkModel::instant())))
+    }
+
+    #[test]
+    fn account_facade_round_trip() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+        let mut tx = sys.tx(NodeId(0));
+        let acct = AccountRef::new(tx.accesses("A", Suprema::new(1, 0, 2)));
+        let (seen, _) = tx
+            .run(|t| {
+                acct.deposit(t, 50)?;
+                acct.withdraw(t, 30)?;
+                acct.balance(t)
+            })
+            .unwrap();
+        assert_eq!(seen, 120);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn kv_and_queue_facades_map_unit_to_none() {
+        let sys = sys();
+        sys.host(NodeId(0), "kv", Box::new(KvStore::new()));
+        sys.host(NodeId(0), "q", Box::new(QueueObject::new()));
+        let mut tx = sys.tx(NodeId(0));
+        let kv = KvRef::new(tx.accesses("kv", Suprema::unknown()));
+        let q = QueueRef::new(tx.accesses("q", Suprema::unknown()));
+        let ((missing, present, popped), _) = tx
+            .run(|t| {
+                kv.put(t, "k", 3)?;
+                let missing = kv.get(t, "nope")?;
+                let present = kv.get(t, "k")?;
+                q.push(t, 9)?;
+                let popped = q.pop(t)?;
+                Ok((missing, present, popped))
+            })
+            .unwrap();
+        assert_eq!(missing, None);
+        assert_eq!(present, Some(3));
+        assert_eq!(popped, Some(9));
+        sys.shutdown();
+    }
+
+    #[test]
+    fn mistyped_argument_surfaces_as_object_error_not_panic() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 1);
+        tx.begin().unwrap();
+        // Bypass the typed facade with a deliberately wrong argument type.
+        let err = tx
+            .call(h, OpCall::unary("deposit", "not a number"))
+            .unwrap_err();
+        assert!(
+            matches!(
+                err,
+                TxError::Object(ObjectError::TypeMismatch { expected: "Int", .. })
+            ),
+            "got {err:?}"
+        );
+        let _ = tx.abort();
+        sys.shutdown();
+    }
+
+    #[test]
+    fn async_facade_variants_pipeline() {
+        let sys = sys();
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0));
+        let acct = AccountRef::new(tx.accesses("A", Suprema::new(1, 0, 2)));
+        tx.begin().unwrap();
+        let f1 = acct.deposit_async(&mut tx, 2).unwrap();
+        let f2 = acct.deposit_async(&mut tx, 3).unwrap();
+        let f3 = acct.balance_async(&mut tx).unwrap();
+        assert_eq!(f3.wait().unwrap().as_int(), 5);
+        f1.wait().unwrap();
+        f2.wait().unwrap();
+        tx.commit().unwrap();
+        sys.shutdown();
+    }
+}

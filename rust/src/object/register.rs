@@ -80,8 +80,9 @@ impl SharedObject for RegisterObject {
                     method: "set".into(),
                     reason: "missing value".into(),
                 })?;
+                let v = v.try_int()?;
                 self.burn();
-                self.value = v.as_int();
+                self.value = v;
                 Ok(Value::Unit)
             }
             "add" => {
@@ -89,8 +90,9 @@ impl SharedObject for RegisterObject {
                     method: "add".into(),
                     reason: "missing delta".into(),
                 })?;
+                let v = v.try_int()?;
                 self.burn();
-                self.value += v.as_int();
+                self.value += v;
                 Ok(Value::Int(self.value))
             }
             m => Err(ObjectError::NoSuchMethod(m.to_string())),

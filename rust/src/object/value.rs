@@ -4,6 +4,7 @@
 //! (paper §2.5); method arguments and results therefore need a dynamic
 //! representation analogous to Java RMI's serialized parameters.
 
+use super::ObjectError;
 use std::fmt;
 
 /// A dynamically typed argument/result value.
@@ -21,41 +22,78 @@ pub enum Value {
 }
 
 impl Value {
+    fn mismatch(&self, expected: &'static str) -> ObjectError {
+        ObjectError::TypeMismatch { expected, got: format!("{self:?}") }
+    }
+
+    /// Fallible accessor: `Int` (or `Bool`, widened) as `i64`. Object
+    /// `invoke` implementations use these so a mistyped argument surfaces
+    /// as `TxError::Object`, not a panic.
+    pub fn try_int(&self) -> Result<i64, ObjectError> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::Bool(b) => Ok(*b as i64),
+            other => Err(other.mismatch("Int")),
+        }
+    }
+
+    /// Fallible accessor: `Float` (or `Int`, widened) as `f64`.
+    pub fn try_float(&self) -> Result<f64, ObjectError> {
+        match self {
+            Value::Float(v) => Ok(*v),
+            Value::Int(v) => Ok(*v as f64),
+            other => Err(other.mismatch("Float")),
+        }
+    }
+
+    /// Fallible accessor: `Bool`.
+    pub fn try_bool(&self) -> Result<bool, ObjectError> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => Err(other.mismatch("Bool")),
+        }
+    }
+
+    /// Fallible accessor: `Str`.
+    pub fn try_str(&self) -> Result<&str, ObjectError> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => Err(other.mismatch("Str")),
+        }
+    }
+
+    /// Fallible accessor: `Floats`.
+    pub fn try_floats(&self) -> Result<&[f32], ObjectError> {
+        match self {
+            Value::Floats(v) => Ok(v),
+            other => Err(other.mismatch("Floats")),
+        }
+    }
+
+    /// Panicking accessor; prefer [`Value::try_int`] anywhere a wrong
+    /// variant is reachable from user input.
     pub fn as_int(&self) -> i64 {
-        match self {
-            Value::Int(v) => *v,
-            Value::Bool(b) => *b as i64,
-            other => panic!("expected Int, got {other:?}"),
-        }
+        self.try_int().unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Panicking accessor; prefer [`Value::try_float`].
     pub fn as_float(&self) -> f64 {
-        match self {
-            Value::Float(v) => *v,
-            Value::Int(v) => *v as f64,
-            other => panic!("expected Float, got {other:?}"),
-        }
+        self.try_float().unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Panicking accessor; prefer [`Value::try_bool`].
     pub fn as_bool(&self) -> bool {
-        match self {
-            Value::Bool(b) => *b,
-            other => panic!("expected Bool, got {other:?}"),
-        }
+        self.try_bool().unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Panicking accessor; prefer [`Value::try_str`].
     pub fn as_str(&self) -> &str {
-        match self {
-            Value::Str(s) => s,
-            other => panic!("expected Str, got {other:?}"),
-        }
+        self.try_str().unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Panicking accessor; prefer [`Value::try_floats`].
     pub fn as_floats(&self) -> &[f32] {
-        match self {
-            Value::Floats(v) => v,
-            other => panic!("expected Floats, got {other:?}"),
-        }
+        self.try_floats().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Approximate serialized size in bytes: used by the network model to
@@ -127,6 +165,37 @@ impl From<Vec<f32>> for Value {
     }
 }
 
+impl TryFrom<&Value> for i64 {
+    type Error = ObjectError;
+    fn try_from(v: &Value) -> Result<Self, Self::Error> {
+        v.try_int()
+    }
+}
+impl TryFrom<&Value> for f64 {
+    type Error = ObjectError;
+    fn try_from(v: &Value) -> Result<Self, Self::Error> {
+        v.try_float()
+    }
+}
+impl TryFrom<&Value> for bool {
+    type Error = ObjectError;
+    fn try_from(v: &Value) -> Result<Self, Self::Error> {
+        v.try_bool()
+    }
+}
+impl TryFrom<&Value> for String {
+    type Error = ObjectError;
+    fn try_from(v: &Value) -> Result<Self, Self::Error> {
+        v.try_str().map(str::to_string)
+    }
+}
+impl TryFrom<&Value> for Vec<f32> {
+    type Error = ObjectError;
+    fn try_from(v: &Value) -> Result<Self, Self::Error> {
+        v.try_floats().map(<[f32]>::to_vec)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +213,29 @@ mod tests {
     #[should_panic(expected = "expected Int")]
     fn wrong_accessor_panics() {
         Value::Str("x".into()).as_int();
+    }
+
+    #[test]
+    fn try_accessors_return_errors_not_panics() {
+        assert_eq!(Value::Int(3).try_int().unwrap(), 3);
+        assert_eq!(Value::Bool(true).try_int().unwrap(), 1);
+        assert_eq!(Value::Int(2).try_float().unwrap(), 2.0);
+        assert_eq!(Value::Str("s".into()).try_str().unwrap(), "s");
+        let err = Value::Str("x".into()).try_int().unwrap_err();
+        assert!(matches!(err, ObjectError::TypeMismatch { expected: "Int", .. }), "{err:?}");
+        assert!(err.to_string().contains("expected Int"));
+        assert!(Value::Unit.try_bool().is_err());
+        assert!(Value::Int(1).try_floats().is_err());
+    }
+
+    #[test]
+    fn try_from_value_refs() {
+        assert_eq!(i64::try_from(&Value::Int(9)).unwrap(), 9);
+        assert_eq!(f64::try_from(&Value::Float(0.5)).unwrap(), 0.5);
+        assert!(bool::try_from(&Value::Bool(true)).unwrap());
+        assert_eq!(String::try_from(&Value::Str("a".into())).unwrap(), "a");
+        assert_eq!(Vec::<f32>::try_from(&Value::Floats(vec![1.0])).unwrap(), vec![1.0]);
+        assert!(i64::try_from(&Value::Unit).is_err());
     }
 
     #[test]

@@ -18,9 +18,9 @@ pub mod proxy;
 pub mod transaction;
 
 pub use proxy::{Proxy, ProxyConfig};
-pub use transaction::{Transaction, TxBuilder};
+pub use transaction::Transaction;
 
-use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::api::{run_with_retries, Dtm, TxCtx, TxError, TxSpec, TxStats};
 use crate::cluster::{Cluster, NodeId, Oid};
 use crate::executor::Executor;
 use crate::object::SharedObject;
@@ -162,9 +162,11 @@ impl AtomicRmi2 {
         Arc::clone(&self.nodes[node.0 as usize].executor)
     }
 
-    /// Begin building a transaction from `client`.
-    pub fn tx(self: &Arc<Self>, client: NodeId) -> TxBuilder {
-        TxBuilder::new(Arc::clone(self), client)
+    /// Begin building a transaction from `client` (the concrete OptSVA-CF
+    /// preamble; the framework-agnostic front end is
+    /// `(dyn Dtm).tx(client)` from [`crate::api::TxBuilder`]).
+    pub fn tx(self: &Arc<Self>, client: NodeId) -> Transaction {
+        Transaction::new(Arc::clone(self), client)
     }
 
     /// Inject a crash-stop failure on an object (§3.4, fault testing).
@@ -210,33 +212,34 @@ impl Dtm for Arc<AtomicRmi2> {
         "atomic-rmi2 (OptSVA-CF)"
     }
 
-    fn run(
+    fn run_tx(
         &self,
         client: NodeId,
-        decls: &[AccessDecl],
-        irrevocable: bool,
+        spec: &TxSpec,
         body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
     ) -> Result<TxStats, TxError> {
-        let mut attempts = 0u64;
-        loop {
-            attempts += 1;
-            let mut builder = self.tx(client);
-            if irrevocable {
-                builder = builder.irrevocable();
-            }
-            let handles: Vec<ObjHandle> = decls
-                .iter()
-                .map(|d| builder.accesses(&d.name, d.suprema))
-                .collect();
-            debug_assert!(handles.iter().enumerate().all(|(i, h)| h.0 == i));
-            match builder.run(|ctx| body(ctx)) {
-                Ok(ops) => {
-                    return Ok(TxStats { ops, attempts });
+        run_with_retries(
+            spec.max_attempts.unwrap_or(crate::api::DEFAULT_MAX_ATTEMPTS),
+            || {
+                let mut tx = self.tx(client);
+                if spec.irrevocable {
+                    tx = tx.irrevocable();
                 }
-                Err(e) if e.is_retryable() && attempts < 1000 => continue,
-                Err(e) => return Err(e),
-            }
-        }
+                match spec.wait_timeout {
+                    Some(Some(t)) => tx = tx.timeout(t),
+                    Some(None) => tx = tx.no_timeout(),
+                    None => {}
+                }
+                if let Some(a) = spec.asynchrony {
+                    tx = tx.asynchronous(a);
+                }
+                for d in &spec.decls {
+                    tx.accesses(&d.name, d.suprema);
+                }
+                tx.run(&mut *body).map(|((), ops)| ops)
+            },
+            |_, _| {},
+        )
     }
 
     fn aborts(&self) -> u64 {

@@ -201,6 +201,47 @@ impl Proxy {
         Ok(())
     }
 
+    /// Mode of `call` from the cached interface. Client-side lookup is
+    /// free: the stub ships the interface with the proxy, exactly as Java
+    /// RMI ships the remote interface class.
+    pub(super) fn mode_of(&self, call: &OpCall) -> Result<Mode, crate::object::ObjectError> {
+        self.slot
+            .interface
+            .iter()
+            .find(|m| m.name == call.method)
+            .map(|m| m.mode)
+            .ok_or_else(|| crate::object::ObjectError::NoSuchMethod(call.method.to_string()))
+    }
+
+    /// Would [`Proxy::invoke`] for an operation of `mode` run to completion
+    /// without blocking on a versioning wait or an unfinished task join?
+    /// This is the executor gate for asynchronously submitted operations:
+    /// the single executor thread per node must never park inside an
+    /// operation, or it would starve the very release tasks that unblock
+    /// it. Conservative `false` answers only delay the operation; `true`
+    /// answers must be exact (all of them are monotone: a finished task
+    /// stays finished, `accessed`/`released` never revert, and our access
+    /// condition `lv == pv - 1` can only be invalidated by our own
+    /// release).
+    pub(super) fn ready_for(&self, mode: Mode) -> bool {
+        let s = self.inner.lock().unwrap();
+        if let Some(t) = &s.task {
+            if !t.is_done() {
+                return false; // invoke would join the buffering/release task
+            }
+        }
+        match mode {
+            // Pure writes execute on the log buffer (§2.6) or, once the
+            // object is held, in place — never a wait. Post-release writes
+            // fail the supremum check before any synchronization.
+            Mode::Write => true,
+            // Read-only objects read the start-time buffer (task gated
+            // above); released objects read their copy buffer.
+            Mode::Read if self.sup.read_only() => true,
+            _ => s.accessed || s.released || self.access_cond_ready(),
+        }
+    }
+
     /// Dispatch one operation with full OptSVA-CF handling. Runs on the
     /// object's home node (the caller pays RPC latency).
     pub fn invoke(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
@@ -215,13 +256,7 @@ impl Proxy {
         // Mode lookup from the cached interface — never touches the
         // object lock (which concurrent operation bodies may hold for
         // milliseconds).
-        let mode = self
-            .slot
-            .interface
-            .iter()
-            .find(|m| m.name == call.method)
-            .map(|m| m.mode)
-            .ok_or_else(|| crate::object::ObjectError::NoSuchMethod(call.method.to_string()))?;
+        let mode = self.mode_of(call)?;
         match mode {
             Mode::Read => self.read(call),
             Mode::Write => self.write(call),

@@ -1,25 +1,42 @@
 //! Client-side OptSVA-CF transaction (paper Fig 8/9, §2.8.1, §2.8.5–6).
 //!
 //! The lifecycle mirrors the paper's API: a *preamble* declares the access
-//! set with optional suprema (`reads`/`writes`/`updates`/`accesses`), then
+//! set with optional suprema (`reads`/`writes`/`updates`/`accesses`) and
+//! per-transaction knobs (`irrevocable`, `timeout`, `asynchronous`), then
 //! [`Transaction::begin`] atomically acquires private versions for the
 //! whole set (under start locks taken in global `Oid` order, §2.10.2) and
-//! creates one server-side [`Proxy`] per object. Operations flow through
-//! [`Transaction::call`], which pays simulated network latency to the
-//! object's home node — exactly Java RMI's stub → remote-proxy path.
+//! creates one server-side [`Proxy`] per object.
+//!
+//! Operations flow through the [`TxCtx`] trait in two flavors:
+//!
+//!  * [`TxCtx::call`] — the classic blocking RMI stub path: the client
+//!    thread pays request + response latency and the full server-side
+//!    handling inline (Fig 6);
+//!  * [`TxCtx::submit`] — the asynchronous path this module adds: the stub
+//!    ships the request (one-way cost only) and enqueues the operation on
+//!    the home node's executor, gated so the executor never parks inside
+//!    an operation; the returned [`OpFuture`] resolves when the operation
+//!    has run and its response has (virtually) arrived. Operations on the
+//!    *same* object are chained in program order (the per-object counters
+//!    and release points of §2.8 demand it); operations on *different*
+//!    objects overlap freely — the §2.6/§2.7 parallelism, now visible to
+//!    callers.
+//!
+//! Commit joins every outstanding submitted operation first: a dropped
+//! [`OpFuture`] still executes, still counts toward the declared suprema,
+//! and a failure that nobody waited on aborts the transaction at commit.
 
 use super::proxy::{Proxy, ProxyConfig};
 use super::AtomicRmi2;
-use crate::api::{ObjHandle, Suprema, TxCtx, TxError};
-use crate::cluster::NodeId;
+use crate::api::{ObjHandle, OpFuture, PendingOp, Suprema, TxCtx, TxError};
+use crate::clock::Clock;
+use crate::cluster::{Cluster, NodeId};
+use crate::executor::TaskHandle;
 use crate::object::{OpCall, Value};
-use crate::versioning::acquire_start_locks;
+use crate::versioning::{acquire_start_locks, WaitTimeout};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-
-/// Alias kept for symmetry with the `Dtm` driver code: the builder *is*
-/// the transaction (declarations before `begin`, operations after).
-pub type TxBuilder = Transaction;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Phase {
@@ -28,26 +45,135 @@ enum Phase {
     Done,
 }
 
+/// Result slot of one asynchronously submitted operation, shared between
+/// the executor action, the client-held [`OpFuture`], and the commit-time
+/// drain.
+struct SubmittedState {
+    result: Option<Result<Value, TxError>>,
+    /// Clock time the operation completed at the home node (response
+    /// send instant — the arrival the future's `wait` pays up to).
+    done_at: Duration,
+    resp_bytes: usize,
+    /// The result was observed (by `wait` or by the commit drain); an
+    /// unobserved `Err` aborts the transaction at commit.
+    taken: bool,
+}
+
+/// One submitted operation: executor handle plus its result slot (shared
+/// with the executor action that fills it).
+struct SubmittedOp {
+    handle: TaskHandle,
+    state: Arc<Mutex<SubmittedState>>,
+    node: NodeId,
+    /// Executed inline on the client thread (ablation mode): the round
+    /// trip is already paid, so neither `wait` nor the commit drain may
+    /// deliver a response for it.
+    inline: bool,
+}
+
+/// [`PendingOp`] backing for [`TxCtx::submit`] on OptSVA-CF.
+struct PendingRemoteOp {
+    op: Arc<SubmittedOp>,
+    cluster: Arc<Cluster>,
+    client: NodeId,
+    clock: Arc<dyn Clock>,
+    timeout: Option<Duration>,
+    /// The operation ran inline on the client thread (ablation mode): the
+    /// round trip was already paid, so `wait` must not deliver a response.
+    inline: bool,
+}
+
+impl PendingOp for PendingRemoteOp {
+    fn is_ready(&self) -> bool {
+        if !self.op.handle.is_done() {
+            return false;
+        }
+        if self.inline || self.op.node == self.client {
+            return true;
+        }
+        // `wait` also blocks until the simulated response arrival: only
+        // report ready once that instant has passed (or the response was
+        // already delivered by an earlier wait/commit drain).
+        let s = self.op.state.lock().unwrap();
+        s.taken || s.done_at + self.cluster.network().delay(s.resp_bytes) <= self.clock.now()
+    }
+
+    fn wait(self: Box<Self>) -> Result<Value, TxError> {
+        let deadline = self.timeout.map(|t| self.clock.now() + t);
+        self.op
+            .handle
+            .join(self.clock.as_ref(), deadline)
+            .map_err(|()| {
+                TxError::Timeout(WaitTimeout {
+                    what: "submitted operation",
+                    waited_ms: self.timeout.map(|t| t.as_millis() as u64).unwrap_or(0),
+                })
+            })?;
+        let (r, done_at, resp_bytes, already_delivered) = {
+            let mut s = self.op.state.lock().unwrap();
+            let already = s.taken;
+            s.taken = true;
+            (
+                s.result.clone().expect("completed task sets its result"),
+                s.done_at,
+                s.resp_bytes,
+                already,
+            )
+        };
+        // Co-located operations have no response leg (the blocking rpc
+        // path counts them as a single local call; the submit already did).
+        if !self.inline && !already_delivered && self.op.node != self.client {
+            // The response left the home node when the operation
+            // completed; block only until its (pipelined) arrival.
+            self.cluster.deliver(self.op.node, self.client, resp_bytes, done_at);
+        }
+        r
+    }
+}
+
 /// A client-side OptSVA-CF transaction.
 pub struct Transaction {
     sys: Arc<AtomicRmi2>,
     client: NodeId,
     irrevocable: bool,
+    /// Per-transaction failure-suspicion deadline (defaults to the system
+    /// configuration; `None` disables suspicion).
+    wait_timeout: Option<Duration>,
+    /// Per-transaction asynchrony switch (defaults to the system
+    /// configuration; `false` is the ablation mode in which `submit`
+    /// degrades to the sequential blocking path).
+    asynchrony: bool,
     decls: Vec<(String, Suprema)>,
     proxies: Vec<Arc<Proxy>>,
     tx_doomed: Arc<AtomicBool>,
+    /// Set once commit/abort processing starts: a submitted operation that
+    /// races past it resolves to `Err(Completed)` instead of touching the
+    /// (possibly rolled-back) object.
+    closed: Arc<AtomicBool>,
+    /// Last submitted operation per handle — the per-object program-order
+    /// chain for executor gating.
+    chain: Vec<Option<TaskHandle>>,
+    /// Every operation submitted through the futures API, for the commit
+    /// and abort drains.
+    submitted: Vec<Arc<SubmittedOp>>,
     phase: Phase,
 }
 
 impl Transaction {
     pub(super) fn new(sys: Arc<AtomicRmi2>, client: NodeId) -> Self {
+        let config = sys.config();
         Transaction {
             sys,
             client,
             irrevocable: false,
+            wait_timeout: config.wait_timeout,
+            asynchrony: config.asynchrony,
             decls: Vec::new(),
             proxies: Vec::new(),
             tx_doomed: Arc::new(AtomicBool::new(false)),
+            closed: Arc::new(AtomicBool::new(false)),
+            chain: Vec::new(),
+            submitted: Vec::new(),
             phase: Phase::Preamble,
         }
     }
@@ -58,6 +184,29 @@ impl Transaction {
     pub fn irrevocable(mut self) -> Self {
         assert_eq!(self.phase, Phase::Preamble, "irrevocable() after begin");
         self.irrevocable = true;
+        self
+    }
+
+    /// Per-transaction failure-suspicion deadline override (§3.4).
+    pub fn timeout(mut self, t: Duration) -> Self {
+        assert_eq!(self.phase, Phase::Preamble, "timeout() after begin");
+        self.wait_timeout = Some(t);
+        self
+    }
+
+    /// Disable failure suspicion for this transaction (unbounded waits).
+    pub fn no_timeout(mut self) -> Self {
+        assert_eq!(self.phase, Phase::Preamble, "no_timeout() after begin");
+        self.wait_timeout = None;
+        self
+    }
+
+    /// Per-transaction asynchrony override: `false` runs every
+    /// asynchronous task inline and resolves every `submit` synchronously
+    /// (the ablation mode, byte-identical to the sequential semantics).
+    pub fn asynchronous(mut self, on: bool) -> Self {
+        assert_eq!(self.phase, Phase::Preamble, "asynchronous() after begin");
+        self.asynchrony = on;
         self
     }
 
@@ -81,6 +230,14 @@ impl Transaction {
         assert_eq!(self.phase, Phase::Preamble, "declaration after begin");
         self.decls.push((name.to_string(), sup));
         ObjHandle(self.decls.len() - 1)
+    }
+
+    fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(self.sys.cluster().clock())
+    }
+
+    fn deadline(&self) -> Option<Duration> {
+        self.wait_timeout.map(|t| self.clock().now() + t)
     }
 
     /// §2.8.1: resolve the access set, atomically acquire private versions
@@ -128,9 +285,9 @@ impl Transaction {
 
         // Create proxies back in declaration order.
         let config = ProxyConfig {
-            wait_timeout: self.sys.config().wait_timeout,
+            wait_timeout: self.wait_timeout,
             irrevocable: self.irrevocable,
-            asynchrony: self.sys.config().asynchrony,
+            asynchrony: self.asynchrony,
             clock: Arc::clone(cluster.clock()),
         };
         let mut proxies: Vec<Option<Arc<Proxy>>> = vec![None; resolved.len()];
@@ -147,6 +304,7 @@ impl Transaction {
             ));
         }
         self.proxies = proxies.into_iter().map(Option::unwrap).collect();
+        self.chain = vec![None; self.proxies.len()];
         self.phase = Phase::Running;
         Ok(())
     }
@@ -157,20 +315,19 @@ impl Transaction {
     }
 
     /// Execute `body` as the transaction's code: begin, run, then commit —
-    /// or abort on any error. Returns the number of shared-object
-    /// operations executed.
-    pub fn run(
+    /// or abort on any error. Returns the body's value and the number of
+    /// shared-object operations executed (submitted operations included).
+    pub fn run<R>(
         mut self,
-        mut body: impl FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
-    ) -> Result<u64, TxError> {
+        mut body: impl FnMut(&mut dyn TxCtx) -> Result<R, TxError>,
+    ) -> Result<(R, u64), TxError> {
         if self.phase == Phase::Preamble {
             self.begin()?;
         }
         match body(&mut self) {
-            Ok(()) => {
-                let ops = self.ops();
+            Ok(r) => {
                 self.commit()?;
-                Ok(ops)
+                Ok((r, self.ops()))
             }
             Err(e) => {
                 self.abort_with(&e)?;
@@ -183,11 +340,80 @@ impl Transaction {
         self.proxies.iter().map(|p| p.ops()).sum()
     }
 
-    /// §2.8.5 COMMIT: join extant async tasks, wait for every object's
-    /// commit condition, finalize (apply pending logs, release), check
-    /// invalidation (abort instead if doomed), then advance `ltv`s.
+    /// Join every submitted operation and surface the first failure nobody
+    /// `wait`ed on. Part of the §2.8.5 "wait for extant threads" step,
+    /// extended to the futures API: an [`OpFuture`] dropped unresolved
+    /// still executes and still enforces the supremum accounting.
+    fn drain_submitted(&self) -> Result<(), TxError> {
+        let clock = self.clock();
+        let deadline = self.deadline();
+        for op in &self.submitted {
+            op.handle.join(clock.as_ref(), deadline).map_err(|()| {
+                TxError::Timeout(WaitTimeout {
+                    what: "submitted operation (commit drain)",
+                    waited_ms: self
+                        .wait_timeout
+                        .map(|t| t.as_millis() as u64)
+                        .unwrap_or(0),
+                })
+            })?;
+        }
+        let cluster = Arc::clone(self.sys.cluster());
+        let mut first_err: Option<TxError> = None;
+        for op in &self.submitted {
+            let mut s = op.state.lock().unwrap();
+            if s.taken {
+                continue; // observed by a `wait` (response delivered there)
+            }
+            s.taken = true;
+            let (resp_bytes, done_at) = (s.resp_bytes, s.done_at);
+            let err = match &s.result {
+                Some(Err(e)) => Some(e.clone()),
+                _ => None,
+            };
+            drop(s);
+            if !op.inline && op.node != self.client {
+                // Even a fire-and-forget operation's response crosses the
+                // network: account it (and wait out its arrival) so the
+                // pipelined and blocking paths report the same traffic.
+                // Co-located ops have no response leg (counted once at
+                // submit, like the blocking rpc path).
+                cluster.deliver(op.node, self.client, resp_bytes, done_at);
+            }
+            if first_err.is_none() {
+                first_err = err;
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// Best-effort drain for the abort path: a rollback must not race an
+    /// in-flight operation, but a stuck operation must not wedge the abort
+    /// either (§3.4 crash semantics take over after the deadline).
+    fn drain_submitted_quietly(&self) {
+        let clock = self.clock();
+        let deadline = self.deadline();
+        for op in &self.submitted {
+            let _ = op.handle.join(clock.as_ref(), deadline);
+        }
+    }
+
+    /// §2.8.5 COMMIT: drain submitted operations, join extant async tasks,
+    /// wait for every object's commit condition, finalize (apply pending
+    /// logs, release), check invalidation (abort instead if doomed), then
+    /// advance `ltv`s.
     pub fn commit(&mut self) -> Result<(), TxError> {
         assert_eq!(self.phase, Phase::Running, "commit outside running phase");
+        if let Err(e) = self.drain_submitted() {
+            // A submitted operation failed (or never became runnable
+            // before the suspicion deadline): abort instead of committing.
+            self.abort_with(&e)?;
+            return Err(e);
+        }
+        self.closed.store(true, Ordering::Release);
         let cluster = Arc::clone(self.sys.cluster());
         let client = self.client;
 
@@ -255,6 +481,15 @@ impl Transaction {
 
     fn abort_with(&mut self, cause: &TxError) -> Result<(), TxError> {
         assert_eq!(self.phase, Phase::Running, "abort outside running phase");
+        // Close *before* draining: an aborting transaction's effects are
+        // all discarded, so a submitted operation that has not started yet
+        // must resolve `Err(Completed)` rather than race the rollback —
+        // setting the flag first closes the window in which a stuck
+        // operation could become runnable between a timed-out join and the
+        // rollback below. Operations already executing are joined as
+        // usual; their effects are covered by the checkpoint.
+        self.closed.store(true, Ordering::Release);
+        self.drain_submitted_quietly();
         let cluster = Arc::clone(self.sys.cluster());
         let client = self.client;
 
@@ -310,7 +545,12 @@ impl Transaction {
 }
 
 impl TxCtx for Transaction {
-    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+    /// Non-blocking dispatch: ship the request (one-way cost), enqueue the
+    /// operation on the home node's executor behind (a) the previous
+    /// operation on the same object and (b) the proxy's no-block gate, and
+    /// hand back a future. With asynchrony disabled this degrades to the
+    /// blocking path and returns a resolved future.
+    fn submit(&mut self, h: ObjHandle, call: OpCall) -> Result<OpFuture, TxError> {
         if self.phase != Phase::Running {
             return Err(TxError::Completed);
         }
@@ -320,9 +560,119 @@ impl TxCtx for Transaction {
                 .ok_or_else(|| TxError::NotDeclared(format!("handle #{}", h.0)))?,
         );
         let cluster = Arc::clone(self.sys.cluster());
+        let clock = Arc::clone(cluster.clock());
+        if !self.asynchrony {
+            // Ablation mode: sequential semantics, identical to `call` —
+            // but still registered with the commit drain, so an error in a
+            // dropped future cannot vanish (same contract as the async
+            // path).
+            let node = p.oid.node;
+            let r = self.call(h, call);
+            let op = Arc::new(SubmittedOp {
+                handle: TaskHandle::ready(),
+                state: Arc::new(Mutex::new(SubmittedState {
+                    result: Some(r),
+                    done_at: clock.now(),
+                    resp_bytes: 0,
+                    taken: false,
+                })),
+                node,
+                inline: true,
+            });
+            self.submitted.push(Arc::clone(&op));
+            return Ok(OpFuture::pending(Box::new(PendingRemoteOp {
+                op,
+                cluster,
+                client: self.client,
+                clock,
+                timeout: self.wait_timeout,
+                inline: true,
+            })));
+        }
+        let mode = p.mode_of(&call)?;
+        // The stub serializes and ships the request; the client pays only
+        // the one-way cost and continues — §2.6's "the transaction can
+        // proceed without waiting".
+        cluster.send(self.client, p.oid.node, call.wire_size());
+
+        let slot = Arc::new(Mutex::new(SubmittedState {
+            result: None,
+            done_at: Duration::ZERO,
+            resp_bytes: 16,
+            taken: false,
+        }));
+        let prev = self.chain[h.0].clone();
+        let gate = Arc::clone(&p);
+        let cond = move || {
+            prev.as_ref().map_or(true, TaskHandle::is_done) && gate.ready_for(mode)
+        };
+        let run_p = Arc::clone(&p);
+        let run_slot = Arc::clone(&slot);
+        let closed = Arc::clone(&self.closed);
+        let run_clock = Arc::clone(&clock);
+        let action = move || {
+            let r = if closed.load(Ordering::Acquire) {
+                // The transaction finished (commit/abort) without this
+                // operation ever becoming runnable: refuse rather than
+                // touching the possibly rolled-back object.
+                Err(TxError::Completed)
+            } else {
+                run_p.invoke(&call)
+            };
+            let resp_bytes = match &r {
+                Ok(v) => v.wire_size(),
+                Err(_) => 16,
+            };
+            let mut s = run_slot.lock().unwrap();
+            s.result = Some(r);
+            s.done_at = run_clock.now();
+            s.resp_bytes = resp_bytes;
+        };
+        let handle = self.sys.executor_of(p.oid.node).submit(cond, action);
+        self.chain[h.0] = Some(handle.clone());
+        let op =
+            Arc::new(SubmittedOp { handle, state: slot, node: p.oid.node, inline: false });
+        self.submitted.push(Arc::clone(&op));
+        Ok(OpFuture::pending(Box::new(PendingRemoteOp {
+            op,
+            cluster,
+            client: self.client,
+            clock,
+            timeout: self.wait_timeout,
+            inline: false,
+        })))
+    }
+
+    /// Blocking RMI stub path (Fig 6): the client thread pays request +
+    /// response latency around the server-side dispatch. Kept as a direct
+    /// implementation (not `submit().wait()`) so the sequential semantics
+    /// — including the `asynchrony = false` ablation — stay byte-identical
+    /// to the pre-futures API.
+    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+        if self.phase != Phase::Running {
+            return Err(TxError::Completed);
+        }
+        let p = Arc::clone(
+            self.proxies
+                .get(h.0)
+                .ok_or_else(|| TxError::NotDeclared(format!("handle #{}", h.0)))?,
+        );
+        // Program order with previously *submitted* operations on the same
+        // object: the blocking stub must not overtake them (§2.8's
+        // per-object counters and release points assume program order).
+        if let Some(prev) = self.chain[h.0].clone() {
+            prev.join(self.clock().as_ref(), self.deadline()).map_err(|()| {
+                TxError::Timeout(WaitTimeout {
+                    what: "submitted operation (program order)",
+                    waited_ms: self
+                        .wait_timeout
+                        .map(|t| t.as_millis() as u64)
+                        .unwrap_or(0),
+                })
+            })?;
+        }
+        let cluster = Arc::clone(self.sys.cluster());
         let req = call.wire_size();
-        // The stub forwards the invocation to the server-side proxy: the
-        // client thread pays request + response latency (Fig 6).
         cluster.rpc(self.client, p.oid.node, req, || {
             let r = p.invoke(&call);
             let resp = match &r {
@@ -376,6 +726,10 @@ mod tests {
         )
     }
 
+    fn balance(sys: &AtomicRmi2, oid: crate::cluster::Oid) -> i64 {
+        sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance())
+    }
+
     #[test]
     fn transfer_commits_and_is_visible() {
         let sys = sys_n(2);
@@ -391,8 +745,8 @@ mod tests {
         assert_eq!(tx.call(ha, ops::balance()).unwrap().as_int(), 0);
         tx.commit().unwrap();
 
-        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 0);
-        assert_eq!(sys.with_object(b, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 100);
+        assert_eq!(balance(&sys, a), 0);
+        assert_eq!(balance(&sys, b), 100);
         assert_eq!(sys.stats.commits.load(std::sync::atomic::Ordering::Relaxed), 1);
         sys.shutdown();
     }
@@ -406,7 +760,7 @@ mod tests {
         tx.begin().unwrap();
         tx.call(ha, ops::withdraw(100)).unwrap();
         tx.abort().unwrap();
-        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 50);
+        assert_eq!(balance(&sys, a), 50);
         sys.shutdown();
     }
 
@@ -417,11 +771,11 @@ mod tests {
 
         let mut tx = sys.tx(NodeId(0));
         let ha = tx.updates("A", 1);
-        let ops_done = tx.run(|t| {
+        let r = tx.run(|t| {
             t.call(ha, ops::deposit(5))?;
             Ok(())
         });
-        assert_eq!(ops_done.unwrap(), 1);
+        assert_eq!(r.unwrap().1, 1, "one shared-object operation executed");
 
         // Fig 9 shape: withdraw then abort when the balance went negative.
         let mut tx = sys.tx(NodeId(0));
@@ -434,7 +788,19 @@ mod tests {
             Ok(())
         });
         assert_eq!(r.unwrap_err(), TxError::ManualAbort);
-        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 15);
+        assert_eq!(balance(&sys, a), 15);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn run_returns_the_body_value() {
+        let sys = sys_n(1);
+        sys.host(NodeId(0), "A", Box::new(Account::with_balance(7)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.reads("A", 1);
+        let (seen, ops) = tx.run(|t| t.call(h, ops::balance()).map(|v| v.as_int())).unwrap();
+        assert_eq!(seen, 7);
+        assert_eq!(ops, 1);
         sys.shutdown();
     }
 
@@ -466,10 +832,8 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(sys.with_object(
-            sys.cluster().registry.locate("A").unwrap(),
-            |o| o.as_any().downcast_ref::<Account>().unwrap().balance()
-        ), 8);
+        let oid = sys.cluster().registry.locate("A").unwrap();
+        assert_eq!(balance(&sys, oid), 8);
         assert_eq!(sys.stats.commits.load(std::sync::atomic::Ordering::Relaxed), 8);
         sys.shutdown();
     }
@@ -495,7 +859,7 @@ mod tests {
         t1.abort().unwrap();
         let r = t2.commit();
         assert!(matches!(r, Err(TxError::ForcedAbort(_))), "got {r:?}");
-        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 100);
+        assert_eq!(balance(&sys, a), 100);
         sys.shutdown();
     }
 
@@ -540,7 +904,7 @@ mod tests {
             tx.call(h, ops::deposit(10)).unwrap();
             // dropped without commit/abort
         }
-        assert_eq!(sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()), 5);
+        assert_eq!(balance(&sys, a), 5);
         // A following transaction is not blocked.
         let mut tx = sys.tx(NodeId(0));
         let h = tx.updates("A", 1);
@@ -549,6 +913,89 @@ mod tests {
             Ok(())
         })
         .unwrap();
+        sys.shutdown();
+    }
+
+    // ------------------------------------------------------------------
+    // Futures API
+    // ------------------------------------------------------------------
+
+    #[test]
+    fn submit_then_wait_returns_values_and_commits() {
+        let sys = sys_n(2);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(10)));
+        let b = sys.host(NodeId(1), "B", Box::new(Account::with_balance(20)));
+
+        let mut tx = sys.tx(NodeId(0));
+        let ha = tx.accesses("A", Suprema::new(1, 0, 1));
+        let hb = tx.accesses("B", Suprema::new(1, 0, 1));
+        tx.begin().unwrap();
+        // Fan out both updates, then both reads, then wait everything.
+        let f1 = tx.submit(ha, ops::deposit(5)).unwrap();
+        let f2 = tx.submit(hb, ops::deposit(7)).unwrap();
+        let f3 = tx.submit(ha, ops::balance()).unwrap();
+        let f4 = tx.submit(hb, ops::balance()).unwrap();
+        // Waiting out of submission order is fine: per-object chains keep
+        // program order, cross-object order is unconstrained.
+        assert_eq!(f4.wait().unwrap().as_int(), 27);
+        assert_eq!(f3.wait().unwrap().as_int(), 15);
+        f1.wait().unwrap();
+        f2.wait().unwrap();
+        tx.commit().unwrap();
+        assert_eq!(balance(&sys, a), 15);
+        assert_eq!(balance(&sys, b), 27);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn submitted_ops_on_one_object_run_in_program_order() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::new(1, 0, 2));
+        tx.begin().unwrap();
+        let f1 = tx.submit(h, ops::deposit(5)).unwrap();
+        let f2 = tx.submit(h, ops::deposit(10)).unwrap();
+        let f3 = tx.submit(h, ops::balance()).unwrap();
+        assert_eq!(f3.wait().unwrap().as_int(), 15, "reads see all prior submits");
+        f2.wait().unwrap();
+        f1.wait().unwrap();
+        tx.commit().unwrap();
+        assert_eq!(balance(&sys, a), 15);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn ablation_mode_resolves_submits_inline() {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let sys = AtomicRmi2::with_config(
+            cluster,
+            OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: false },
+        );
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(1)));
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::new(0, 0, 1));
+        tx.begin().unwrap();
+        let f = tx.submit(h, ops::deposit(2)).unwrap();
+        assert!(f.is_ready(), "asynchrony=false resolves at submission");
+        f.wait().unwrap();
+        tx.commit().unwrap();
+        assert_eq!(balance(&sys, a), 3);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn per_tx_asynchrony_override_wins_over_system_config() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+        let mut tx = sys.tx(NodeId(0)).asynchronous(false);
+        let h = tx.updates("A", 1);
+        tx.begin().unwrap();
+        let f = tx.submit(h, ops::deposit(4)).unwrap();
+        assert!(f.is_ready());
+        f.wait().unwrap();
+        tx.commit().unwrap();
+        assert_eq!(balance(&sys, a), 4);
         sys.shutdown();
     }
 }

@@ -16,7 +16,7 @@
 //! serializes where OptSVA-CF parallelizes — this gap is exactly what the
 //! paper's evaluation measures (Atomic RMI vs Atomic RMI 2, Figs 10–12).
 
-use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::api::{run_with_retries, Dtm, ObjHandle, OpFuture, TxCtx, TxError, TxSpec, TxStats};
 use crate::buffers::CopyBuffer;
 use crate::clock::Clock;
 use crate::cluster::{Cluster, NodeId, Oid};
@@ -93,6 +93,7 @@ impl AtomicRmi1 {
         SvaTransaction {
             sys: Arc::clone(self),
             client,
+            wait_timeout: self.wait_timeout,
             decls: Vec::new(),
             objs: Vec::new(),
             phase: Phase::Preamble,
@@ -124,6 +125,9 @@ struct TxObj {
 pub struct SvaTransaction {
     sys: Arc<AtomicRmi1>,
     client: NodeId,
+    /// Per-transaction failure-suspicion deadline (defaults to the
+    /// system-wide setting; `None` disables suspicion).
+    wait_timeout: Option<Duration>,
     decls: Vec<(String, u64)>,
     objs: Vec<TxObj>,
     phase: Phase,
@@ -181,9 +185,16 @@ impl SvaTransaction {
         Ok(())
     }
 
+    /// Per-transaction failure-suspicion deadline override (§3.4).
+    pub fn timeout(mut self, t: Duration) -> Self {
+        assert!(self.phase == Phase::Preamble, "timeout() after begin");
+        self.wait_timeout = Some(t);
+        self
+    }
+
     fn deadline(&self) -> Option<Duration> {
         let clock = self.sys.cluster.clock();
-        self.sys.wait_timeout.map(|t| clock.now() + t)
+        self.wait_timeout.map(|t| clock.now() + t)
     }
 
     /// Execute one operation: wait at the access condition (first call),
@@ -206,7 +217,6 @@ impl SvaTransaction {
             });
         }
         let deadline = self
-            .sys
             .wait_timeout
             .map(|t| self.sys.cluster.clock().now() + t);
         if !o.accessed {
@@ -278,6 +288,15 @@ impl SvaTransaction {
     /// Manual abort: restore checkpoints (oldest aborter wins), release,
     /// terminate.
     pub fn abort(&mut self) -> Result<(), TxError> {
+        self.abort_with(&TxError::ManualAbort);
+        Ok(())
+    }
+
+    /// Abort, attributing the cause: manual aborts and retries count as
+    /// `manual_aborts`, everything else (cascades, object errors) as
+    /// `forced_aborts`. (The pre-driver code counted a manual abort twice
+    /// — once here and once in the retry loop.)
+    fn abort_with(&mut self, cause: &TxError) {
         assert!(self.phase == Phase::Running);
         let cluster = Arc::clone(&self.sys.cluster);
         let client = self.client;
@@ -289,8 +308,14 @@ impl SvaTransaction {
         }
         self.rollback_all();
         self.phase = Phase::Done;
-        self.sys.manual_aborts.fetch_add(1, Ordering::Relaxed);
-        Ok(())
+        match cause {
+            TxError::ManualAbort | TxError::Retry => {
+                self.sys.manual_aborts.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {
+                self.sys.forced_aborts.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     fn rollback_all(&mut self) {
@@ -322,7 +347,10 @@ impl SvaTransaction {
 }
 
 impl TxCtx for SvaTransaction {
-    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+    /// SVA has no asynchronous machinery (every operation synchronizes at
+    /// the access condition, §4.1): `submit` executes inline and returns a
+    /// resolved future, so `call` (the trait default) is unchanged.
+    fn submit(&mut self, h: ObjHandle, call: OpCall) -> Result<OpFuture, TxError> {
         let (node, req) = {
             let o = &self.objs[h.0];
             (o.slot.oid.node, call.wire_size())
@@ -330,14 +358,14 @@ impl TxCtx for SvaTransaction {
         let client = self.client;
         let cluster = Arc::clone(&self.sys.cluster);
         // Pay the RMI round trip; the handler runs at the object's home.
-        cluster.rpc(client, node, req, || {
+        Ok(OpFuture::ready(cluster.rpc(client, node, req, || {
             let r = self.invoke(h, &call);
             let resp = match &r {
                 Ok(v) => v.wire_size(),
                 Err(_) => 16,
             };
             (r, resp)
-        })
+        })))
     }
 
     fn client(&self) -> NodeId {
@@ -358,43 +386,40 @@ impl Dtm for Arc<AtomicRmi1> {
         "atomic-rmi (SVA)"
     }
 
-    fn run(
+    // SVA has no irrevocable mode (versioning is already abort-free absent
+    // manual aborts) and no asynchrony: those spec knobs are ignored.
+    fn run_tx(
         &self,
         client: NodeId,
-        decls: &[AccessDecl],
-        _irrevocable: bool, // SVA has no irrevocable mode; versioning is
-        // already abort-free absent manual aborts
+        spec: &TxSpec,
         body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
     ) -> Result<TxStats, TxError> {
-        let mut attempts = 0u64;
-        loop {
-            attempts += 1;
-            let mut tx = self.tx(client);
-            for d in decls {
-                // SVA is operation-agnostic: collapse per-mode suprema.
-                tx.accesses(&d.name, d.suprema.total());
-            }
-            tx.begin()?;
-            let r = body(&mut tx);
-            let outcome = match r {
-                Ok(()) => {
-                    let ops = tx.ops();
-                    tx.commit().map(|()| TxStats { ops, attempts })
+        run_with_retries(
+            spec.max_attempts.unwrap_or(crate::api::DEFAULT_MAX_ATTEMPTS),
+            || {
+                let mut tx = self.tx(client);
+                if let Some(t) = spec.wait_timeout {
+                    tx.wait_timeout = t;
                 }
-                Err(e) => {
-                    let _ = tx.abort();
-                    if matches!(e, TxError::ManualAbort | TxError::Retry) {
-                        self.manual_aborts.fetch_add(1, Ordering::Relaxed);
+                for d in &spec.decls {
+                    // SVA is operation-agnostic: collapse per-mode suprema.
+                    tx.accesses(&d.name, d.suprema.total());
+                }
+                tx.begin()?;
+                match body(&mut tx) {
+                    Ok(()) => {
+                        let ops = tx.ops();
+                        tx.commit()?;
+                        Ok(ops)
                     }
-                    Err(e)
+                    Err(e) => {
+                        tx.abort_with(&e);
+                        Err(e)
+                    }
                 }
-            };
-            match outcome {
-                Ok(stats) => return Ok(stats),
-                Err(e) if e.is_retryable() && attempts < 1000 => continue,
-                Err(e) => return Err(e),
-            }
-        }
+            },
+            |_, _| {},
+        )
     }
 
     fn aborts(&self) -> u64 {

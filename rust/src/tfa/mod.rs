@@ -24,7 +24,7 @@
 //! TFA is opaque but has no provision for irrevocable operations: aborted
 //! transactions re-execute their bodies (Fig 13 counts how often).
 
-use crate::api::{AccessDecl, Dtm, ObjHandle, TxCtx, TxError, TxStats};
+use crate::api::{run_with_retries, Dtm, ObjHandle, OpFuture, TxCtx, TxError, TxSpec, TxStats};
 use crate::clock::Clock;
 use crate::cluster::{Cluster, NodeId, Oid};
 use crate::locks::{DistRwLock, LockMode};
@@ -33,6 +33,11 @@ use crate::util::prng::Prng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
+
+/// Default bound on optimistic re-executions (conflict aborts are TFA's
+/// normal operating mode, so the budget is far above the pessimistic
+/// frameworks' [`crate::api::DEFAULT_MAX_ATTEMPTS`]).
+const OPTIMISTIC_MAX_ATTEMPTS: u64 = 10_000;
 
 /// A hosted object: live state + commit version + commit lock.
 struct Slot {
@@ -229,7 +234,20 @@ impl TfaTx<'_> {
 }
 
 impl TxCtx for TfaTx<'_> {
-    fn call(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
+    /// TFA executes on local copies (data-flow), so there is nothing to
+    /// overlap: `submit` runs the operation inline and returns a resolved
+    /// future; `call` (the trait default) is unchanged.
+    fn submit(&mut self, h: ObjHandle, call: OpCall) -> Result<OpFuture, TxError> {
+        Ok(OpFuture::ready(self.invoke_local(h, call)))
+    }
+
+    fn client(&self) -> NodeId {
+        self.client
+    }
+}
+
+impl TfaTx<'_> {
+    fn invoke_local(&mut self, h: ObjHandle, call: OpCall) -> Result<Value, TxError> {
         self.ensure_local(h)?;
         let c = self.copies[h.0].as_mut().unwrap();
         // All operations execute on the local copy — reads, writes and
@@ -242,10 +260,6 @@ impl TxCtx for TfaTx<'_> {
         c.ops += 1;
         Ok(v)
     }
-
-    fn client(&self) -> NodeId {
-        self.client
-    }
 }
 
 impl Dtm for Arc<TfaSystem> {
@@ -253,17 +267,17 @@ impl Dtm for Arc<TfaSystem> {
         "hyflow2 (TFA)"
     }
 
-    fn run(
+    // TFA has no irrevocable support (§4.1) — the body simply re-executes
+    // on abort; the spec's irrevocable/timeout/asynchrony knobs are ignored.
+    fn run_tx(
         &self,
         client: NodeId,
-        decls: &[AccessDecl],
-        _irrevocable: bool, // TFA has no irrevocable support (§4.1) — the
-        // body simply re-executes on abort
+        spec: &TxSpec,
         body: &mut dyn FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
     ) -> Result<TxStats, TxError> {
         // Resolve names once.
-        let mut oids = Vec::with_capacity(decls.len());
-        for d in decls {
+        let mut oids = Vec::with_capacity(spec.decls.len());
+        for d in &spec.decls {
             oids.push(
                 self.cluster
                     .registry
@@ -274,38 +288,40 @@ impl Dtm for Arc<TfaSystem> {
         let mut rng = Prng::seeded(
             0x7FA0_5EED ^ ((client.0 as u64) << 32) ^ self.commit_count.load(Ordering::Relaxed),
         );
-        let mut attempts = 0u64;
-        loop {
-            attempts += 1;
-            let mut tx = TfaTx {
-                sys: self,
-                client,
-                wv: self.clock(client).load(Ordering::Acquire),
-                oids: oids.clone(),
-                copies: (0..oids.len()).map(|_| None).collect(),
-            };
-            let outcome = match body(&mut tx) {
-                Ok(()) => tx.commit(),
-                Err(e) => Err(e),
-            };
-            match outcome {
-                Ok(ops) => {
-                    self.commit_count.fetch_add(1, Ordering::Relaxed);
-                    return Ok(TxStats { ops, attempts });
+        let outcome = run_with_retries(
+            // Optimistic conflicts retry routinely: TFA's default budget is
+            // an order of magnitude above the pessimistic frameworks'.
+            spec.max_attempts.unwrap_or(OPTIMISTIC_MAX_ATTEMPTS),
+            || {
+                let mut tx = TfaTx {
+                    sys: self,
+                    client,
+                    wv: self.clock(client).load(Ordering::Acquire),
+                    oids: oids.clone(),
+                    copies: (0..oids.len()).map(|_| None).collect(),
+                };
+                match body(&mut tx) {
+                    Ok(()) => tx.commit(),
+                    Err(e) => Err(e),
                 }
-                Err(TxError::Conflict(_)) | Err(TxError::Retry) if attempts < 10_000 => {
-                    self.abort_count.fetch_add(1, Ordering::Relaxed);
-                    // Randomized exponential backoff, capped at 32× base —
-                    // paid through the cluster clock (virtual-time safe).
-                    let factor = 1u64 << attempts.min(5);
-                    let jitter = rng.below(self.backoff.as_micros() as u64 * factor + 1);
-                    self.cluster.clock().sleep(Duration::from_micros(jitter));
-                    continue;
-                }
-                Err(e) => {
-                    self.abort_count.fetch_add(1, Ordering::Relaxed);
-                    return Err(e);
-                }
+            },
+            |attempt, _e| {
+                self.abort_count.fetch_add(1, Ordering::Relaxed);
+                // Randomized exponential backoff, capped at 32× base —
+                // paid through the cluster clock (virtual-time safe).
+                let factor = 1u64 << attempt.min(5);
+                let jitter = rng.below(self.backoff.as_micros() as u64 * factor + 1);
+                self.cluster.clock().sleep(Duration::from_micros(jitter));
+            },
+        );
+        match outcome {
+            Ok(stats) => {
+                self.commit_count.fetch_add(1, Ordering::Relaxed);
+                Ok(stats)
+            }
+            Err(e) => {
+                self.abort_count.fetch_add(1, Ordering::Relaxed);
+                Err(e)
             }
         }
     }
@@ -322,12 +338,26 @@ impl Dtm for Arc<TfaSystem> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::Suprema;
+    use crate::api::{AccessDecl, Suprema};
     use crate::cluster::NetworkModel;
     use crate::object::{account::ops, Account};
 
     fn sys() -> Arc<TfaSystem> {
         TfaSystem::new(Arc::new(Cluster::new(2, NetworkModel::instant())))
+    }
+
+    /// Run a body over a declaration list through the builder front end.
+    fn run(
+        sys: &Arc<TfaSystem>,
+        client: NodeId,
+        decls: &[AccessDecl],
+        body: impl FnMut(&mut dyn TxCtx) -> Result<(), TxError>,
+    ) -> Result<TxStats, TxError> {
+        (sys as &dyn Dtm)
+            .tx(client)
+            .with_decls(decls)
+            .run(body)
+            .map(|((), stats)| stats)
     }
 
     #[test]
@@ -339,7 +369,7 @@ mod tests {
             AccessDecl::new("A", Suprema::unknown()),
             AccessDecl::new("B", Suprema::unknown()),
         ];
-        sys.run(NodeId(0), &decls, false, &mut |t| {
+        run(&sys, NodeId(0), &decls, |t| {
             t.call(ObjHandle(0), ops::withdraw(25))?;
             t.call(ObjHandle(1), ops::deposit(25))?;
             Ok(())
@@ -361,7 +391,7 @@ mod tests {
             let sys = Arc::clone(&sys);
             let decls = decls.clone();
             handles.push(std::thread::spawn(move || {
-                sys.run(NodeId(0), &decls, false, &mut |t| {
+                run(&sys, NodeId(0), &decls, |t| {
                     let v = t.call(ObjHandle(0), ops::balance())?.as_int();
                     t.call(ObjHandle(0), ops::deposit(1))?;
                     let _ = v;
@@ -396,7 +426,7 @@ mod tests {
         let b2 = Arc::clone(&barrier);
         let t = std::thread::spawn(move || {
             let mut first = true;
-            sys2.run(NodeId(1), &d2, false, &mut |t| {
+            run(&sys2, NodeId(1), &d2, |t| {
                 let _ = t.call(ObjHandle(0), ops::balance())?;
                 if first {
                     first = false;
@@ -409,7 +439,7 @@ mod tests {
             .unwrap()
         });
         barrier.wait();
-        sys.run(NodeId(0), &decls, false, &mut |t| {
+        run(&sys, NodeId(0), &decls, |t| {
             t.call(ObjHandle(0), ops::deposit(1))?;
             Ok(())
         })
@@ -431,7 +461,7 @@ mod tests {
             let sys = Arc::clone(&sys);
             let decls = decls.clone();
             handles.push(std::thread::spawn(move || {
-                sys.run(NodeId(0), &decls, false, &mut |t| {
+                run(&sys, NodeId(0), &decls, |t| {
                     assert_eq!(t.call(ObjHandle(0), ops::balance())?.as_int(), 5);
                     Ok(())
                 })

@@ -6,7 +6,7 @@
 //! shared data per second* — the paper's y-axis.
 
 use super::frameworks::FrameworkKind;
-use crate::api::{AccessDecl, ObjHandle, Suprema, TxError};
+use crate::api::{AccessDecl, Dtm, ObjHandle, OpFuture, Suprema, TxCtx, TxError};
 use crate::clock::Clock;
 use crate::cluster::{Cluster, NetworkModel};
 use crate::object::{OpCall, RegisterObject};
@@ -49,6 +49,13 @@ pub struct EigenbenchParams {
     pub net: NetworkModel,
     /// Run irrevocable transactions instead of ordinary ones.
     pub irrevocable: bool,
+    /// Issue each transaction's operations through the asynchronous
+    /// `submit` API (all submits first, then wait the futures in order)
+    /// instead of blocking `call`s — the submit-then-wait pipelining the
+    /// API redesign exposes. Per-object program order is preserved by the
+    /// framework, so committed results are identical; only the blocking
+    /// structure (and therefore simulated time) changes.
+    pub pipeline_ops: bool,
     /// Run on a [`crate::clock::VirtualClock`]: operation delays and
     /// network latency are accounted in simulated time (no real sleeping)
     /// and throughput is reported against simulated elapsed time. The
@@ -74,6 +81,7 @@ impl Default for EigenbenchParams {
             op_delay: Duration::from_millis(3),
             net: NetworkModel::lan(),
             irrevocable: false,
+            pipeline_ops: false,
             virtual_time: true,
             seed: 0xE16E_5EED,
         }
@@ -273,12 +281,29 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
                 for _ in 0..params.txns_per_client {
                     let prog = gen_tx(&mut rng, &params, &hot_names, &mild_names, &mut history);
                     let t_tx = clock.now();
-                    let r = fw.dtm().run(node, &prog.decls, params.irrevocable, &mut |t| {
-                        for (idx, call) in &prog.ops {
-                            t.call(ObjHandle(*idx), call.clone())?;
-                        }
-                        Ok(())
-                    });
+                    let r = fw
+                        .dtm()
+                        .tx(node)
+                        .with_decls(&prog.decls)
+                        .irrevocable_if(params.irrevocable)
+                        .run(|t| {
+                            if params.pipeline_ops {
+                                // Submit-then-wait: fan every operation out,
+                                // then collect; per-object order is kept by
+                                // the framework.
+                                let mut futures = Vec::with_capacity(prog.ops.len());
+                                for (idx, call) in &prog.ops {
+                                    futures.push(t.submit(ObjHandle(*idx), call.clone())?);
+                                }
+                                OpFuture::wait_all(futures)?;
+                            } else {
+                                for (idx, call) in &prog.ops {
+                                    t.call(ObjHandle(*idx), call.clone())?;
+                                }
+                            }
+                            Ok(())
+                        })
+                        .map(|((), stats)| stats);
                     local_hist.record_duration(clock.now().saturating_sub(t_tx));
                     match r {
                         Ok(stats) => {
@@ -322,11 +347,12 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
     let elapsed = if params.virtual_time && !sim.is_zero() { sim } else { wall };
     EigenbenchResult {
         params_label: format!(
-            "{}n/{}c/{}a/{}",
+            "{}n/{}c/{}a/{}{}",
             params.nodes,
             params.total_clients(),
             params.arrays_per_node,
-            params.ratio_label()
+            params.ratio_label(),
+            if params.pipeline_ops { "/pipe" } else { "" },
         ),
         framework: fw.dtm().framework_name(),
         throughput: ops as f64 / elapsed.as_secs_f64().max(f64::MIN_POSITIVE),
@@ -450,6 +476,37 @@ mod tests {
             r.wall
         );
         assert!(r.throughput > 0.0);
+    }
+
+    #[test]
+    fn pipelined_mode_commits_identically_to_blocking() {
+        // The futures API must not change *what* commits — only the
+        // blocking structure. (Final-state equality across random wait
+        // interleavings is covered by the `async_api` property suite.)
+        for kind in [
+            FrameworkKind::Optsva,
+            FrameworkKind::OptsvaNoAsync,
+            FrameworkKind::Tfa,
+        ] {
+            let base = EigenbenchParams {
+                kind,
+                nodes: 2,
+                clients_per_node: 2,
+                arrays_per_node: 4,
+                txns_per_client: 3,
+                hot_ops: 6,
+                read_pct: 50,
+                op_delay: Duration::from_micros(100),
+                net: NetworkModel::instant(),
+                ..Default::default()
+            };
+            let blocking = run_eigenbench(&base);
+            let pipelined =
+                run_eigenbench(&EigenbenchParams { pipeline_ops: true, ..base.clone() });
+            assert_eq!(pipelined.committed_txns, blocking.committed_txns, "{}", kind.label());
+            assert_eq!(pipelined.committed_ops, blocking.committed_ops, "{}", kind.label());
+            assert!(pipelined.params_label.ends_with("/pipe"));
+        }
     }
 
     #[test]

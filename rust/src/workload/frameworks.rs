@@ -160,7 +160,7 @@ impl Framework {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::api::{AccessDecl, ObjHandle, Suprema};
+    use crate::api::{AccessDecl, ObjHandle, Suprema, TxCtx};
     use crate::cluster::NetworkModel;
     use crate::object::{account::ops, Account};
 
@@ -185,7 +185,9 @@ mod tests {
                 AccessDecl::new("B", Suprema::updates(1)),
             ];
             fw.dtm()
-                .run(NodeId(0), &decls, false, &mut |t| {
+                .tx(NodeId(0))
+                .with_decls(&decls)
+                .run(|t| {
                     t.call(ObjHandle(0), ops::withdraw(40))?;
                     t.call(ObjHandle(1), ops::deposit(40))?;
                     Ok(())

@@ -1,0 +1,331 @@
+//! The asynchronous (futures) transaction API, end to end:
+//!
+//!  * a property test that `submit` + `wait` — in arbitrary wait
+//!    interleavings — commits exactly the same per-operation results and
+//!    final states as the sequential `call` path (the `asynchrony = false`
+//!    ablation), over random programs;
+//!  * a regression that an [`OpFuture`](atomic_rmi2::OpFuture) dropped
+//!    unresolved still executes, still counts toward the declared suprema,
+//!    and surfaces failures at commit;
+//!  * a deterministic simulated-time comparison showing submit-then-wait
+//!    pipelining beating blocking `call`s (the §2.6/§2.8 asynchrony win);
+//!  * an attempts-accounting regression for bodies that abort before
+//!    their first operation (shared retry driver).
+
+use atomic_rmi2::api::{AccessDecl, ObjHandle, Suprema, TxCtx, TxError};
+use atomic_rmi2::object::{account::ops, Account, OpCall, RegisterObject, Value};
+use atomic_rmi2::optsva::{AtomicRmi2, OptsvaConfig};
+use atomic_rmi2::util::prng::Prng;
+use atomic_rmi2::workload::FrameworkKind;
+use atomic_rmi2::{Cluster, NetworkModel, NodeId};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One random transaction program over register objects.
+#[derive(Debug, Clone)]
+struct Prog {
+    ops: Vec<(usize, OpCall)>,
+}
+
+fn gen_prog(rng: &mut Prng, n_objects: usize, max_ops: usize) -> Prog {
+    let n_ops = 1 + rng.index(max_ops);
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let obj = rng.index(n_objects);
+        let op = match rng.index(3) {
+            0 => OpCall::nullary("get"),
+            1 => OpCall::unary("set", rng.below(100) as i64),
+            _ => OpCall::unary("add", rng.below(10) as i64),
+        };
+        ops.push((obj, op));
+    }
+    Prog { ops }
+}
+
+/// Exact per-mode suprema (perfect a-priori knowledge, as the paper's
+/// preamble provides).
+fn suprema_for(prog: &Prog, n_objects: usize) -> Vec<Suprema> {
+    let mut sup = vec![Suprema::new(0, 0, 0); n_objects];
+    for (o, call) in &prog.ops {
+        match call.method {
+            "get" => sup[*o].reads += 1,
+            "set" => sup[*o].writes += 1,
+            _ => sup[*o].updates += 1,
+        }
+    }
+    sup
+}
+
+fn build(asynchrony: bool, n_objects: usize) -> Arc<AtomicRmi2> {
+    let cluster = Arc::new(Cluster::new(2, NetworkModel::instant()));
+    let sys = AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony },
+    );
+    for i in 0..n_objects {
+        sys.host(
+            NodeId((i % 2) as u16),
+            &format!("r{i}"),
+            Box::new(RegisterObject::new(0)),
+        );
+    }
+    sys
+}
+
+fn final_states(sys: &AtomicRmi2, n_objects: usize) -> Vec<i64> {
+    (0..n_objects)
+        .map(|i| {
+            let oid = sys.cluster().registry.locate(&format!("r{i}")).unwrap();
+            sys.with_object(oid, |o| {
+                o.as_any().downcast_ref::<RegisterObject>().unwrap().value()
+            })
+        })
+        .collect()
+}
+
+/// Run `prog` on `sys`; `wait_order` = None uses blocking calls, Some(rng)
+/// submits everything first and waits the futures in a random permutation.
+fn run_prog(
+    sys: &Arc<AtomicRmi2>,
+    prog: &Prog,
+    n_objects: usize,
+    mut wait_order: Option<&mut Prng>,
+) -> Vec<Value> {
+    let sup = suprema_for(prog, n_objects);
+    let mut tx = sys.tx(NodeId(0));
+    let mut handle_of: Vec<Option<ObjHandle>> = vec![None; n_objects];
+    for (i, s) in sup.iter().enumerate() {
+        if s.total() > 0 {
+            handle_of[i] = Some(tx.accesses(&format!("r{i}"), *s));
+        }
+    }
+    let (out, _) = tx
+        .run(|t| {
+            match wait_order.as_deref_mut() {
+                None => {
+                    let mut out = Vec::with_capacity(prog.ops.len());
+                    for (o, call) in &prog.ops {
+                        out.push(t.call(handle_of[*o].unwrap(), call.clone())?);
+                    }
+                    Ok(out)
+                }
+                Some(rng) => {
+                    let mut futures = Vec::with_capacity(prog.ops.len());
+                    for (o, call) in &prog.ops {
+                        futures.push(Some(t.submit(handle_of[*o].unwrap(), call.clone())?));
+                    }
+                    // Wait in a random permutation: per-object program
+                    // order is the framework's job, not the caller's.
+                    let mut order: Vec<usize> = (0..futures.len()).collect();
+                    rng.shuffle(&mut order);
+                    let mut out: Vec<Option<Value>> = (0..futures.len()).map(|_| None).collect();
+                    for i in order {
+                        out[i] = Some(futures[i].take().unwrap().wait()?);
+                    }
+                    Ok(out.into_iter().map(Option::unwrap).collect())
+                }
+            }
+        })
+        .expect("single-threaded program must commit");
+    out
+}
+
+/// Property: submit+wait (any interleaving) ≡ sequential call — per-op
+/// results and final states — with the `asynchrony = false` ablation as
+/// the sequential oracle.
+#[test]
+fn prop_submit_wait_matches_sequential_call() {
+    for case in 0..15u64 {
+        let mut rng = Prng::seeded(0xA51C ^ case);
+        let mut wait_rng = Prng::seeded(0xD0_0D ^ case);
+        let n_objects = 2 + rng.index(4);
+        let progs: Vec<Prog> = (0..5).map(|_| gen_prog(&mut rng, n_objects, 8)).collect();
+
+        let oracle = build(false, n_objects); // sequential ablation
+        let subject = build(true, n_objects); // full asynchrony
+        for prog in &progs {
+            let want = run_prog(&oracle, prog, n_objects, None);
+            let got = run_prog(&subject, prog, n_objects, Some(&mut wait_rng));
+            assert_eq!(got, want, "case {case}: results diverged\nprog: {prog:?}");
+        }
+        assert_eq!(
+            final_states(&subject, n_objects),
+            final_states(&oracle, n_objects),
+            "case {case}: final states diverged"
+        );
+        oracle.shutdown();
+        subject.shutdown();
+    }
+}
+
+fn account_sys() -> Arc<AtomicRmi2> {
+    let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+    AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: true },
+    )
+}
+
+/// Regression: a future dropped unresolved still executes, counts toward
+/// the supremum (so the object is released at the declared bound), and
+/// its effect commits.
+#[test]
+fn unresolved_future_at_commit_still_enforces_supremum_accounting() {
+    let sys = account_sys();
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.updates("A", 1);
+    tx.begin().unwrap();
+    let fut = tx.submit(h, ops::deposit(5)).unwrap();
+    drop(fut); // never waited
+    tx.commit().unwrap();
+    // The operation ran exactly once and the per-mode counter reflects it.
+    assert_eq!(tx.proxy(h).counts(), (0, 0, 1), "supremum accounting");
+    assert!(tx.proxy(h).released(), "released at the declared bound");
+    assert_eq!(
+        sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()),
+        5
+    );
+    sys.shutdown();
+}
+
+/// Regression: a *failing* submitted operation whose future was dropped
+/// aborts the transaction at commit — the error cannot vanish.
+#[test]
+fn unobserved_submitted_failure_surfaces_at_commit() {
+    let sys = account_sys();
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.updates("A", 1);
+    tx.begin().unwrap();
+    let f1 = tx.submit(h, ops::deposit(1)).unwrap();
+    let f2 = tx.submit(h, ops::deposit(1)).unwrap(); // exceeds the supremum
+    drop(f1);
+    drop(f2);
+    let r = tx.commit();
+    assert!(matches!(r, Err(TxError::SupremaExceeded { .. })), "got {r:?}");
+    // The transaction aborted: the first deposit was rolled back.
+    assert_eq!(
+        sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()),
+        100
+    );
+    sys.shutdown();
+}
+
+/// The same guarantee holds in the `asynchrony = false` ablation: inline
+/// submits are registered with the commit drain too.
+#[test]
+fn unobserved_inline_failure_surfaces_at_commit_in_ablation_mode() {
+    let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+    let sys = AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: false },
+    );
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.updates("A", 1);
+    tx.begin().unwrap();
+    drop(tx.submit(h, ops::deposit(1)).unwrap());
+    drop(tx.submit(h, ops::deposit(1)).unwrap()); // exceeds the supremum inline
+    let r = tx.commit();
+    assert!(matches!(r, Err(TxError::SupremaExceeded { .. })), "got {r:?}");
+    assert_eq!(
+        sys.with_object(a, |o| o.as_any().downcast_ref::<Account>().unwrap().balance()),
+        100
+    );
+    sys.shutdown();
+}
+
+/// Run one 8-op transaction over 8 registers spread across 4 nodes on a
+/// virtual clock, returning the simulated time it took.
+fn timed_transaction(pipeline: bool) -> Duration {
+    let cluster = Arc::new(Cluster::with_clock(
+        4,
+        NetworkModel { one_way: Duration::from_millis(2), per_kib: Duration::ZERO },
+        Arc::new(atomic_rmi2::VirtualClock::new()),
+    ));
+    let clock = Arc::clone(cluster.clock());
+    let sys = AtomicRmi2::new(cluster);
+    for n in 0..4u16 {
+        for i in 0..2u16 {
+            sys.host(NodeId(n), &format!("r-{n}-{i}"), Box::new(RegisterObject::new(0)));
+        }
+    }
+    let t0 = clock.now();
+    let mut tx = sys.tx(NodeId(0));
+    let mut handles = Vec::new();
+    for n in 0..4u16 {
+        for i in 0..2u16 {
+            handles.push(tx.accesses(&format!("r-{n}-{i}"), Suprema::updates(1)));
+        }
+    }
+    tx.run(|t| {
+        if pipeline {
+            let mut futures = Vec::with_capacity(handles.len());
+            for h in &handles {
+                futures.push(t.submit(*h, OpCall::unary("add", 1i64))?);
+            }
+            for f in futures {
+                f.wait()?;
+            }
+        } else {
+            for h in &handles {
+                t.call(*h, OpCall::unary("add", 1i64))?;
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+    let elapsed = clock.now().saturating_sub(t0);
+    sys.shutdown();
+    elapsed
+}
+
+/// The asynchrony win, on simulated time: submitting all operations and
+/// then waiting must beat one blocking round trip per operation. With a
+/// single client every virtual sleep is serial on one thread, so the
+/// comparison is deterministic up to executor scheduling — which can only
+/// *shrink* the pipelined time, never push it past the blocking bound.
+#[test]
+fn pipelined_submit_beats_blocking_call_on_simulated_time() {
+    let blocking = timed_transaction(false);
+    let pipelined = timed_transaction(true);
+    // Structure: every remote op pays two one-way trips inline when
+    // blocking; pipelined ops pay the send leg inline and overlap their
+    // response legs with later sends and executor work, so the pipelined
+    // run is strictly cheaper in simulated time.
+    assert!(
+        pipelined < blocking,
+        "submit-then-wait must beat blocking calls: pipelined {pipelined:?} vs blocking {blocking:?}"
+    );
+}
+
+/// Attempts accounting (shared retry driver): a body that aborts *before
+/// its first operation* still counts the attempt, for every retrying
+/// framework.
+#[test]
+fn attempts_counted_when_body_aborts_before_first_op() {
+    for kind in [FrameworkKind::Optsva, FrameworkKind::Sva, FrameworkKind::Tfa] {
+        let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+        let fw = kind.build(cluster);
+        fw.host(NodeId(0), "r0", Box::new(RegisterObject::new(0)));
+        let tries = AtomicU64::new(0);
+        let decls = vec![AccessDecl::new("r0", Suprema::updates(1))];
+        let ((), stats) = fw
+            .dtm()
+            .tx(NodeId(0))
+            .with_decls(&decls)
+            .run(|t| {
+                if tries.fetch_add(1, Ordering::SeqCst) < 2 {
+                    return t.retry(); // abort with zero ops executed
+                }
+                t.call(ObjHandle(0), OpCall::unary("add", 1i64))?;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(stats.attempts, 3, "{}: zero-op attempts must count", kind.label());
+        assert_eq!(stats.ops, 1, "{}", kind.label());
+        fw.shutdown();
+    }
+}

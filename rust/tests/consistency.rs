@@ -4,7 +4,7 @@
 //! money conservation; committed histories must replay serially
 //! (serializability by replay, via `checker`).
 
-use atomic_rmi2::api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError};
+use atomic_rmi2::api::{AccessDecl, ObjHandle, Suprema, TxCtx, TxError};
 use atomic_rmi2::checker::{replay_final, OpRecord, Recorder};
 use atomic_rmi2::object::{account::ops, Account, SharedObject};
 use atomic_rmi2::util::prng::Prng;
@@ -44,7 +44,9 @@ fn all_frameworks_conserve_money_under_concurrency() {
                         AccessDecl::new(format!("a{to}"), Suprema::updates(1)),
                     ];
                     fw.dtm()
-                        .run(NodeId(0), &decls, false, &mut |t| {
+                        .tx(NodeId(0))
+                        .with_decls(&decls)
+                        .run(|t| {
                             t.call(ObjHandle(0), ops::withdraw(amt))?;
                             t.call(ObjHandle(1), ops::deposit(amt))?;
                             Ok(())
@@ -112,18 +114,20 @@ fn run_cascade_stress(kind: FrameworkKind, round: u64) {
                 let decls: Vec<_> = (0..ACCOUNTS)
                     .map(|i| AccessDecl::new(format!("a{i}"), Suprema::reads(1)))
                     .collect();
-                let mut total = 0i64;
-                let r = fw.dtm().run(NodeId(0), &decls, true, &mut |t| {
-                    total = 0; // body may be re-executed (SVA runs this
-                               // non-irrevocably and can join a cascade)
+                // The audited total is the body's return value — re-executed
+                // bodies (SVA runs this non-irrevocably and can join a
+                // cascade) recompute it from scratch, no out-param reset.
+                let r = fw.dtm().tx(NodeId(0)).with_decls(&decls).irrevocable().run(|t| {
+                    let mut total = 0i64;
                     for i in 0..ACCOUNTS {
                         total += t.call(ObjHandle(i), ops::balance())?.as_int();
                     }
-                    Ok(())
+                    Ok(total)
                 });
-                if let Err(e) = r {
-                    panic!("audit failed: {e}");
-                }
+                let total = match r {
+                    Ok((total, _)) => total,
+                    Err(e) => panic!("audit failed: {e}"),
+                };
                 assert_eq!(total, INITIAL * ACCOUNTS as i64, "inconsistent audit");
             }
         })
@@ -143,7 +147,7 @@ fn run_cascade_stress(kind: FrameworkKind, round: u64) {
                     AccessDecl::new(format!("a{from}"), Suprema::new(1, 0, 1)),
                     AccessDecl::new(format!("a{to}"), Suprema::updates(1)),
                 ];
-                let r = fw.dtm().run(NodeId(0), &decls, false, &mut |t| {
+                let r = fw.dtm().tx(NodeId(0)).with_decls(&decls).run(|t| {
                     t.call(ObjHandle(0), ops::withdraw(amt))?;
                     t.call(ObjHandle(1), ops::deposit(amt))?;
                     if t.call(ObjHandle(0), ops::balance())?.as_int() < 0 {
@@ -212,9 +216,9 @@ fn committed_histories_replay_serially() {
                         AccessDecl::new(format!("a{from}"), Suprema::new(1, 0, 1)),
                         AccessDecl::new(format!("a{to}"), Suprema::updates(1)),
                     ];
-                    let mut obs: Vec<OpRecord> = Vec::new();
-                    let r = fw.dtm().run(NodeId(0), &decls, false, &mut |t| {
-                        obs.clear();
+                    // The observation record is the body's return value.
+                    let r = fw.dtm().tx(NodeId(0)).with_decls(&decls).run(|t| {
+                        let mut obs: Vec<OpRecord> = Vec::new();
                         let w = t.call(ObjHandle(0), ops::withdraw(amt))?;
                         obs.push(OpRecord {
                             object: format!("a{from}"),
@@ -227,10 +231,10 @@ fn committed_histories_replay_serially() {
                             call: ops::deposit(amt),
                             result: d,
                         });
-                        Ok(())
+                        Ok(obs)
                     });
-                    if r.is_ok() {
-                        recorder.commit(format!("c{c}-t{n}"), std::mem::take(&mut obs));
+                    if let Ok((obs, _)) = r {
+                        recorder.commit(format!("c{c}-t{n}"), obs);
                     }
                 }
             }));

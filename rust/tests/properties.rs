@@ -123,9 +123,11 @@ fn prop_no_forced_aborts_and_bounded_completion() {
                     for _ in 0..8 {
                         let prog = gen_program(&mut rng, n_objects, 6);
                         let decls = decls_for(&prog, n_objects);
-                        let stats = fw
+                        let ((), stats) = fw
                             .dtm()
-                            .run(NodeId(0), &decls, false, &mut |ctx| {
+                            .tx(NodeId(0))
+                            .with_decls(&decls)
+                            .run(|ctx| {
                                 for (o, call) in &prog.ops {
                                     ctx.call(ObjHandle(*o), call.clone())?;
                                 }
@@ -183,10 +185,13 @@ fn prop_single_thread_matches_serial_oracle() {
             }
             for (p, prog) in progs.iter().enumerate() {
                 let decls = decls_for(prog, n_objects);
-                let mut got: Vec<i64> = Vec::new();
-                fw.dtm()
-                    .run(NodeId(0), &decls, false, &mut |ctx| {
-                        got.clear();
+                // The body *returns* the observed values — no out-params.
+                let (got, _) = fw
+                    .dtm()
+                    .tx(NodeId(0))
+                    .with_decls(&decls)
+                    .run(|ctx| {
+                        let mut got: Vec<i64> = Vec::new();
                         for (o, call) in &prog.ops {
                             let v = ctx.call(ObjHandle(*o), call.clone())?;
                             got.push(match v {
@@ -194,7 +199,7 @@ fn prop_single_thread_matches_serial_oracle() {
                                 _ => 0,
                             });
                         }
-                        Ok(())
+                        Ok(got)
                     })
                     .unwrap();
                 assert_eq!(
@@ -247,7 +252,9 @@ fn prop_concurrent_adds_sum_exactly() {
                     let k = 1 + rng.below(9) as i64;
                     let decls = vec![AccessDecl::new("r0", Suprema::updates(1))];
                     fw.dtm()
-                        .run(NodeId(0), &decls, false, &mut |ctx| {
+                        .tx(NodeId(0))
+                        .with_decls(&decls)
+                        .run(|ctx| {
                             ctx.call(ObjHandle(0), OpCall::unary("add", k))?;
                             Ok(())
                         })
@@ -295,7 +302,7 @@ fn prop_manual_abort_then_retry_converges() {
                     let k = 1 + rng.below(5) as i64;
                     let drop_it = rng.chance(0.4);
                     let decls = vec![AccessDecl::new("r0", Suprema::new(0, 0, 1))];
-                    let r = fw.dtm().run(NodeId(0), &decls, false, &mut |ctx| {
+                    let r = fw.dtm().tx(NodeId(0)).with_decls(&decls).run(|ctx| {
                         ctx.call(ObjHandle(0), OpCall::unary("add", k))?;
                         if drop_it {
                             return ctx.abort();

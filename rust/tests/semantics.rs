@@ -1,9 +1,11 @@
 //! Remaining API-semantics coverage: `retry()`, log-buffer apply failures
 //! surfacing at commit, complex objects (KvStore, Queue, ComputeObject)
-//! under transactions, and network accounting.
+//! under transactions, and network accounting — exercised through the
+//! builder/futures API where a framework-agnostic path exists.
 
-use atomic_rmi2::api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError};
+use atomic_rmi2::api::{AccessDecl, Dtm, ObjHandle, Suprema, TxCtx, TxError, TxStats};
 use atomic_rmi2::object::{
+    refs::{KvRef, QueueRef},
     ComputeObject, KvStore, OpCall, QueueObject, SpinBackend, Value,
 };
 use atomic_rmi2::optsva::AtomicRmi2;
@@ -17,6 +19,15 @@ fn sys() -> (Arc<Cluster>, Arc<AtomicRmi2>) {
     (cluster, sys)
 }
 
+/// Builder-API front end over the OptSVA system.
+fn run<R>(
+    sys: &Arc<AtomicRmi2>,
+    decls: &[AccessDecl],
+    body: impl FnMut(&mut dyn TxCtx) -> Result<R, TxError>,
+) -> Result<(R, TxStats), TxError> {
+    (sys as &dyn Dtm).tx(NodeId(0)).with_decls(decls).run(body)
+}
+
 /// `retry()` aborts the attempt (rolling back its effects) and re-executes
 /// the body from scratch (paper Fig 8).
 #[test]
@@ -26,19 +37,16 @@ fn retry_reexecutes_the_body_with_clean_state() {
     let attempts = Arc::new(AtomicU64::new(0));
     let decls = vec![AccessDecl::new("kv", Suprema::unknown())];
     let a = Arc::clone(&attempts);
-    let stats = sys
-        .run(NodeId(0), &decls, false, &mut |t| {
-            let n = a.fetch_add(1, Ordering::SeqCst);
-            t.call(
-                ObjHandle(0),
-                OpCall::new("put", vec![Value::from("n"), Value::from(n as i64 + 10)]),
-            )?;
-            if n < 2 {
-                return t.retry();
-            }
-            Ok(())
-        })
-        .unwrap();
+    let kv = KvRef::new(ObjHandle(0));
+    let ((), stats) = run(&sys, &decls, |t| {
+        let n = a.fetch_add(1, Ordering::SeqCst);
+        kv.put(t, "n", n as i64 + 10)?;
+        if n < 2 {
+            return t.retry();
+        }
+        Ok(())
+    })
+    .unwrap();
     assert_eq!(stats.attempts, 3);
     let oid = sys.cluster().registry.locate("kv").unwrap();
     // Only the final attempt's put survives (earlier ones rolled back).
@@ -88,30 +96,28 @@ fn queue_handoff_is_exactly_once() {
     for p in 0..4i64 {
         let sys = Arc::clone(&sys);
         producers.push(std::thread::spawn(move || {
+            let q = QueueRef::new(ObjHandle(0));
             for i in 0..10i64 {
                 let decls = vec![AccessDecl::new("q", Suprema::writes(1))];
-                sys.run(NodeId(0), &decls, false, &mut |t| {
-                    t.call(ObjHandle(0), OpCall::unary("push", p * 100 + i))?;
-                    Ok(())
-                })
-                .unwrap();
+                run(&sys, &decls, |t| q.push(t, p * 100 + i)).unwrap();
             }
         }));
     }
     for p in producers {
         p.join().unwrap();
     }
-    // Drain transactionally.
+    // Drain transactionally; the body *returns* the popped element instead
+    // of smuggling it through a captured out-variable.
+    let q = QueueRef::new(ObjHandle(0));
     let mut seen = Vec::new();
     loop {
         let decls = vec![AccessDecl::new("q", Suprema::unknown())];
-        let mut got: Option<i64> = None;
-        sys.run(NodeId(0), &decls, false, &mut |t| {
-            got = None;
-            if t.call(ObjHandle(0), OpCall::nullary("len"))?.as_int() > 0 {
-                got = Some(t.call(ObjHandle(0), OpCall::nullary("pop"))?.as_int());
+        let (got, _) = run(&sys, &decls, |t| {
+            if q.len(t)? > 0 {
+                q.pop(t)
+            } else {
+                Ok(None)
             }
-            Ok(())
         })
         .unwrap();
         match got {
@@ -149,13 +155,11 @@ fn compute_object_mix_is_transactional() {
     });
     assert_eq!(before, after_abort, "aborted mix must be rolled back");
 
-    // Committed mix: digest changes deterministically.
+    // Committed mix: the digest (returned from the body) changes.
     let decls = vec![AccessDecl::new("c", Suprema::new(1, 0, 1))];
-    let mut digest = 0.0f64;
-    sys.run(NodeId(0), &decls, false, &mut |t| {
+    let (digest, _) = run(&sys, &decls, |t| {
         t.call(ObjHandle(0), OpCall::new("mix", vec![Value::Floats(vec![0.5; 8])]))?;
-        digest = t.call(ObjHandle(0), OpCall::nullary("digest"))?.as_float();
-        Ok(())
+        Ok(t.call(ObjHandle(0), OpCall::nullary("digest"))?.try_float()?)
     })
     .unwrap();
     assert!(digest.is_finite() && digest > 0.0);
@@ -173,7 +177,7 @@ fn network_accounting_matches_interaction_pattern() {
 
     // Local-only transaction: zero messages.
     let decls = vec![AccessDecl::new("local", Suprema::reads(1))];
-    sys.run(NodeId(0), &decls, false, &mut |t| {
+    run(&sys, &decls, |t| {
         t.call(ObjHandle(0), OpCall::unary("get", "k"))?;
         Ok(())
     })
@@ -184,7 +188,7 @@ fn network_accounting_matches_interaction_pattern() {
 
     // Remote transaction: start + op + commit ⇒ ≥ 3 round trips.
     let decls = vec![AccessDecl::new("remote", Suprema::reads(1))];
-    sys.run(NodeId(0), &decls, false, &mut |t| {
+    run(&sys, &decls, |t| {
         t.call(ObjHandle(0), OpCall::unary("get", "k"))?;
         Ok(())
     })

@@ -13,8 +13,14 @@
 //! pipelined row is where submit-then-wait beats blocking `call` on
 //! simulated time.
 //!
+//! Besides the printed table, the run writes
+//! `target/bench-results/BENCH_ablation.json`: one entry per
+//! variant × ratio (e.g. `atomic-rmi2+pipe/90r`) whose
+//! `throughput_ops_s` is gated by CI against the committed baseline.
+//!
 //! `cargo bench --bench ablation` (`ARMI2_BENCH_QUICK=1` to smoke).
 
+use atomic_rmi2::bench::{default_output_dir, BenchReport};
 use atomic_rmi2::metrics::{fmt_speedup, fmt_throughput, Table};
 use atomic_rmi2::workload::{run_eigenbench, EigenbenchParams, FrameworkKind};
 use atomic_rmi2::NetworkModel;
@@ -22,6 +28,11 @@ use std::time::Duration;
 
 fn main() {
     let quick = std::env::var_os("ARMI2_BENCH_QUICK").is_some();
+    let mut report = BenchReport::new("ablation")
+        .config("scale", if quick { "Quick" } else { "Full" })
+        .config("nodes", 4)
+        .config("arrays_per_node", 10)
+        .config("net", "lan");
     let mut table = Table::new(
         "Ablation: throughput [ops/s], 4 nodes x 8 clients, 10 arrays/node",
         &["variant", "9÷1", "5÷5", "1÷9"],
@@ -54,6 +65,7 @@ fn main() {
             if kind == FrameworkKind::Optsva && !pipeline_ops {
                 base.push(r.throughput);
             }
+            report.push(r.bench_entry(format!("{label}/{read_pct}r")));
             row.push(fmt_throughput(r.throughput));
             if label != "atomic-rmi2" && !base.is_empty() {
                 let i = row.len() - 2;
@@ -67,5 +79,11 @@ fn main() {
         table.add_row(row);
     }
     println!("{}", table.render());
-    println!("ablation done");
+    match report.write_to(&default_output_dir()) {
+        Ok(path) => println!("ablation done — report: {}", path.display()),
+        Err(e) => {
+            eprintln!("ablation done — failed to write report: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -2,9 +2,10 @@
 //! all eight frameworks at three read-write ratios.
 //!
 //! `cargo bench --bench fig10_clients` (set `ARMI2_BENCH_QUICK=1` for a
-//! fast smoke run). Raw rows land in `target/bench-results/fig10.csv`.
+//! fast smoke run). Raw rows land in `target/bench-results/fig10.csv`,
+//! machine-readable results in `target/bench-results/BENCH_fig10.json`.
 
-use atomic_rmi2::workload::sweeps::{fig10, write_results_csv, Scale};
+use atomic_rmi2::workload::sweeps::{fig10, write_results_csv, write_results_json, Scale};
 
 fn main() {
     let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
@@ -20,6 +21,10 @@ fn main() {
     match write_results_csv("fig10", &results) {
         Ok(path) => println!("raw results: {path}"),
         Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    match write_results_json("fig10", scale, &results) {
+        Ok(path) => println!("report: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
     }
     println!("fig10 done in {:.1}s", t0.elapsed().as_secs_f64());
 }

@@ -3,7 +3,7 @@
 //!
 //! `cargo bench --bench fig11_nodes` (`ARMI2_BENCH_QUICK=1` to smoke).
 
-use atomic_rmi2::workload::sweeps::{fig11, write_results_csv, Scale};
+use atomic_rmi2::workload::sweeps::{fig11, write_results_csv, write_results_json, Scale};
 
 fn main() {
     let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
@@ -19,6 +19,10 @@ fn main() {
     match write_results_csv("fig11", &results) {
         Ok(path) => println!("raw results: {path}"),
         Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    match write_results_json("fig11", scale, &results) {
+        Ok(path) => println!("report: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
     }
     println!("fig11 done in {:.1}s", t0.elapsed().as_secs_f64());
 }

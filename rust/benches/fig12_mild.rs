@@ -4,7 +4,7 @@
 //!
 //! `cargo bench --bench fig12_mild` (`ARMI2_BENCH_QUICK=1` to smoke).
 
-use atomic_rmi2::workload::sweeps::{fig12, write_results_csv, Scale};
+use atomic_rmi2::workload::sweeps::{fig12, write_results_csv, write_results_json, Scale};
 
 fn main() {
     let scale = if std::env::var_os("ARMI2_BENCH_QUICK").is_some() {
@@ -20,6 +20,10 @@ fn main() {
     match write_results_csv("fig12", &results) {
         Ok(path) => println!("raw results: {path}"),
         Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    match write_results_json("fig12", scale, &results) {
+        Ok(path) => println!("report: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
     }
     println!("fig12 done in {:.1}s", t0.elapsed().as_secs_f64());
 }

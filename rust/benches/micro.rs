@@ -1,23 +1,39 @@
 //! Microbenchmarks of the coordinator's hot-path primitives (the §Perf
 //! profiling substrate): versioning handoff, start-lock acquisition,
-//! executor dispatch, buffer capture, proxy round trip, and the XLA
-//! kernel call. Criterion is not in the offline mirror; this is a plain
-//! median-of-N harness with warmup.
+//! executor dispatch, buffer capture, proxy round trip, registry lookup
+//! (stringly vs interned), and the XLA kernel call. Criterion is not in
+//! the offline mirror; this is a plain median-of-N harness with warmup.
+//!
+//! Besides the printed table, the run writes
+//! `target/bench-results/BENCH_micro.json` (see `docs/BENCHMARKS.md`):
+//! one entry per primitive with an `ns_per_op` metric, gated by CI
+//! against the committed `BENCH_micro.json` baseline.
 
 use atomic_rmi2::api::Suprema;
+use atomic_rmi2::bench::{default_output_dir, BenchEntry, BenchReport};
 use atomic_rmi2::buffers::CopyBuffer;
 use atomic_rmi2::clock::{Clock, RealClock};
+use atomic_rmi2::cluster::registry::{CoarseRegistry, Registry};
 use atomic_rmi2::executor::Executor;
 use atomic_rmi2::object::{account::ops, Account, ComputeBackend, SpinBackend};
 use atomic_rmi2::optsva::AtomicRmi2;
 use atomic_rmi2::runtime::{XlaBackend, XlaRuntime};
 use atomic_rmi2::versioning::ObjectCc;
-use atomic_rmi2::{Cluster, NetworkModel, NodeId, TxCtx};
+use atomic_rmi2::{Cluster, NetworkModel, NodeId, Oid, TxCtx};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// Median wall time of `iters` batched runs of `f` (ns per op).
-fn bench(name: &str, iters: u64, batch: u64, mut f: impl FnMut()) {
+/// Median wall time of `iters` batched runs of `f`, printed and recorded
+/// into `report` as an entry named `key` with `ns_per_op` (median) and
+/// `ns_per_op_p95` metrics. Returns the median ns/op.
+fn bench(
+    report: &mut BenchReport,
+    key: &str,
+    label: &str,
+    iters: u64,
+    batch: u64,
+    mut f: impl FnMut(),
+) -> f64 {
     // warmup
     for _ in 0..batch.min(1000) {
         f();
@@ -33,90 +49,202 @@ fn bench(name: &str, iters: u64, batch: u64, mut f: impl FnMut()) {
     samples.sort_unstable();
     let med = samples[samples.len() / 2];
     let p95 = samples[(samples.len() as f64 * 0.95) as usize];
-    println!("{name:<44} median {med:>9} ns/op   p95 {p95:>9} ns/op");
+    println!("{label:<44} median {med:>9} ns/op   p95 {p95:>9} ns/op");
+    report.push(
+        BenchEntry::new(key)
+            .metric("ns_per_op", med as f64)
+            .metric("ns_per_op_p95", p95 as f64),
+    );
+    med as f64
 }
 
 fn main() {
     println!("== micro: coordinator hot-path primitives ==");
+    let mut report = BenchReport::new("micro").config("harness", "median-of-N");
 
     // 1. Versioning handoff: assign pv → wait_access → release → terminate.
     let cc = ObjectCc::new();
-    bench("versioning: pv+access+release+terminate", 30, 1000, || {
-        let pv = cc.assign_pv();
-        cc.wait_access(pv, None).unwrap();
-        cc.release(pv);
-        cc.terminate(pv);
-    });
+    bench(
+        &mut report,
+        "versioning_handoff",
+        "versioning: pv+access+release+terminate",
+        30,
+        1000,
+        || {
+            let pv = cc.assign_pv();
+            cc.wait_access(pv, None).unwrap();
+            cc.release(pv);
+            cc.terminate(pv);
+        },
+    );
 
     // 2. Start-lock acquisition over an 8-object access set.
     let ccs: Vec<ObjectCc> = (0..8).map(|_| ObjectCc::new()).collect();
     let view: Vec<_> = ccs
         .iter()
         .enumerate()
-        .map(|(i, cc)| (atomic_rmi2::Oid::new(NodeId(0), i as u32), cc))
+        .map(|(i, cc)| (Oid::new(NodeId(0), i as u32), cc))
         .collect();
-    bench("startlock: 8-object atomic pv acquisition", 30, 1000, || {
-        let _ = atomic_rmi2::versioning::acquire_start_locks(&view, |_| {});
-    });
+    bench(
+        &mut report,
+        "startlock_8obj",
+        "startlock: 8-object atomic pv acquisition",
+        30,
+        1000,
+        || {
+            let _ = atomic_rmi2::versioning::acquire_start_locks(&view, |_| {});
+        },
+    );
 
     // 3. Executor: submit + run an immediately-true task.
     let ex = Executor::spawn();
     let clock = RealClock::shared();
-    bench("executor: submit+complete (ready task)", 20, 200, || {
-        let h = ex.submit(|| true, || {});
-        h.join(clock.as_ref(), Some(clock.now() + Duration::from_secs(5)))
-            .unwrap();
-    });
+    bench(
+        &mut report,
+        "executor_submit_complete",
+        "executor: submit+complete (ready task)",
+        20,
+        200,
+        || {
+            let h = ex.submit(|| true, || {});
+            h.join(clock.as_ref(), Some(clock.now() + Duration::from_secs(5)))
+                .unwrap();
+        },
+    );
     ex.shutdown();
 
     // 4. Copy-buffer capture of a small object.
     let acct = Account::with_balance(42);
-    bench("buffers: CopyBuffer::capture(Account)", 30, 10_000, || {
-        std::hint::black_box(CopyBuffer::capture(&acct));
-    });
+    bench(
+        &mut report,
+        "copybuffer_capture_account",
+        "buffers: CopyBuffer::capture(Account)",
+        30,
+        10_000,
+        || {
+            std::hint::black_box(CopyBuffer::capture(&acct));
+        },
+    );
 
-    // 5. Full transaction round trip, 1 object, instant network.
+    // 5. Registry lookup: the pre-overhaul stringly path (hash the name on
+    // every dispatch, one coarse lock) vs the interned path the hot path
+    // now takes (NameId → striped entry table, no string hashing). The
+    // ratio is the headline win of the interned/striped registry.
+    const NAMES: u32 = 1024;
+    let coarse = CoarseRegistry::new();
+    let interned = Registry::new();
+    let names: Vec<String> = (0..NAMES).map(|i| format!("bench-object-{i}")).collect();
+    for (i, name) in names.iter().enumerate() {
+        let oid = Oid::new(NodeId((i % 4) as u16), i as u32);
+        coarse.bind(name.clone(), oid);
+        interned.bind(name, oid);
+    }
+    let ids: Vec<_> = names.iter().map(|n| interned.lookup(n).unwrap()).collect();
+    let mut i = 0usize;
+    let stringly_ns = bench(
+        &mut report,
+        "registry_coarse_locate",
+        "registry: stringly locate (coarse lock)",
+        30,
+        50_000,
+        || {
+            i = (i + 1) % names.len();
+            std::hint::black_box(coarse.locate(&names[i]));
+        },
+    );
+    let mut j = 0usize;
+    let interned_ns = bench(
+        &mut report,
+        "registry_interned_resolve",
+        "registry: interned resolve (striped)",
+        30,
+        50_000,
+        || {
+            j = (j + 1) % ids.len();
+            std::hint::black_box(interned.resolve(ids[j]));
+        },
+    );
+    let speedup = stringly_ns / interned_ns.max(1.0);
+    println!("registry: interned speedup {speedup:>39.1}x");
+    report.push(BenchEntry::new("registry_speedup").metric("speedup_x", speedup));
+
+    // 6. Full transaction round trip, 1 object, instant network.
     let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
     let sys = AtomicRmi2::new(cluster);
     sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
-    bench("optsva: full 1-object update txn", 20, 200, || {
-        let mut tx = sys.tx(NodeId(0));
-        let h = tx.accesses("A", Suprema::updates(1));
-        let _ = tx
-            .run(|t| {
-                t.call(h, ops::deposit(1))?;
-                Ok(())
-            })
-            .unwrap();
-    });
+    bench(
+        &mut report,
+        "optsva_txn_1obj_call",
+        "optsva: full 1-object update txn",
+        20,
+        200,
+        || {
+            let mut tx = sys.tx(NodeId(0));
+            let h = tx.accesses("A", Suprema::updates(1));
+            let _ = tx
+                .run(|t| {
+                    t.call(h, ops::deposit(1))?;
+                    Ok(())
+                })
+                .unwrap();
+        },
+    );
 
-    // 5b. Same transaction through the asynchronous submit path.
-    bench("optsva: full 1-object txn (submit+wait)", 20, 200, || {
-        let mut tx = sys.tx(NodeId(0));
-        let h = tx.accesses("A", Suprema::updates(1));
-        let _ = tx
-            .run(|t| {
-                t.submit(h, ops::deposit(1))?.wait()?;
-                Ok(())
-            })
-            .unwrap();
-    });
+    // 6b. Same transaction through the asynchronous submit path.
+    bench(
+        &mut report,
+        "optsva_txn_1obj_submit",
+        "optsva: full 1-object txn (submit+wait)",
+        20,
+        200,
+        || {
+            let mut tx = sys.tx(NodeId(0));
+            let h = tx.accesses("A", Suprema::updates(1));
+            let _ = tx
+                .run(|t| {
+                    t.submit(h, ops::deposit(1))?.wait()?;
+                    Ok(())
+                })
+                .unwrap();
+        },
+    );
 
-    // 6. Kernel call: spin reference vs AOT XLA artifact.
+    // 7. Kernel call: spin reference vs AOT XLA artifact.
     let spin = SpinBackend::new(64, 4);
     let state = vec![0.1f32; 64];
     let params = vec![0.05f32; 64];
-    bench("kernel: SpinBackend mix (D=64, R=4)", 20, 500, || {
-        std::hint::black_box(spin.mix(&state, &params).unwrap());
-    });
+    bench(
+        &mut report,
+        "kernel_spin_mix",
+        "kernel: SpinBackend mix (D=64, R=4)",
+        20,
+        500,
+        || {
+            std::hint::black_box(spin.mix(&state, &params).unwrap());
+        },
+    );
     if XlaRuntime::artifacts_present(&XlaRuntime::default_dir()) {
         let xla = XlaBackend::load_default().expect("artifacts");
-        bench("kernel: XlaBackend mix (AOT artifact)", 20, 500, || {
-            std::hint::black_box(xla.mix(&state, &params).unwrap());
-        });
+        bench(
+            &mut report,
+            "kernel_xla_mix",
+            "kernel: XlaBackend mix (AOT artifact)",
+            20,
+            500,
+            || {
+                std::hint::black_box(xla.mix(&state, &params).unwrap());
+            },
+        );
     } else {
         println!("kernel: XlaBackend skipped (run `make artifacts`)");
     }
     sys.shutdown();
-    println!("micro done");
+
+    match report.write_to(&default_output_dir()) {
+        Ok(path) => println!("micro done — report: {}", path.display()),
+        Err(e) => {
+            eprintln!("micro done — failed to write report: {e}");
+            std::process::exit(1);
+        }
+    }
 }

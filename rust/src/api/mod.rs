@@ -34,7 +34,7 @@
 //! irrevocability — §2.4; the retry driver's cascading-abort handling —
 //! §2.3.
 
-use crate::cluster::{NodeId, Oid};
+use crate::cluster::{NameId, NodeId, Oid, Registry};
 use crate::object::{ObjectError, OpCall, Value};
 use crate::versioning::WaitTimeout;
 use std::fmt;
@@ -45,8 +45,11 @@ use std::time::Duration;
 /// not given, infinity is assumed (and the system maintains guarantees)").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Suprema {
+    /// Maximum read operations (methods that observe but never modify).
     pub reads: u64,
+    /// Maximum write operations (methods that modify but never observe).
     pub writes: u64,
+    /// Maximum update operations (methods that both observe and modify).
     pub updates: u64,
 }
 
@@ -56,6 +59,8 @@ impl Suprema {
         Suprema { reads: u64::MAX, writes: u64::MAX, updates: u64::MAX }
     }
 
+    /// Explicit per-mode bounds, e.g. `Suprema::new(2, 0, 1)` for a
+    /// transaction that reads twice and updates once.
     pub fn new(reads: u64, writes: u64, updates: u64) -> Self {
         Suprema { reads, writes, updates }
     }
@@ -301,15 +306,36 @@ pub struct TxStats {
 }
 
 /// One preamble entry: an object name and its suprema.
+///
+/// The `interned` id is the hot-path fast lane: when present, frameworks
+/// resolve the object through [`Registry::resolve`] — one atomic load —
+/// instead of hashing `name` on every transaction attempt. [`TxBuilder`]
+/// fills it in automatically when the target [`Dtm`] exposes its registry;
+/// workloads that pre-generate declarations can intern once up front via
+/// [`AccessDecl::interned`].
 #[derive(Debug, Clone)]
 pub struct AccessDecl {
+    /// Global object name, as bound in the cluster registry.
     pub name: String,
+    /// Declared per-mode operation bounds for this object.
     pub suprema: Suprema,
+    /// Interned registry id of `name`, if known. Invariant: when `Some`,
+    /// the id was produced by the registry of the cluster this declaration
+    /// is used against — ids are meaningless across registries.
+    pub interned: Option<NameId>,
 }
 
 impl AccessDecl {
+    /// Declaration by name only; the id is filled in by [`TxBuilder`] (or
+    /// stays `None`, keeping the stringly-keyed `locate` path).
     pub fn new(name: impl Into<String>, suprema: Suprema) -> Self {
-        AccessDecl { name: name.into(), suprema }
+        AccessDecl { name: name.into(), suprema, interned: None }
+    }
+
+    /// Declaration with a pre-interned id (see [`Registry::intern`]) —
+    /// lets benchmark drivers intern each object name exactly once.
+    pub fn interned(name: impl Into<String>, id: NameId, suprema: Suprema) -> Self {
+        AccessDecl { name: name.into(), suprema, interned: Some(id) }
     }
 }
 
@@ -352,7 +378,16 @@ pub struct TxSpec {
 
 /// Framework-polymorphic transaction runner.
 pub trait Dtm: Send + Sync {
+    /// Stable display name, e.g. `"atomic-rmi2 (OptSVA-CF)"`.
     fn framework_name(&self) -> &'static str;
+
+    /// The name registry this framework resolves objects against, if any.
+    /// [`TxBuilder`] uses it to intern declared names once at build time so
+    /// per-attempt resolution never hashes a string; returning `None`
+    /// (the default) keeps the stringly-keyed path.
+    fn registry(&self) -> Option<&Registry> {
+        None
+    }
 
     /// Run a transaction from `client` over the preamble in `spec`,
     /// handling start/commit/abort and the retry policy. Prefer the
@@ -402,6 +437,7 @@ pub struct TxBuilder<'d> {
 }
 
 impl<'d> TxBuilder<'d> {
+    /// An empty preamble targeting `dtm`, executed from `client`.
     pub fn new(dtm: &'d (dyn Dtm + 'd), client: NodeId) -> Self {
         TxBuilder { dtm, client, spec: TxSpec::default() }
     }
@@ -430,15 +466,28 @@ impl<'d> TxBuilder<'d> {
         self
     }
 
-    /// Declare and return the object's handle (incremental style).
+    /// Declare and return the object's handle (incremental style). Interns
+    /// the name against the framework's registry (when exposed) so later
+    /// attempts resolve it without hashing the string.
     pub fn declare(&mut self, name: &str, sup: Suprema) -> ObjHandle {
-        self.spec.decls.push(AccessDecl::new(name, sup));
+        let mut decl = AccessDecl::new(name, sup);
+        decl.interned = self.dtm.registry().map(|r| r.intern(name));
+        self.spec.decls.push(decl);
         ObjHandle(self.spec.decls.len() - 1)
     }
 
     /// Append a pre-built declaration list (handles follow list order).
+    /// Declarations without an interned id are interned here, once, rather
+    /// than on every transaction attempt.
     pub fn with_decls(mut self, decls: &[AccessDecl]) -> Self {
-        self.spec.decls.extend_from_slice(decls);
+        let registry = self.dtm.registry();
+        self.spec.decls.extend(decls.iter().map(|d| {
+            let mut d = d.clone();
+            if d.interned.is_none() {
+                d.interned = registry.map(|r| r.intern(&d.name));
+            }
+            d
+        }));
         self
     }
 

@@ -1,0 +1,13 @@
+//! Benchmark reporting infrastructure.
+//!
+//! Every bench target (`micro`, `ablation`, `fig10`–`fig13`) emits, next to
+//! its human-readable table, a machine-readable `BENCH_<name>.json` via
+//! [`report::BenchReport`]. CI uploads these as artifacts on every PR and
+//! gates merges on the committed baselines at the repository root (see
+//! `docs/BENCHMARKS.md` for the schema and workflow).
+
+pub mod report;
+
+pub use report::{
+    default_output_dir, gate, BenchEntry, BenchReport, GateOutcome, Json, SCHEMA_VERSION,
+};

@@ -1,0 +1,846 @@
+//! Schema-versioned benchmark reports (`BENCH_*.json`) and the regression
+//! gate that compares a fresh run against a committed baseline.
+//!
+//! The offline toolchain has no serde, so this module carries its own
+//! minimal JSON document model ([`Json`]): a renderer producing stable,
+//! human-diffable output (2-space indent, insertion-ordered keys) and a
+//! recursive-descent parser for reading baselines back. The document shape
+//! is fixed by [`SCHEMA_VERSION`]; `docs/BENCHMARKS.md` documents every
+//! field.
+//!
+//! ```text
+//! {
+//!   "schema_version": 1,
+//!   "bench": "micro",
+//!   "git_sha": "<GITHUB_SHA | ARMI2_GIT_SHA | unknown>",
+//!   "provisional": false,
+//!   "config": { "nodes": "4", ... },
+//!   "entries": [
+//!     { "name": "...", "metrics": { "ns_per_op": 123.4, ... } }
+//!   ]
+//! }
+//! ```
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Version of the `BENCH_*.json` document shape. Bump on any breaking
+/// change to the schema; [`BenchReport::parse`] rejects mismatched
+/// baselines so the gate fails loudly instead of comparing stale fields.
+pub const SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// JSON document model
+// ---------------------------------------------------------------------
+
+/// A JSON value. Objects preserve insertion order (they are association
+/// lists, not maps) so rendered reports diff cleanly across runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null` (also the rendering of non-finite numbers).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number.
+    Num(f64),
+    /// A string.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, insertion-ordered.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Member of an object by key (`None` for non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// String value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean value, if this is a boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Array elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Render as pretty-printed JSON text (2-space indent, trailing
+    /// newline-free). Deterministic: same document, same text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    item.render_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push(']');
+            }
+            Json::Obj(members) => {
+                if members.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in members.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                    push_indent(out, indent + 1);
+                    render_string(k, out);
+                    out.push_str(": ");
+                    v.render_into(out, indent + 1);
+                }
+                out.push('\n');
+                push_indent(out, indent);
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse JSON text into a document.
+    pub fn parse(text: &str) -> Result<Json, ReportError> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(ReportError::Json { at: pos, msg: "trailing characters" });
+        }
+        Ok(value)
+    }
+}
+
+fn push_indent(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, b: u8, msg: &'static str) -> Result<(), ReportError> {
+    if *pos < bytes.len() && bytes[*pos] == b {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(ReportError::Json { at: *pos, msg })
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json, ReportError> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        Some(b'{') => parse_object(bytes, pos),
+        Some(b'[') => parse_array(bytes, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(bytes, pos)?)),
+        Some(b't') => parse_literal(bytes, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_literal(bytes, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_literal(bytes, pos, "null", Json::Null),
+        Some(b'-' | b'0'..=b'9') => parse_number(bytes, pos),
+        _ => Err(ReportError::Json { at: *pos, msg: "expected a JSON value" }),
+    }
+}
+
+fn parse_literal(
+    bytes: &[u8],
+    pos: &mut usize,
+    word: &'static str,
+    value: Json,
+) -> Result<Json, ReportError> {
+    if bytes[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(value)
+    } else {
+        Err(ReportError::Json { at: *pos, msg: "unknown literal" })
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, ReportError> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+    {
+        *pos += 1;
+    }
+    let token = std::str::from_utf8(&bytes[start..*pos])
+        .map_err(|_| ReportError::Json { at: start, msg: "invalid number" })?;
+    token
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| ReportError::Json { at: start, msg: "invalid number" })
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, ReportError> {
+    expect(bytes, pos, b'"', "expected string")?;
+    let mut s = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err(ReportError::Json { at: *pos, msg: "unterminated string" }),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(s);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                let esc = *bytes
+                    .get(*pos)
+                    .ok_or(ReportError::Json { at: *pos, msg: "unterminated escape" })?;
+                *pos += 1;
+                match esc {
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    b'b' => s.push('\u{0008}'),
+                    b'f' => s.push('\u{000C}'),
+                    b'n' => s.push('\n'),
+                    b'r' => s.push('\r'),
+                    b't' => s.push('\t'),
+                    b'u' => {
+                        let unit = parse_hex4(bytes, pos)?;
+                        let c = if (0xD800..0xDC00).contains(&unit) {
+                            // High surrogate: a \uXXXX low surrogate must
+                            // follow for a valid code point.
+                            if bytes.get(*pos) == Some(&b'\\') && bytes.get(*pos + 1) == Some(&b'u')
+                            {
+                                *pos += 2;
+                                let low = parse_hex4(bytes, pos)?;
+                                let cp = 0x10000
+                                    + ((unit - 0xD800) as u32) * 0x400
+                                    + (low.wrapping_sub(0xDC00)) as u32;
+                                char::from_u32(cp)
+                            } else {
+                                None
+                            }
+                        } else {
+                            char::from_u32(unit as u32)
+                        };
+                        s.push(c.ok_or(ReportError::Json {
+                            at: *pos,
+                            msg: "invalid \\u escape",
+                        })?);
+                    }
+                    _ => return Err(ReportError::Json { at: *pos, msg: "unknown escape" }),
+                }
+            }
+            Some(_) => {
+                // Consume one full UTF-8 scalar (input is a &str, so the
+                // byte stream is valid UTF-8).
+                let rest = std::str::from_utf8(&bytes[*pos..])
+                    .map_err(|_| ReportError::Json { at: *pos, msg: "invalid utf-8" })?;
+                let c = rest.chars().next().unwrap();
+                s.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u16, ReportError> {
+    if *pos + 4 > bytes.len() {
+        return Err(ReportError::Json { at: *pos, msg: "truncated \\u escape" });
+    }
+    let token = std::str::from_utf8(&bytes[*pos..*pos + 4])
+        .map_err(|_| ReportError::Json { at: *pos, msg: "invalid \\u escape" })?;
+    let unit = u16::from_str_radix(token, 16)
+        .map_err(|_| ReportError::Json { at: *pos, msg: "invalid \\u escape" })?;
+    *pos += 4;
+    Ok(unit)
+}
+
+fn parse_array(bytes: &[u8], pos: &mut usize) -> Result<Json, ReportError> {
+    expect(bytes, pos, b'[', "expected array")?;
+    let mut items = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(bytes, pos)?);
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(ReportError::Json { at: *pos, msg: "expected ',' or ']'" }),
+        }
+    }
+}
+
+fn parse_object(bytes: &[u8], pos: &mut usize) -> Result<Json, ReportError> {
+    expect(bytes, pos, b'{', "expected object")?;
+    let mut members = Vec::new();
+    skip_ws(bytes, pos);
+    if bytes.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(members));
+    }
+    loop {
+        skip_ws(bytes, pos);
+        let key = parse_string(bytes, pos)?;
+        skip_ws(bytes, pos);
+        expect(bytes, pos, b':', "expected ':'")?;
+        let value = parse_value(bytes, pos)?;
+        members.push((key, value));
+        skip_ws(bytes, pos);
+        match bytes.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(members));
+            }
+            _ => return Err(ReportError::Json { at: *pos, msg: "expected ',' or '}'" }),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------
+
+/// Failure reading or validating a `BENCH_*.json` document.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReportError {
+    /// The text is not valid JSON.
+    Json {
+        /// Byte offset of the failure.
+        at: usize,
+        /// What the parser expected.
+        msg: &'static str,
+    },
+    /// Valid JSON, but not a valid report document.
+    Malformed(String),
+    /// The document's `schema_version` does not match [`SCHEMA_VERSION`].
+    SchemaMismatch {
+        /// The version found in the document.
+        found: u64,
+    },
+}
+
+impl fmt::Display for ReportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReportError::Json { at, msg } => write!(f, "json error at byte {at}: {msg}"),
+            ReportError::Malformed(m) => write!(f, "malformed bench report: {m}"),
+            ReportError::SchemaMismatch { found } => write!(
+                f,
+                "bench report schema version {found} != supported {SCHEMA_VERSION} \
+                 (regenerate the baseline)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReportError {}
+
+// ---------------------------------------------------------------------
+// Report model
+// ---------------------------------------------------------------------
+
+/// One benchmarked scenario: a name plus its numeric metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEntry {
+    /// Scenario identifier, unique within the report (e.g. a micro-bench
+    /// label or `"optsva/90r"`).
+    pub name: String,
+    /// Metric key → value, insertion-ordered. Keys ending in `_ops_s` are
+    /// throughputs (higher is better); `ns_per_op` is a latency (lower is
+    /// better); everything else is informational.
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl BenchEntry {
+    /// A new entry with no metrics.
+    pub fn new(name: impl Into<String>) -> Self {
+        BenchEntry { name: name.into(), metrics: Vec::new() }
+    }
+
+    /// Add a metric (chainable).
+    pub fn metric(mut self, key: impl Into<String>, value: f64) -> Self {
+        self.metrics.push((key.into(), value));
+        self
+    }
+
+    /// Value of a metric by key.
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+/// A full benchmark report, one per bench target per run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Document shape version (see [`SCHEMA_VERSION`]).
+    pub schema_version: u64,
+    /// Bench target name (`micro`, `ablation`, `fig10`, …); also names the
+    /// output file `BENCH_<bench>.json`.
+    pub bench: String,
+    /// Commit the run was produced from: `GITHUB_SHA`, else
+    /// `ARMI2_GIT_SHA`, else `"unknown"`.
+    pub git_sha: String,
+    /// A provisional report carries the schema and entry names but numbers
+    /// that no CI runner produced (e.g. a hand-seeded baseline). The gate
+    /// never fails against a provisional baseline — it reports "skipped"
+    /// until CI commits a measured one.
+    pub provisional: bool,
+    /// Run configuration fingerprint (free-form key → value strings):
+    /// scale, node counts, network model — whatever makes two runs
+    /// comparable or not.
+    pub config: Vec<(String, String)>,
+    /// The measured scenarios.
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    /// A fresh report for bench target `bench`, stamped with the current
+    /// commit (from the environment) and the current [`SCHEMA_VERSION`].
+    pub fn new(bench: impl Into<String>) -> Self {
+        let git_sha = std::env::var("GITHUB_SHA")
+            .or_else(|_| std::env::var("ARMI2_GIT_SHA"))
+            .unwrap_or_else(|_| "unknown".to_string());
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            bench: bench.into(),
+            git_sha,
+            provisional: false,
+            config: Vec::new(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one configuration fingerprint key (chainable).
+    pub fn config(mut self, key: impl Into<String>, value: impl ToString) -> Self {
+        self.config.push((key.into(), value.to_string()));
+        self
+    }
+
+    /// Append a measured scenario.
+    pub fn push(&mut self, entry: BenchEntry) {
+        self.entries.push(entry);
+    }
+
+    /// Entry by name.
+    pub fn entry(&self, name: &str) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The report as a JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema_version".into(), Json::Num(self.schema_version as f64)),
+            ("bench".into(), Json::Str(self.bench.clone())),
+            ("git_sha".into(), Json::Str(self.git_sha.clone())),
+            ("provisional".into(), Json::Bool(self.provisional)),
+            (
+                "config".into(),
+                Json::Obj(
+                    self.config
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+            (
+                "entries".into(),
+                Json::Arr(
+                    self.entries
+                        .iter()
+                        .map(|e| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(e.name.clone())),
+                                (
+                                    "metrics".into(),
+                                    Json::Obj(
+                                        e.metrics
+                                            .iter()
+                                            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render the report as JSON text (with trailing newline, so committed
+    /// baselines are POSIX text files).
+    pub fn render(&self) -> String {
+        let mut s = self.to_json().render();
+        s.push('\n');
+        s
+    }
+
+    /// Parse JSON text back into a report, rejecting schema mismatches.
+    pub fn parse(text: &str) -> Result<Self, ReportError> {
+        let doc = Json::parse(text)?;
+        let version = doc
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| ReportError::Malformed("missing schema_version".into()))?
+            as u64;
+        if version != SCHEMA_VERSION {
+            return Err(ReportError::SchemaMismatch { found: version });
+        }
+        let str_field = |key: &str| -> Result<String, ReportError> {
+            doc.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| ReportError::Malformed(format!("missing string field {key:?}")))
+        };
+        let mut report = BenchReport {
+            schema_version: version,
+            bench: str_field("bench")?,
+            git_sha: str_field("git_sha")?,
+            provisional: doc
+                .get("provisional")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| ReportError::Malformed("missing provisional flag".into()))?,
+            config: Vec::new(),
+            entries: Vec::new(),
+        };
+        if let Some(Json::Obj(members)) = doc.get("config") {
+            for (k, v) in members {
+                let v = v
+                    .as_str()
+                    .ok_or_else(|| ReportError::Malformed(format!("config {k:?} not a string")))?;
+                report.config.push((k.clone(), v.to_string()));
+            }
+        } else {
+            return Err(ReportError::Malformed("missing config object".into()));
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ReportError::Malformed("missing entries array".into()))?;
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ReportError::Malformed("entry without name".into()))?;
+            let mut entry = BenchEntry::new(name);
+            match e.get("metrics") {
+                Some(Json::Obj(members)) => {
+                    for (k, v) in members {
+                        let v = v.as_f64().ok_or_else(|| {
+                            ReportError::Malformed(format!("metric {k:?} not a number"))
+                        })?;
+                        entry.metrics.push((k.clone(), v));
+                    }
+                }
+                _ => return Err(ReportError::Malformed("entry without metrics".into())),
+            }
+            report.entries.push(entry);
+        }
+        Ok(report)
+    }
+
+    /// The canonical output path for this report under `dir`.
+    pub fn path_in(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("BENCH_{}.json", self.bench))
+    }
+
+    /// Write the report to `dir/BENCH_<bench>.json`, creating `dir` as
+    /// needed. Returns the written path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = self.path_in(dir);
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+/// The default output directory for bench reports (`target/bench-results`),
+/// shared with the CSV writers.
+pub fn default_output_dir() -> PathBuf {
+    PathBuf::from("target").join("bench-results")
+}
+
+// ---------------------------------------------------------------------
+// Regression gate
+// ---------------------------------------------------------------------
+
+/// Outcome of gating a fresh report against a baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GateOutcome {
+    /// The whole comparison was skipped (provisional baseline, or nothing
+    /// comparable); carries the reason.
+    pub skipped: Option<String>,
+    /// Human-readable regression descriptions; empty means the gate passed.
+    pub failures: Vec<String>,
+    /// Number of (entry, metric) pairs actually compared.
+    pub compared: usize,
+}
+
+impl GateOutcome {
+    /// Did the gate pass (no regressions; skipped counts as passing)?
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare `new` against `baseline`: for every baseline entry and every
+/// directional metric in it — keys ending in `_ops_s` (higher is better)
+/// and `ns_per_op` (lower is better) — fail if the fresh value is worse by
+/// more than `tolerance` (e.g. `0.20` = 20 %). Non-directional metrics are
+/// ignored. A provisional baseline skips the comparison entirely.
+pub fn gate(new: &BenchReport, baseline: &BenchReport, tolerance: f64) -> GateOutcome {
+    if baseline.provisional {
+        return GateOutcome {
+            skipped: Some("baseline is provisional (no CI-measured numbers yet)".into()),
+            failures: Vec::new(),
+            compared: 0,
+        };
+    }
+    let mut failures = Vec::new();
+    let mut compared = 0;
+    for base_entry in &baseline.entries {
+        let Some(new_entry) = new.entry(&base_entry.name) else {
+            failures.push(format!("entry {:?} missing from the fresh report", base_entry.name));
+            continue;
+        };
+        for (key, base) in &base_entry.metrics {
+            let higher_is_better = key.ends_with("_ops_s");
+            let lower_is_better = key == "ns_per_op";
+            if !higher_is_better && !lower_is_better {
+                continue;
+            }
+            let Some(fresh) = new_entry.get(key) else {
+                failures.push(format!(
+                    "metric {key:?} of entry {:?} missing from the fresh report",
+                    base_entry.name
+                ));
+                continue;
+            };
+            compared += 1;
+            let regressed = if higher_is_better {
+                fresh < base * (1.0 - tolerance)
+            } else {
+                fresh > base * (1.0 + tolerance)
+            };
+            if regressed {
+                failures.push(format!(
+                    "{}/{}: {:.3} vs baseline {:.3} (tolerance {:.0}%)",
+                    base_entry.name,
+                    key,
+                    fresh,
+                    base,
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+    let skipped = if compared == 0 && failures.is_empty() {
+        Some("no comparable directional metrics".into())
+    } else {
+        None
+    };
+    GateOutcome { skipped, failures, compared }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        let mut r = BenchReport::new("micro")
+            .config("scale", "full")
+            .config("network", "instant");
+        r.push(
+            BenchEntry::new("versioning handoff")
+                .metric("ns_per_op", 812.0)
+                .metric("p95_ns", 1190.0),
+        );
+        r.push(
+            BenchEntry::new("optsva/90r")
+                .metric("throughput_ops_s", 15234.5)
+                .metric("aborts", 0.0),
+        );
+        r
+    }
+
+    #[test]
+    fn report_round_trips_through_json_text() {
+        let r = sample();
+        let text = r.render();
+        let back = BenchReport::parse(&text).unwrap();
+        assert_eq!(back, r);
+        // Render → parse → render is a fixed point.
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn schema_version_bump_is_detected() {
+        let mut r = sample();
+        r.schema_version = SCHEMA_VERSION + 1;
+        let err = BenchReport::parse(&r.render()).unwrap_err();
+        assert_eq!(err, ReportError::SchemaMismatch { found: SCHEMA_VERSION + 1 });
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        assert!(matches!(BenchReport::parse("{not json"), Err(ReportError::Json { .. })));
+        assert!(matches!(
+            BenchReport::parse("{\"schema_version\": 1}"),
+            Err(ReportError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let cases = ["plain", "with \"quotes\"", "tab\there", "line\nbreak", "uni: µs → ok"];
+        for case in cases {
+            let doc = Json::Obj(vec![("k".into(), Json::Str(case.into()))]);
+            let back = Json::parse(&doc.render()).unwrap();
+            assert_eq!(back.get("k").and_then(Json::as_str), Some(case));
+        }
+        // Parse-side escapes the renderer never emits.
+        let doc = Json::parse(r#"{"k": "a\/bA😀"}"#).unwrap();
+        assert_eq!(doc.get("k").and_then(Json::as_str), Some("a/bA😀"));
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = sample();
+        let mut fresh = sample();
+        // 10 % worse on both directional metrics: inside a 20 % tolerance.
+        fresh.entries[0].metrics[0].1 = 812.0 * 1.10;
+        fresh.entries[1].metrics[0].1 = 15234.5 * 0.90;
+        let outcome = gate(&fresh, &base, 0.20);
+        assert!(outcome.passed(), "{:?}", outcome.failures);
+        assert_eq!(outcome.compared, 2);
+        assert_eq!(outcome.skipped, None);
+    }
+
+    #[test]
+    fn gate_fails_on_regression_beyond_tolerance() {
+        let base = sample();
+        let mut fresh = sample();
+        fresh.entries[1].metrics[0].1 = 15234.5 * 0.5; // halved throughput
+        let outcome = gate(&fresh, &base, 0.20);
+        assert!(!outcome.passed());
+        assert_eq!(outcome.failures.len(), 1);
+        assert!(outcome.failures[0].contains("optsva/90r"), "{:?}", outcome.failures);
+        // Improvements never fail, whatever the direction convention.
+        let mut better = sample();
+        better.entries[0].metrics[0].1 = 10.0; // far lower ns_per_op
+        better.entries[1].metrics[0].1 = 1e9; // far higher throughput
+        assert!(gate(&better, &base, 0.20).passed());
+    }
+
+    #[test]
+    fn gate_skips_provisional_baselines_and_missing_entries_fail() {
+        let mut base = sample();
+        base.provisional = true;
+        let mut fresh = sample();
+        fresh.entries[1].metrics[0].1 = 1.0; // would be a huge regression
+        let outcome = gate(&fresh, &base, 0.20);
+        assert!(outcome.passed());
+        assert!(outcome.skipped.is_some());
+
+        let base = sample();
+        let mut renamed = sample();
+        renamed.entries[0].name = "something else".into();
+        let outcome = gate(&renamed, &base, 0.20);
+        assert!(!outcome.passed());
+        assert!(outcome.failures[0].contains("missing"), "{:?}", outcome.failures);
+    }
+
+    #[test]
+    fn numbers_render_compactly_and_round_trip() {
+        let doc = Json::Arr(vec![
+            Json::Num(1.0),
+            Json::Num(0.5),
+            Json::Num(-3.25),
+            Json::Num(15234.5),
+            Json::Num(f64::NAN), // rendered as null
+        ]);
+        let text = doc.render();
+        assert!(text.contains('1') && text.contains("0.5") && text.contains("null"));
+        let back = Json::parse(&text).unwrap();
+        let items = back.as_arr().unwrap();
+        assert_eq!(items[0], Json::Num(1.0));
+        assert_eq!(items[3], Json::Num(15234.5));
+        assert_eq!(items[4], Json::Null);
+    }
+}

@@ -12,8 +12,148 @@
 //! Both buffers live on the same node as the object (CF requirement: side
 //! effects must happen at the object's home, §2.6) — structurally enforced
 //! here by the buffers being owned by the server-side proxy.
+//!
+//! This module also hosts [`ArgList`], the small-buffer argument container
+//! of [`OpCall`]: nearly every message and log entry in the system carries
+//! zero, one or two argument [`Value`]s, and the buffers (log entries in
+//! particular) store calls by the thousands — so the arguments live inline
+//! in the call instead of behind a heap `Vec` allocation.
 
 use crate::object::{ObjectError, OpCall, SharedObject, Value};
+use std::ops::Index;
+
+/// Argument list of an [`OpCall`], stored inline for arity ≤ 2.
+///
+/// Every method in the repository's object zoo takes zero, one or two
+/// arguments, and calls are cloned into log buffers and shipped in
+/// (simulated) messages on the per-operation hot path. The inline
+/// representation makes an `OpCall` clone allocation-free for those
+/// arities; longer argument lists spill to a `Vec`.
+///
+/// Construct via [`ArgList::new`]/[`ArgList::one`]/[`ArgList::pair`], from
+/// a `Vec<Value>`, or by collecting an iterator of [`Value`]s; consume as a
+/// slice ([`ArgList::as_slice`], [`ArgList::iter`], indexing).
+#[derive(Clone)]
+pub enum ArgList {
+    /// Up to two arguments inline; the first field is the arity, unused
+    /// slots hold `Value::Unit`.
+    Inline(u8, [Value; 2]),
+    /// Three or more arguments, spilled to the heap.
+    Heap(Vec<Value>),
+}
+
+impl ArgList {
+    /// Largest arity stored without a heap allocation.
+    pub const INLINE_CAP: usize = 2;
+
+    /// The empty argument list (nullary calls).
+    pub fn new() -> Self {
+        ArgList::Inline(0, [Value::Unit, Value::Unit])
+    }
+
+    /// A single-argument list (unary calls).
+    pub fn one(v: Value) -> Self {
+        ArgList::Inline(1, [v, Value::Unit])
+    }
+
+    /// A two-argument list (binary calls).
+    pub fn pair(a: Value, b: Value) -> Self {
+        ArgList::Inline(2, [a, b])
+    }
+
+    /// The arguments as a slice, whatever the representation.
+    pub fn as_slice(&self) -> &[Value] {
+        match self {
+            ArgList::Inline(n, vals) => &vals[..*n as usize],
+            ArgList::Heap(v) => v,
+        }
+    }
+
+    /// Number of arguments.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// Is the list nullary?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th argument, if present.
+    pub fn get(&self, i: usize) -> Option<&Value> {
+        self.as_slice().get(i)
+    }
+
+    /// The first argument, if present.
+    pub fn first(&self) -> Option<&Value> {
+        self.get(0)
+    }
+
+    /// Iterate over the arguments.
+    pub fn iter(&self) -> std::slice::Iter<'_, Value> {
+        self.as_slice().iter()
+    }
+}
+
+impl Default for ArgList {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl From<Vec<Value>> for ArgList {
+    fn from(mut v: Vec<Value>) -> Self {
+        match v.len() {
+            0 => ArgList::new(),
+            1 => ArgList::one(v.pop().expect("len checked")),
+            2 => {
+                let b = v.pop().expect("len checked");
+                let a = v.pop().expect("len checked");
+                ArgList::pair(a, b)
+            }
+            _ => ArgList::Heap(v),
+        }
+    }
+}
+
+impl FromIterator<Value> for ArgList {
+    fn from_iter<I: IntoIterator<Item = Value>>(iter: I) -> Self {
+        iter.into_iter().collect::<Vec<_>>().into()
+    }
+}
+
+impl Index<usize> for ArgList {
+    type Output = Value;
+    fn index(&self, i: usize) -> &Value {
+        &self.as_slice()[i]
+    }
+}
+
+impl<'a> IntoIterator for &'a ArgList {
+    type Item = &'a Value;
+    type IntoIter = std::slice::Iter<'a, Value>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+impl PartialEq for ArgList {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<Value>> for ArgList {
+    fn eq(&self, other: &Vec<Value>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for ArgList {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_list().entries(self.as_slice()).finish()
+    }
+}
 
 /// A snapshot of an object's state, usable for local reads and restores.
 pub struct CopyBuffer {
@@ -49,6 +189,7 @@ pub struct LogBuffer {
 }
 
 impl LogBuffer {
+    /// An empty log.
     pub fn new() -> Self {
         LogBuffer { entries: Vec::new() }
     }
@@ -60,10 +201,12 @@ impl LogBuffer {
         Value::Unit
     }
 
+    /// Number of recorded, unapplied writes.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is the log empty?
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -82,6 +225,39 @@ impl LogBuffer {
 mod tests {
     use super::*;
     use crate::object::{account::ops, Account, KvStore, QueueObject};
+
+    #[test]
+    fn arglist_stays_inline_up_to_two_args_and_spills_after() {
+        let empty = ArgList::new();
+        let one = ArgList::one(Value::Int(1));
+        let two = ArgList::from(vec![Value::Int(1), Value::Int(2)]);
+        let three = ArgList::from(vec![Value::Int(1), Value::Int(2), Value::Int(3)]);
+        assert!(matches!(empty, ArgList::Inline(0, _)));
+        assert!(matches!(one, ArgList::Inline(1, _)));
+        assert!(matches!(two, ArgList::Inline(2, _)));
+        assert!(matches!(three, ArgList::Heap(_)));
+        assert_eq!(empty.len(), 0);
+        assert!(empty.is_empty());
+        assert_eq!(three.len(), 3);
+    }
+
+    #[test]
+    fn arglist_slice_views_agree_across_representations() {
+        for n in 0..5usize {
+            let vals: Vec<Value> = (0..n as i64).map(Value::Int).collect();
+            let args = ArgList::from(vals.clone());
+            assert_eq!(args, vals, "arity {n}");
+            assert_eq!(args.as_slice(), &vals[..]);
+            assert_eq!(args.first(), vals.first());
+            assert_eq!(args.get(1), vals.get(1));
+            assert_eq!(args.iter().count(), n);
+            let collected: ArgList = vals.clone().into_iter().collect();
+            assert_eq!(collected, args);
+            if n > 0 {
+                assert_eq!(args[n - 1], vals[n - 1]);
+            }
+        }
+    }
 
     #[test]
     fn copy_buffer_reads_do_not_touch_live_object() {

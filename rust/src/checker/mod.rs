@@ -22,6 +22,7 @@ use std::sync::Mutex;
 pub struct OpRecord {
     /// Registry name of the object.
     pub object: String,
+    /// The invocation as issued.
     pub call: OpCall,
     /// The value the live run returned.
     pub result: Value,
@@ -32,6 +33,7 @@ pub struct OpRecord {
 pub struct TxRecord {
     /// Client-chosen tag (thread id, tx number…) for diagnostics.
     pub tag: String,
+    /// The operations in program order, with observed results.
     pub ops: Vec<OpRecord>,
     /// Global commit-completion sequence number.
     pub commit_seq: u64,
@@ -45,6 +47,7 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
@@ -71,15 +74,34 @@ impl Recorder {
 /// A serializability violation found by replay.
 #[derive(Debug, Clone, PartialEq)]
 pub enum CheckError {
+    /// An operation's live result differs from the serial replay — no
+    /// serial order matching commit-completion order explains the run.
     Divergence {
+        /// Client-chosen transaction tag.
         tag: String,
+        /// Index of the diverging operation within the transaction.
         index: usize,
+        /// Registry name of the object.
         object: String,
+        /// What the live run observed.
         live: String,
+        /// What the serial replay produced.
         replayed: String,
     },
-    UnknownObject { tag: String, object: String },
-    ReplayFailed { object: String, error: String },
+    /// A record references an object the checker was not given.
+    UnknownObject {
+        /// Client-chosen transaction tag.
+        tag: String,
+        /// The unknown object's name.
+        object: String,
+    },
+    /// Replaying a recorded call failed outright.
+    ReplayFailed {
+        /// Registry name of the object.
+        object: String,
+        /// The object-level error.
+        error: String,
+    },
 }
 
 impl std::fmt::Display for CheckError {

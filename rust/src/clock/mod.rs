@@ -88,6 +88,7 @@ impl Default for RealClock {
 }
 
 impl RealClock {
+    /// A clock whose epoch is now.
     pub fn new() -> Self {
         RealClock { epoch: Instant::now() }
     }
@@ -136,10 +137,12 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A clock at simulated time zero.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// [`new`](Self::new), `Arc`-wrapped for sharing.
     pub fn arc() -> Arc<Self> {
         Arc::new(Self::new())
     }

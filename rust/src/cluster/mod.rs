@@ -24,7 +24,7 @@
 
 pub mod registry;
 
-pub use registry::Registry;
+pub use registry::{NameId, Registry};
 
 use crate::clock::{Clock, RealClock};
 use std::fmt;
@@ -49,11 +49,14 @@ impl fmt::Display for NodeId {
 /// acquisition — it is what rules out deadlock during transaction start.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Oid {
+    /// Home node hosting the object.
     pub node: NodeId,
+    /// Index of the object within its home node's slot table.
     pub index: u32,
 }
 
 impl Oid {
+    /// Identifier of object `index` on `node`.
     pub fn new(node: NodeId, index: u32) -> Self {
         Oid { node, index }
     }
@@ -98,13 +101,16 @@ impl NetworkModel {
 /// Message/byte counters, kept per cluster and readable by benchmarks.
 #[derive(Debug, Default)]
 pub struct NetStats {
+    /// Cross-node messages sent (requests and responses both count).
     pub messages: AtomicU64,
+    /// Total payload bytes crossing the simulated network.
     pub bytes: AtomicU64,
     /// Remote calls that stayed on-node (proxy co-located with object).
     pub local_calls: AtomicU64,
 }
 
 impl NetStats {
+    /// `(messages, bytes, local_calls)` at this instant.
     pub fn snapshot(&self) -> (u64, u64, u64) {
         (
             self.messages.load(Ordering::Relaxed),
@@ -121,7 +127,9 @@ pub struct Cluster {
     nodes: u16,
     net: NetworkModel,
     clock: Arc<dyn Clock>,
+    /// Global name → [`Oid`] directory (the RMI-registry analogue).
     pub registry: Registry,
+    /// Message/byte accounting for the simulated interconnect.
     pub stats: NetStats,
 }
 
@@ -137,6 +145,7 @@ impl Cluster {
         Self::with_clock(nodes, net, Arc::new(crate::clock::VirtualClock::new()))
     }
 
+    /// Cluster on an explicit time source (shared with other components).
     pub fn with_clock(nodes: u16, net: NetworkModel, clock: Arc<dyn Clock>) -> Self {
         assert!(nodes > 0, "cluster needs at least one node");
         Cluster {
@@ -153,14 +162,17 @@ impl Cluster {
         &self.clock
     }
 
+    /// Number of simulated nodes.
     pub fn node_count(&self) -> u16 {
         self.nodes
     }
 
+    /// Every node id, `n0..n{count-1}`.
     pub fn node_ids(&self) -> impl Iterator<Item = NodeId> {
         (0..self.nodes).map(NodeId)
     }
 
+    /// The interconnect's latency/bandwidth model.
     pub fn network(&self) -> NetworkModel {
         self.net
     }

@@ -1,16 +1,89 @@
-//! Name registry — the RMI-registry analogue.
+//! Name registry — the RMI-registry analogue, with name interning.
 //!
 //! Transactions locate shared objects by global name before declaring them
 //! in the preamble (paper Fig 9: `registry.locate("A")`). The registry maps
 //! names to [`Oid`]s; the hosting framework maps `Oid`s to live objects.
+//!
+//! # Interning
+//!
+//! Name lookup sits on the per-transaction hot path: every attempt of every
+//! transaction resolves its whole access set. The original implementation
+//! was a single `RwLock<HashMap<String, Oid>>`, which cost one `String`
+//! hash plus one shared-lock acquisition per declaration per attempt, on
+//! one global lock. This version splits the work:
+//!
+//!  * **Interning** (`intern` / `lookup`) maps a name to a small dense
+//!    [`NameId`] once — typically at [`crate::api::TxBuilder`] time or when
+//!    a workload pre-generates its object names. The name→id map is
+//!    **striped** over [`STRIPES`] independent `RwLock`ed shards keyed by
+//!    name hash, so concurrent transactions resolving different names do
+//!    not contend on one lock.
+//!  * **Resolution** (`resolve`) maps a [`NameId`] to the currently bound
+//!    [`Oid`] without touching any string: an index into an append-only
+//!    entry table plus one atomic load. Rebinding (`bind`) and unbinding
+//!    mutate the entry's atomic in place, so `resolve` stays coherent with
+//!    RMI `rebind` semantics.
+//!
+//! `locate(name)` is still available as the compatibility path (one stripe
+//! read + one resolve); frameworks that thread [`NameId`]s through their
+//! preambles never hash a string after interning.
 
 use super::{NodeId, Oid};
 use std::collections::HashMap;
-use std::sync::RwLock;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
-/// Thread-safe name → object-id directory.
+/// Number of independent name→id shards. A small power of two: enough to
+/// keep a few dozen client threads off each other's locks, small enough
+/// that a full-registry snapshot stays cheap.
+pub const STRIPES: usize = 16;
+
+/// Dense identifier of an interned object name.
+///
+/// Invariant: a `NameId` returned by [`Registry::intern`] or
+/// [`Registry::lookup`] stays valid for the registry's lifetime — entries
+/// are append-only, and [`Registry::unbind`] only clears the binding, never
+/// the name. Resolving an id whose name is currently unbound yields `None`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NameId(pub u32);
+
+/// Packed binding state: bit 63 = bound flag, bits 32..48 = node, bits
+/// 0..32 = index. The all-zeros value means "interned but not bound".
+const BOUND: u64 = 1 << 63;
+
+fn pack(oid: Oid) -> u64 {
+    BOUND | ((oid.node.0 as u64) << 32) | oid.index as u64
+}
+
+fn unpack(raw: u64) -> Option<Oid> {
+    if raw & BOUND == 0 {
+        return None;
+    }
+    Some(Oid { node: NodeId(((raw >> 32) & 0xFFFF) as u16), index: raw as u32 })
+}
+
+/// FNV-1a — stable, dependency-free stripe selector.
+fn fnv1a(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One interned name and its (atomic) current binding.
+struct NameEntry {
+    name: Arc<str>,
+    oid: AtomicU64,
+}
+
+/// Thread-safe name → object-id directory with interning.
 pub struct Registry {
-    entries: RwLock<HashMap<String, Oid>>,
+    /// name → id, sharded by name hash.
+    stripes: Vec<RwLock<HashMap<Arc<str>, NameId>>>,
+    /// id → entry; append-only (push under the write lock, never removed).
+    entries: RwLock<Vec<Arc<NameEntry>>>,
 }
 
 impl Default for Registry {
@@ -20,44 +93,141 @@ impl Default for Registry {
 }
 
 impl Registry {
+    /// An empty registry.
     pub fn new() -> Self {
-        Registry { entries: RwLock::new(HashMap::new()) }
+        Registry {
+            stripes: (0..STRIPES).map(|_| RwLock::new(HashMap::new())).collect(),
+            entries: RwLock::new(Vec::new()),
+        }
     }
 
-    /// Bind a name to an object id. Rebinding an existing name replaces
-    /// the entry (RMI `Naming.rebind` semantics).
-    pub fn bind(&self, name: impl Into<String>, oid: Oid) {
-        self.entries.write().unwrap().insert(name.into(), oid);
+    fn stripe(&self, name: &str) -> &RwLock<HashMap<Arc<str>, NameId>> {
+        &self.stripes[(fnv1a(name) as usize) & (STRIPES - 1)]
     }
 
-    /// Look up a name (RMI `Naming.lookup` / the paper's `locate`).
+    /// Intern `name`, returning its dense id. Idempotent; never unbinds or
+    /// rebinds. The common (already-interned) path is one shared-lock read
+    /// on the name's stripe.
+    pub fn intern(&self, name: &str) -> NameId {
+        if let Some(&id) = self.stripe(name).read().unwrap().get(name) {
+            return id;
+        }
+        // Slow path: allocate the entry, then publish the mapping. Take the
+        // stripe lock first and re-check, so a racing intern of the same
+        // name yields one id.
+        let mut stripe = self.stripe(name).write().unwrap();
+        if let Some(&id) = stripe.get(name) {
+            return id;
+        }
+        let shared: Arc<str> = Arc::from(name);
+        let mut entries = self.entries.write().unwrap();
+        let id = NameId(u32::try_from(entries.len()).expect("too many interned names"));
+        entries.push(Arc::new(NameEntry { name: Arc::clone(&shared), oid: AtomicU64::new(0) }));
+        drop(entries);
+        stripe.insert(shared, id);
+        id
+    }
+
+    /// Id of an already-interned name, without interning it. The
+    /// read-mostly companion of [`Registry::intern`] for callers that must
+    /// not grow the table on behalf of unknown names.
+    pub fn lookup(&self, name: &str) -> Option<NameId> {
+        self.stripe(name).read().unwrap().get(name).copied()
+    }
+
+    /// Current binding of an interned name — the hot-path lookup: an index
+    /// into the entry table plus one atomic load, no string hashing.
+    pub fn resolve(&self, id: NameId) -> Option<Oid> {
+        let entries = self.entries.read().unwrap();
+        entries.get(id.0 as usize).and_then(|e| unpack(e.oid.load(Ordering::Acquire)))
+    }
+
+    /// The interned name behind an id (diagnostics).
+    pub fn name_of(&self, id: NameId) -> Option<Arc<str>> {
+        let entries = self.entries.read().unwrap();
+        entries.get(id.0 as usize).map(|e| Arc::clone(&e.name))
+    }
+
+    /// Bind a name to an object id, interning it as needed. Rebinding an
+    /// existing name replaces the entry (RMI `Naming.rebind` semantics);
+    /// the name's [`NameId`] is stable across rebinds.
+    pub fn bind(&self, name: impl AsRef<str>, oid: Oid) {
+        let id = self.intern(name.as_ref());
+        let entries = self.entries.read().unwrap();
+        entries[id.0 as usize].oid.store(pack(oid), Ordering::Release);
+    }
+
+    /// Look up a name (RMI `Naming.lookup` / the paper's `locate`). The
+    /// compatibility path: equivalent to `lookup` + `resolve`.
     pub fn locate(&self, name: &str) -> Option<Oid> {
-        self.entries.read().unwrap().get(name).copied()
+        self.lookup(name).and_then(|id| self.resolve(id))
     }
 
-    /// Remove a binding (object decommissioned / crash-stop).
+    /// Remove a binding (object decommissioned / crash-stop). The name
+    /// stays interned — its id remains valid and resolves to `None`.
     pub fn unbind(&self, name: &str) -> Option<Oid> {
-        self.entries.write().unwrap().remove(name)
+        let id = self.lookup(name)?;
+        let entries = self.entries.read().unwrap();
+        unpack(entries[id.0 as usize].oid.swap(0, Ordering::AcqRel))
     }
 
-    /// All registered names on a given node (diagnostics).
+    /// All currently bound names on a given node (diagnostics).
+    ///
+    /// Snapshots the entry table under the read lock (cheap `Arc` clones),
+    /// then filters, extracts and sorts entirely outside it, so a large
+    /// registry never holds up concurrent binds while sorting.
     pub fn names_on(&self, node: NodeId) -> Vec<String> {
-        let map = self.entries.read().unwrap();
-        let mut names: Vec<String> = map
+        let snapshot: Vec<Arc<NameEntry>> = self.entries.read().unwrap().clone();
+        let mut names: Vec<String> = snapshot
             .iter()
-            .filter(|(_, oid)| oid.node == node)
-            .map(|(k, _)| k.clone())
+            .filter(|e| unpack(e.oid.load(Ordering::Acquire)).is_some_and(|o| o.node == node))
+            .map(|e| e.name.to_string())
             .collect();
         names.sort();
         names
     }
 
+    /// Number of currently bound names (unbound interned names excluded).
     pub fn len(&self) -> usize {
-        self.entries.read().unwrap().len()
+        let entries = self.entries.read().unwrap();
+        entries.iter().filter(|e| e.oid.load(Ordering::Acquire) & BOUND != 0).count()
     }
 
+    /// Is no name currently bound?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+/// The pre-interning registry — one coarse `RwLock<HashMap<String, Oid>>`
+/// around everything — retained verbatim as the micro-benchmark comparison
+/// baseline. `benches/micro.rs` measures `CoarseRegistry::locate` against
+/// [`Registry::resolve`] and records the ratio in `BENCH_micro.json`; it is
+/// not used by any framework.
+pub struct CoarseRegistry {
+    entries: RwLock<HashMap<String, Oid>>,
+}
+
+impl Default for CoarseRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CoarseRegistry {
+    /// An empty coarse registry.
+    pub fn new() -> Self {
+        CoarseRegistry { entries: RwLock::new(HashMap::new()) }
+    }
+
+    /// Bind a name (rebind replaces).
+    pub fn bind(&self, name: impl Into<String>, oid: Oid) {
+        self.entries.write().unwrap().insert(name.into(), oid);
+    }
+
+    /// Stringly-keyed lookup: hashes the name under the global read lock.
+    pub fn locate(&self, name: &str) -> Option<Oid> {
+        self.entries.read().unwrap().get(name).copied()
     }
 }
 
@@ -73,15 +243,23 @@ mod tests {
         assert_eq!(r.locate("A"), Some(oid));
         assert_eq!(r.unbind("A"), Some(oid));
         assert_eq!(r.locate("A"), None);
+        // The interned id survives the unbind and resolves to nothing.
+        let id = r.lookup("A").unwrap();
+        assert_eq!(r.resolve(id), None);
+        assert_eq!(r.name_of(id).as_deref(), Some("A"));
     }
 
     #[test]
     fn rebind_replaces() {
         let r = Registry::new();
         r.bind("A", Oid::new(NodeId(0), 0));
+        let id = r.lookup("A").unwrap();
         r.bind("A", Oid::new(NodeId(1), 1));
         assert_eq!(r.locate("A"), Some(Oid::new(NodeId(1), 1)));
         assert_eq!(r.len(), 1);
+        // Stable id across rebind, resolving to the new binding.
+        assert_eq!(r.lookup("A"), Some(id));
+        assert_eq!(r.resolve(id), Some(Oid::new(NodeId(1), 1)));
     }
 
     #[test]
@@ -92,5 +270,89 @@ mod tests {
         r.bind("a1", Oid::new(NodeId(1), 0));
         assert_eq!(r.names_on(NodeId(0)), vec!["a0".to_string(), "b0".to_string()]);
         assert_eq!(r.names_on(NodeId(1)), vec!["a1".to_string()]);
+    }
+
+    #[test]
+    fn interning_is_idempotent_and_dense() {
+        let r = Registry::new();
+        let a = r.intern("A");
+        let b = r.intern("B");
+        assert_ne!(a, b);
+        assert_eq!(r.intern("A"), a);
+        assert_eq!(r.lookup("A"), Some(a));
+        assert_eq!(r.lookup("missing"), None);
+        // Interned-but-unbound resolves to None; len counts bindings only.
+        assert_eq!(r.resolve(a), None);
+        assert_eq!(r.len(), 0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn interned_and_stringly_lookups_resolve_identically() {
+        // Regression guard for the hot-path rework: for every bound name,
+        // `resolve(intern(name))` must agree with `locate(name)` and with
+        // the coarse baseline registry.
+        let r = Registry::new();
+        let coarse = CoarseRegistry::new();
+        let mut oids = Vec::new();
+        for i in 0..64u32 {
+            let name = format!("obj-{}-{}", i % 7, i);
+            let oid = Oid::new(NodeId((i % 5) as u16), i);
+            r.bind(&name, oid);
+            coarse.bind(name.clone(), oid);
+            oids.push((name, oid));
+        }
+        for (name, oid) in &oids {
+            let id = r.intern(name);
+            assert_eq!(r.resolve(id), Some(*oid), "{name}");
+            assert_eq!(r.locate(name), Some(*oid), "{name}");
+            assert_eq!(coarse.locate(name), Some(*oid), "{name}");
+        }
+    }
+
+    #[test]
+    fn concurrent_bind_and_resolve() {
+        use std::sync::Arc;
+        let r = Arc::new(Registry::new());
+        let names: Arc<Vec<String>> = Arc::new((0..128).map(|i| format!("c-{i}")).collect());
+        // Half the threads bind/rebind, half intern+resolve concurrently;
+        // every id handed out must stay valid and every resolved Oid must
+        // be one that some bind actually wrote.
+        let mut handles = Vec::new();
+        for t in 0..4u16 {
+            let r = Arc::clone(&r);
+            let names = Arc::clone(&names);
+            handles.push(std::thread::spawn(move || {
+                for round in 0..50u32 {
+                    for (i, name) in names.iter().enumerate() {
+                        r.bind(name, Oid::new(NodeId(t), i as u32 + round));
+                    }
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let r = Arc::clone(&r);
+            let names = Arc::clone(&names);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    for name in names.iter() {
+                        let id = r.intern(name);
+                        if let Some(oid) = r.resolve(id) {
+                            assert!(oid.node.0 < 4, "resolved an Oid nobody bound");
+                        }
+                        assert_eq!(r.lookup(name), Some(id), "interned id must be stable");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Quiescent state: every name bound, ids dense and resolvable.
+        assert_eq!(r.len(), names.len());
+        for name in names.iter() {
+            let id = r.lookup(name).unwrap();
+            assert_eq!(r.resolve(id), r.locate(name));
+        }
     }
 }

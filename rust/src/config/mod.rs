@@ -31,9 +31,13 @@ pub struct KvConfig {
 /// Configuration/argument errors.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ConfigError {
+    /// Line did not parse as `key = value` (line number, offending text).
     Syntax(usize, String),
+    /// A value failed its typed conversion (key, reason).
     BadValue(String, String),
+    /// `framework =` named no known framework.
     UnknownFramework(String),
+    /// File could not be read.
     Io(String),
 }
 
@@ -69,19 +73,23 @@ impl KvConfig {
         Ok(KvConfig { entries })
     }
 
+    /// Read and [`parse`](Self::parse) a file.
     pub fn load(path: &str) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path).map_err(|e| ConfigError::Io(e.to_string()))?;
         Self::parse(&text)
     }
 
+    /// Raw string value of `key`, if set.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.entries.get(key).map(String::as_str)
     }
 
+    /// Set (or override) `key`.
     pub fn set(&mut self, key: &str, value: impl ToString) {
         self.entries.insert(key.to_string(), value.to_string());
     }
 
+    /// All set keys, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(String::as_str)
     }
@@ -167,11 +175,14 @@ impl KvConfig {
 /// Minimal CLI parser: positionals + `--key value` / `--flag` options.
 #[derive(Debug, Clone, Default)]
 pub struct CliArgs {
+    /// Arguments without a `--` prefix, in order.
     pub positional: Vec<String>,
+    /// `--key value` pairs; bare `--flag` maps to `"true"`.
     pub options: BTreeMap<String, String>,
 }
 
 impl CliArgs {
+    /// Parse an argument iterator (pass `std::env::args().skip(1)`).
     pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
         let mut out = CliArgs::default();
         let mut it = args.into_iter().peekable();
@@ -193,10 +204,12 @@ impl CliArgs {
         out
     }
 
+    /// Value of `--key value`, if given.
     pub fn option(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(String::as_str)
     }
 
+    /// Was bare `--key` given?
     pub fn flag(&self, key: &str) -> bool {
         self.options.get(key).map(String::as_str) == Some("true")
     }

@@ -13,6 +13,7 @@
 //! the executor re-scans its queue on every poke.
 
 use crate::clock::{wait_deadline, Clock};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -31,6 +32,7 @@ impl Default for Signal {
 }
 
 impl Signal {
+    /// A fresh signal at generation 0.
     pub fn new() -> Self {
         Signal { gen: Mutex::new(0), cond: Condvar::new() }
     }
@@ -42,6 +44,7 @@ impl Signal {
         self.cond.notify_all();
     }
 
+    /// Current generation (monotonically advanced by [`Signal::poke`]).
     pub fn generation(&self) -> u64 {
         *self.gen.lock().unwrap()
     }
@@ -63,7 +66,13 @@ impl Signal {
 }
 
 /// Completion flag for a scheduled task.
+///
+/// The `flag` duplicates `done` so [`TaskHandle::is_done`] — polled from
+/// executor gate conditions and per-object program-order chains, i.e. the
+/// per-operation hot path — is one atomic load instead of a mutex
+/// acquisition. `done` + the condvar remain the blocking-join path.
 struct TaskDone {
+    flag: AtomicBool,
     done: Mutex<bool>,
     cond: Condvar,
 }
@@ -76,9 +85,16 @@ pub struct TaskHandle {
 }
 
 impl TaskHandle {
-    fn new() -> Self {
+    /// A not-yet-completed handle. Crate-visible so submitters can create
+    /// the handle *before* building the action closure that completes it
+    /// (see [`Executor::submit_with_handle`]).
+    pub(crate) fn new() -> Self {
         TaskHandle {
-            inner: Arc::new(TaskDone { done: Mutex::new(false), cond: Condvar::new() }),
+            inner: Arc::new(TaskDone {
+                flag: AtomicBool::new(false),
+                done: Mutex::new(false),
+                cond: Condvar::new(),
+            }),
         }
     }
 
@@ -93,11 +109,16 @@ impl TaskHandle {
     fn complete(&self) {
         let mut d = self.inner.done.lock().unwrap();
         *d = true;
+        // Publish under the mutex, before notify: a joiner that saw
+        // `flag == false` is either inside the condvar wait (woken below)
+        // or about to re-check `done` under the lock.
+        self.inner.flag.store(true, Ordering::Release);
         self.inner.cond.notify_all();
     }
 
+    /// Has the task run? Lock-free; `true` is final (tasks never un-complete).
     pub fn is_done(&self) -> bool {
-        *self.inner.done.lock().unwrap()
+        self.inner.flag.load(Ordering::Acquire)
     }
 
     /// Block until the task has run. `deadline` is absolute in `clock`
@@ -167,17 +188,30 @@ impl Executor {
         action: impl FnOnce() + Send + 'static,
     ) -> TaskHandle {
         let handle = TaskHandle::new();
+        self.submit_with_handle(handle.clone(), cond, action);
+        handle
+    }
+
+    /// [`Executor::submit`] with a caller-created [`TaskHandle`]. Lets the
+    /// submitter embed the handle in the state the action closure captures
+    /// (one shared allocation instead of two) — the handle completes when
+    /// the action has run, exactly as with `submit`.
+    pub(crate) fn submit_with_handle(
+        &self,
+        handle: TaskHandle,
+        cond: impl Fn() -> bool + Send + 'static,
+        action: impl FnOnce() + Send + 'static,
+    ) {
         {
             let mut st = self.state.lock().unwrap();
             assert!(!st.shutdown, "submit after shutdown");
             st.queue.push(Task {
                 cond: Box::new(cond),
                 action: Some(Box::new(action)),
-                handle: handle.clone(),
+                handle,
             });
         }
         self.signal.poke(); // check immediately-runnable tasks
-        handle
     }
 
     /// Number of queued (not yet run) tasks.

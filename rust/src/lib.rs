@@ -30,10 +30,18 @@
 //! * [`workload`] — distributed Eigenbench (§4.2);
 //! * [`metrics`], [`config`], [`checker`], [`faults`] — measurement,
 //!   scenario configuration, safety checking, fault injection;
+//! * [`bench`] — machine-readable `BENCH_*.json` reports and the CI
+//!   regression gate (see `docs/BENCHMARKS.md`);
 //! * [`runtime`] — PJRT/XLA loader executing the AOT-compiled Pallas
 //!   kernel used by `object::ComputeObject` (CF compute delegation).
+//!
+//! A map from paper concepts to these modules, with the request lifecycle,
+//! lives in `docs/ARCHITECTURE.md`.
+
+#![warn(missing_docs)]
 
 pub mod api;
+pub mod bench;
 pub mod checker;
 pub mod clock;
 pub mod config;
@@ -56,5 +64,5 @@ pub use api::{
     AccessDecl, Dtm, ObjHandle, OpFuture, Suprema, TxBuilder, TxCtx, TxError, TxSpec, TxStats,
 };
 pub use clock::{Clock, RealClock, VirtualClock};
-pub use cluster::{Cluster, NetworkModel, NodeId, Oid};
+pub use cluster::{Cluster, NameId, NetworkModel, NodeId, Oid};
 pub use optsva::{AtomicRmi2, OptsvaConfig};

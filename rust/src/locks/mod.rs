@@ -65,11 +65,15 @@ pub struct LockSystem {
     discipline: Discipline,
     slots: Vec<RwLock<Vec<Arc<Slot>>>>,
     glock: DistRwLock,
+    /// Committed transactions.
     pub commits: AtomicU64,
+    /// Programmatic aborts ([`crate::api::TxError::ManualAbort`]).
     pub manual_aborts: AtomicU64,
 }
 
 impl LockSystem {
+    /// A lock-based system over `cluster` with the given lock kind and
+    /// locking discipline.
     pub fn new(cluster: Arc<Cluster>, kind: LockKind, discipline: Discipline) -> Arc<Self> {
         let slots = cluster.node_ids().map(|_| RwLock::new(Vec::new())).collect();
         Arc::new(LockSystem {
@@ -83,6 +87,7 @@ impl LockSystem {
         })
     }
 
+    /// Host `object` on `node` under `name`.
     pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
         let mut slots = self.slots[node.0 as usize].write().unwrap();
         let oid = Oid::new(node, slots.len() as u32);
@@ -108,6 +113,7 @@ impl LockSystem {
         f(obj.as_ref())
     }
 
+    /// The cluster this system runs on.
     pub fn cluster(&self) -> &Arc<Cluster> {
         &self.cluster
     }

@@ -19,7 +19,9 @@ use std::sync::{Condvar, Mutex};
 /// Shared (read) or exclusive (write) acquisition.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LockMode {
+    /// Shared acquisition: any number of concurrent readers.
     Shared,
+    /// Exclusive acquisition: one writer, no readers.
     Exclusive,
 }
 
@@ -44,6 +46,7 @@ impl Default for DistRwLock {
 }
 
 impl DistRwLock {
+    /// An unlocked lock.
     pub fn new() -> Self {
         DistRwLock { state: Mutex::new(State::default()), cond: Condvar::new() }
     }

@@ -8,9 +8,13 @@
 //! ```
 //!
 //! `eigenbench` runs one scenario (file options overridden by CLI flags);
-//! `sweep` regenerates a paper figure (tables on stdout, raw CSV under
-//! `target/bench-results/`); `demo` runs the Fig 9 bank transfer.
+//! `sweep` regenerates a paper figure (tables on stdout, raw CSV and
+//! `BENCH_*.json` under `target/bench-results/`); `demo` runs the Fig 9
+//! bank transfer; `bench-gate` compares a fresh `BENCH_*.json` against a
+//! committed baseline and exits non-zero on regression (the CI gate —
+//! see `docs/BENCHMARKS.md`).
 
+use atomic_rmi2::bench::{gate, BenchReport};
 use atomic_rmi2::config::{CliArgs, KvConfig};
 use atomic_rmi2::metrics::fmt_throughput;
 use atomic_rmi2::object::{Account, AccountRef};
@@ -28,8 +32,12 @@ USAGE:
               [--hot_ops H] [--mild_ops M] [--txns_per_client T]
               [--op_delay_us U] [--irrevocable true] [--seed S]
   atomic-rmi2 sweep fig10|fig11|fig12|fig13|all [--quick]
+  atomic-rmi2 bench-gate FRESH.json BASELINE.json [--tolerance 0.20]
   atomic-rmi2 demo
   atomic-rmi2 list-frameworks
+
+Set ARMI2_BENCH_GATE_SKIP=1 to make bench-gate report and exit 0 even on
+regression (escape hatch for known-noisy runners).
 ";
 
 fn main() {
@@ -37,6 +45,7 @@ fn main() {
     match args.positional.first().map(String::as_str) {
         Some("eigenbench") => eigenbench(&args),
         Some("sweep") => sweep(&args),
+        Some("bench-gate") => bench_gate(&args),
         Some("demo") => demo(),
         Some("list-frameworks") => {
             for k in ALL_FRAMEWORKS {
@@ -100,26 +109,26 @@ fn sweep(args: &CliArgs) {
                 for t in &tables {
                     println!("{}", t.render());
                 }
-                report_csv("fig10", &results);
+                report_results("fig10", scale, &results);
             }
             "fig11" => {
                 let (tables, results) = sweeps::fig11(scale);
                 for t in &tables {
                     println!("{}", t.render());
                 }
-                report_csv("fig11", &results);
+                report_results("fig11", scale, &results);
             }
             "fig12" => {
                 let (tables, results) = sweeps::fig12(scale);
                 for t in &tables {
                     println!("{}", t.render());
                 }
-                report_csv("fig12", &results);
+                report_results("fig12", scale, &results);
             }
             "fig13" => {
                 let (table, results) = sweeps::fig13(scale);
                 println!("{}", table.render());
-                report_csv("fig13", &results);
+                report_results("fig13", scale, &results);
             }
             other => {
                 eprintln!("unknown figure {other:?}; use fig10|fig11|fig12|fig13|all");
@@ -136,10 +145,73 @@ fn sweep(args: &CliArgs) {
     }
 }
 
-fn report_csv(name: &str, results: &[atomic_rmi2::workload::EigenbenchResult]) {
+fn report_results(name: &str, scale: Scale, results: &[atomic_rmi2::workload::EigenbenchResult]) {
     match sweeps::write_results_csv(name, results) {
         Ok(path) => eprintln!("raw results: {path}"),
         Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    match sweeps::write_results_json(name, scale, results) {
+        Ok(path) => eprintln!("report: {path}"),
+        Err(e) => eprintln!("json write failed: {e}"),
+    }
+}
+
+fn load_report(path: &str) -> BenchReport {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench-gate: cannot read {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    match BenchReport::parse(&text) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-gate: cannot parse {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn bench_gate(args: &CliArgs) {
+    let (Some(fresh_path), Some(base_path)) = (args.positional.get(1), args.positional.get(2))
+    else {
+        eprintln!("usage: atomic-rmi2 bench-gate FRESH.json BASELINE.json [--tolerance 0.20]");
+        std::process::exit(2);
+    };
+    let tolerance = match args.option("tolerance") {
+        None => 0.20,
+        Some(t) => match t.parse::<f64>() {
+            Ok(v) if v >= 0.0 => v,
+            _ => {
+                eprintln!("bench-gate: --tolerance must be a non-negative number, got {t:?}");
+                std::process::exit(2);
+            }
+        },
+    };
+    let fresh = load_report(fresh_path);
+    let baseline = load_report(base_path);
+    let outcome = gate(&fresh, &baseline, tolerance);
+    if let Some(reason) = &outcome.skipped {
+        println!("bench-gate: SKIPPED — {reason}");
+        return;
+    }
+    println!(
+        "bench-gate: compared {} metric(s) of {:?} against {base_path} (tolerance {:.0}%)",
+        outcome.compared,
+        fresh.bench,
+        tolerance * 100.0,
+    );
+    for f in &outcome.failures {
+        println!("  REGRESSION: {f}");
+    }
+    if outcome.passed() {
+        println!("bench-gate: PASS");
+    } else if std::env::var_os("ARMI2_BENCH_GATE_SKIP").is_some_and(|v| v == "1") {
+        println!("bench-gate: FAIL, ignored (ARMI2_BENCH_GATE_SKIP=1)");
+    } else {
+        println!("bench-gate: FAIL");
+        std::process::exit(1);
     }
 }
 

@@ -16,6 +16,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// An empty table with a title row and column headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Table {
             title: title.into(),
@@ -24,15 +25,18 @@ impl Table {
         }
     }
 
+    /// Append one row (cells must match the header count).
     pub fn add_row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Does the table have no data rows?
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Number of data rows.
     pub fn row_count(&self) -> usize {
         self.rows.len()
     }

@@ -25,10 +25,12 @@ const INTERFACE: &[MethodSpec] = &[
 ];
 
 impl Account {
+    /// An account holding `balance`.
     pub fn with_balance(balance: i64) -> Self {
         Account { balance }
     }
 
+    /// Direct (non-transactional) balance read — tests and diagnostics.
     pub fn balance(&self) -> i64 {
         self.balance
     }
@@ -98,15 +100,19 @@ impl SharedObject for Account {
 pub mod ops {
     use super::super::OpCall;
 
+    /// `balance()` — read.
     pub fn balance() -> OpCall {
         OpCall::nullary("balance")
     }
+    /// `deposit(amount)` — update.
     pub fn deposit(amount: i64) -> OpCall {
         OpCall::unary("deposit", amount)
     }
+    /// `withdraw(amount)` — update.
     pub fn withdraw(amount: i64) -> OpCall {
         OpCall::unary("withdraw", amount)
     }
+    /// `reset()` — pure write (log-buffer executable).
     pub fn reset() -> OpCall {
         OpCall::nullary("reset")
     }

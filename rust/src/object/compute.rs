@@ -21,6 +21,7 @@ pub trait ComputeBackend: Send + Sync {
     fn digest(&self, state: &[f32]) -> Result<f32, String>;
     /// State dimensionality the backend was compiled for.
     fn dim(&self) -> usize;
+    /// Backend identifier for diagnostics (`"spin"`, `"xla"`).
     fn name(&self) -> &'static str;
 }
 
@@ -33,6 +34,7 @@ pub struct SpinBackend {
 }
 
 impl SpinBackend {
+    /// A backend for `dim`-element states running `rounds` mixing rounds.
     pub fn new(dim: usize, rounds: usize) -> Self {
         let mut w = vec![0f32; dim * dim];
         for i in 0..dim {
@@ -97,16 +99,20 @@ const INTERFACE: &[MethodSpec] = &[
 ];
 
 impl ComputeObject {
+    /// An object with the all-0.5 initial state of the backend's dimension.
     pub fn new(backend: Arc<dyn ComputeBackend>) -> Self {
         let state = vec![0.5f32; backend.dim()];
         ComputeObject { state, backend }
     }
 
+    /// An object with an explicit initial state (must match the backend's
+    /// dimension).
     pub fn with_state(backend: Arc<dyn ComputeBackend>, state: Vec<f32>) -> Self {
         assert_eq!(state.len(), backend.dim());
         ComputeObject { state, backend }
     }
 
+    /// The current state vector (tests and checkers).
     pub fn state(&self) -> &[f32] {
         &self.state
     }

@@ -15,14 +15,17 @@ const INTERFACE: &[MethodSpec] = &[
 ];
 
 impl Counter {
+    /// A counter at zero.
     pub fn new() -> Self {
         Counter { count: 0 }
     }
 
+    /// A counter at `count`.
     pub fn starting_at(count: i64) -> Self {
         Counter { count }
     }
 
+    /// Direct (non-transactional) read — tests and diagnostics.
     pub fn count(&self) -> i64 {
         self.count
     }

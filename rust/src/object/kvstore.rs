@@ -25,20 +25,24 @@ const INTERFACE: &[MethodSpec] = &[
 ];
 
 impl KvStore {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// A store pre-loaded with `pairs`.
     pub fn from_pairs(pairs: &[(&str, i64)]) -> Self {
         KvStore {
             map: pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         }
     }
 
+    /// Number of keys.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Is the store empty?
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

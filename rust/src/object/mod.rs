@@ -23,6 +23,8 @@ pub mod refs;
 pub mod register;
 pub mod value;
 
+pub use crate::buffers::ArgList;
+
 pub use account::Account;
 pub use compute::{ComputeBackend, ComputeObject, SpinBackend};
 pub use counter::Counter;
@@ -37,8 +39,11 @@ use std::fmt;
 /// Operation classification (paper §2.5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Mode {
+    /// May read state and return a value, never modifies it.
     Read,
+    /// May modify state, never reads it (log-buffer executable, §2.6).
     Write,
+    /// May both read and modify state.
     Update,
 }
 
@@ -56,21 +61,27 @@ impl fmt::Display for Mode {
 /// object's interface (it is a property of the method, not of the call).
 #[derive(Debug, Clone)]
 pub struct OpCall {
+    /// Method name, matched against the interface's [`MethodSpec`]s.
     pub method: &'static str,
-    pub args: Vec<Value>,
+    /// Argument values — inline for arity ≤ 2, so cloning a call into a
+    /// log buffer or message allocates nothing (see [`ArgList`]).
+    pub args: ArgList,
 }
 
 impl OpCall {
-    pub fn new(method: &'static str, args: Vec<Value>) -> Self {
-        OpCall { method, args }
+    /// A call with an arbitrary argument list.
+    pub fn new(method: &'static str, args: impl Into<ArgList>) -> Self {
+        OpCall { method, args: args.into() }
     }
 
+    /// A call with no arguments.
     pub fn nullary(method: &'static str) -> Self {
-        OpCall { method, args: vec![] }
+        OpCall { method, args: ArgList::new() }
     }
 
+    /// A call with one argument.
     pub fn unary(method: &'static str, arg: impl Into<Value>) -> Self {
-        OpCall { method, args: vec![arg.into()] }
+        OpCall { method, args: ArgList::one(arg.into()) }
     }
 
     /// Approximate serialized size (for network cost accounting).
@@ -82,12 +93,26 @@ impl OpCall {
 /// Errors raised by object method execution.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ObjectError {
+    /// No method of this name in the object's interface.
     NoSuchMethod(String),
-    BadArgs { method: String, reason: String },
+    /// The arguments did not match what the method expects.
+    BadArgs {
+        /// The method that rejected its arguments.
+        method: String,
+        /// Why they were rejected.
+        reason: String,
+    },
     /// A dynamically typed [`Value`] held a different variant than the
     /// accessor expected (fallible `try_*` accessors / `TryFrom`).
-    TypeMismatch { expected: &'static str, got: String },
+    TypeMismatch {
+        /// The variant the accessor expected.
+        expected: &'static str,
+        /// The variant actually held.
+        got: String,
+    },
+    /// The object crash-stopped (§3.4 fault injection).
     Crashed,
+    /// An application-level error raised by the method body.
     App(String),
 }
 
@@ -112,7 +137,9 @@ impl std::error::Error for ObjectError {}
 /// A method descriptor in an object's interface.
 #[derive(Debug, Clone, Copy)]
 pub struct MethodSpec {
+    /// The method's name.
     pub name: &'static str,
+    /// The method's declared access mode.
     pub mode: Mode,
 }
 

@@ -17,18 +17,22 @@ const INTERFACE: &[MethodSpec] = &[
 ];
 
 impl QueueObject {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// A queue holding `items`, front first.
     pub fn from_items(items: &[i64]) -> Self {
         QueueObject { items: items.iter().copied().collect() }
     }
 
+    /// Number of queued items.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }

@@ -27,10 +27,13 @@ fn opt_int(v: Value) -> Result<Option<i64>, TxError> {
 pub struct AccountRef(pub ObjHandle);
 
 impl AccountRef {
+    /// Bind the facade to a declared handle, e.g.
+    /// `AccountRef::new(tx.accesses("A", Suprema::updates(2)))`.
     pub fn new(h: ObjHandle) -> Self {
         AccountRef(h)
     }
 
+    /// The underlying declared handle.
     pub fn handle(&self) -> ObjHandle {
         self.0
     }
@@ -55,14 +58,19 @@ impl AccountRef {
         t.call(self.0, OpCall::nullary("reset")).map(|_| ())
     }
 
+    /// Asynchronous [`balance`](Self::balance): returns a future; waiting
+    /// it yields the balance as a [`Value`].
     pub fn balance_async(&self, t: &mut dyn TxCtx) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::nullary("balance"))
     }
 
+    /// Asynchronous [`deposit`](Self::deposit); per-object program order
+    /// is preserved relative to other operations on this handle.
     pub fn deposit_async(&self, t: &mut dyn TxCtx, amount: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("deposit", amount))
     }
 
+    /// Asynchronous [`withdraw`](Self::withdraw).
     pub fn withdraw_async(&self, t: &mut dyn TxCtx, amount: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("withdraw", amount))
     }
@@ -79,6 +87,7 @@ impl From<ObjHandle> for AccountRef {
 pub struct CounterRef(pub ObjHandle);
 
 impl CounterRef {
+    /// Bind the facade to a declared handle.
     pub fn new(h: ObjHandle) -> Self {
         CounterRef(h)
     }
@@ -98,6 +107,7 @@ impl CounterRef {
         t.call(self.0, OpCall::nullary("zero")).map(|_| ())
     }
 
+    /// Asynchronous [`inc`](Self::inc); the future yields the new count.
     pub fn inc_async(&self, t: &mut dyn TxCtx, by: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("inc", by))
     }
@@ -114,6 +124,7 @@ impl From<ObjHandle> for CounterRef {
 pub struct RegisterRef(pub ObjHandle);
 
 impl RegisterRef {
+    /// Bind the facade to a declared handle.
     pub fn new(h: ObjHandle) -> Self {
         RegisterRef(h)
     }
@@ -133,14 +144,18 @@ impl RegisterRef {
         Ok(t.call(self.0, OpCall::unary("add", delta))?.try_int()?)
     }
 
+    /// Asynchronous [`get`](Self::get).
     pub fn get_async(&self, t: &mut dyn TxCtx) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::nullary("get"))
     }
 
+    /// Asynchronous [`set`](Self::set) — a pure write: the future is
+    /// satisfied from the log buffer with no synchronization (§2.6).
     pub fn set_async(&self, t: &mut dyn TxCtx, v: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("set", v))
     }
 
+    /// Asynchronous [`add`](Self::add); the future yields the new value.
     pub fn add_async(&self, t: &mut dyn TxCtx, delta: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("add", delta))
     }
@@ -157,6 +172,7 @@ impl From<ObjHandle> for RegisterRef {
 pub struct KvRef(pub ObjHandle);
 
 impl KvRef {
+    /// Bind the facade to a declared handle.
     pub fn new(h: ObjHandle) -> Self {
         KvRef(h)
     }
@@ -199,6 +215,8 @@ impl KvRef {
             .try_int()?)
     }
 
+    /// Asynchronous [`put`](Self::put) — a pure write, log-buffer
+    /// executable with no synchronization (§2.6).
     pub fn put_async(&self, t: &mut dyn TxCtx, key: &str, v: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::new("put", vec![Value::from(key), Value::from(v)]))
     }
@@ -215,6 +233,7 @@ impl From<ObjHandle> for KvRef {
 pub struct QueueRef(pub ObjHandle);
 
 impl QueueRef {
+    /// Bind the facade to a declared handle.
     pub fn new(h: ObjHandle) -> Self {
         QueueRef(h)
     }
@@ -239,6 +258,8 @@ impl QueueRef {
         opt_int(t.call(self.0, OpCall::nullary("pop"))?)
     }
 
+    /// Asynchronous [`push`](Self::push) — a pure write, log-buffer
+    /// executable with no synchronization (§2.6).
     pub fn push_async(&self, t: &mut dyn TxCtx, v: i64) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("push", v))
     }
@@ -255,6 +276,7 @@ impl From<ObjHandle> for QueueRef {
 pub struct ComputeRef(pub ObjHandle);
 
 impl ComputeRef {
+    /// Bind the facade to a declared handle.
     pub fn new(h: ObjHandle) -> Self {
         ComputeRef(h)
     }
@@ -279,6 +301,8 @@ impl ComputeRef {
         t.call(self.0, OpCall::unary("mix", params)).map(|_| ())
     }
 
+    /// Asynchronous [`mix`](Self::mix): the kernel still runs on the
+    /// object's home node; only the caller stops blocking on it.
     pub fn mix_async(&self, t: &mut dyn TxCtx, params: Vec<f32>) -> Result<OpFuture, TxError> {
         t.submit(self.0, OpCall::unary("mix", params))
     }

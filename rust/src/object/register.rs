@@ -30,6 +30,7 @@ const INTERFACE: &[MethodSpec] = &[
 ];
 
 impl RegisterObject {
+    /// A zero-latency cell holding `value`.
     pub fn new(value: i64) -> Self {
         Self::with_delay(value, Duration::ZERO)
     }
@@ -46,6 +47,7 @@ impl RegisterObject {
         RegisterObject { value, op_delay: delay, clock }
     }
 
+    /// Direct (non-transactional) read — tests and diagnostics.
     pub fn value(&self) -> i64 {
         self.value
     }

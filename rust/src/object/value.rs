@@ -10,10 +10,15 @@ use std::fmt;
 /// A dynamically typed argument/result value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// No value (pure-write results).
     Unit,
+    /// A boolean.
     Bool(bool),
+    /// A 64-bit integer.
     Int(i64),
+    /// A 64-bit float.
     Float(f64),
+    /// A string.
     Str(String),
     /// Dense float payload, used by `ComputeObject` operations.
     Floats(Vec<f32>),

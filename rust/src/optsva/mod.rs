@@ -21,7 +21,7 @@ pub use proxy::{Proxy, ProxyConfig};
 pub use transaction::Transaction;
 
 use crate::api::{run_with_retries, Dtm, TxCtx, TxError, TxSpec, TxStats};
-use crate::cluster::{Cluster, NodeId, Oid};
+use crate::cluster::{Cluster, NodeId, Oid, Registry};
 use crate::executor::Executor;
 use crate::object::SharedObject;
 use crate::versioning::ObjectCc;
@@ -31,12 +31,15 @@ use std::time::Duration;
 
 /// A hosted shared object and its concurrency-control block.
 pub struct ObjectSlot {
+    /// Identity of the hosted object (home node + slot index).
     pub oid: Oid,
+    /// Supremum-versioning counters guarding this object (§2.3).
     pub cc: ObjectCc,
     /// The object's interface, cached at hosting time so method-mode
     /// lookups never contend on the object lock (operation bodies can
     /// hold it for milliseconds).
     pub interface: &'static [crate::object::MethodSpec],
+    /// The live object. Locked for the duration of each method body.
     pub object: Mutex<Box<dyn SharedObject>>,
     /// Crash-stop flag (§3.4): once set, every access raises
     /// `TxError::ObjectCrashed`.
@@ -62,6 +65,7 @@ impl ObjectSlot {
         })
     }
 
+    /// Fail with [`TxError::ObjectCrashed`] if this object has crash-stopped.
     pub fn check_alive(&self) -> Result<(), TxError> {
         if self.crashed.load(Ordering::Acquire) {
             Err(TxError::ObjectCrashed(self.oid))
@@ -79,10 +83,15 @@ struct NodeState {
 /// System-wide counters (benchmark reporting; Fig 13's abort rows).
 #[derive(Default)]
 pub struct SysStats {
+    /// Successfully committed transactions.
     pub commits: AtomicU64,
+    /// Programmatic aborts requested by transaction bodies.
     pub manual_aborts: AtomicU64,
+    /// Aborts forced by cascades, invalidation or failure suspicion.
     pub forced_aborts: AtomicU64,
+    /// Objects released before their transaction terminated (§2.8).
     pub early_releases: AtomicU64,
+    /// Buffering / release tasks handed to node executors (§3.3).
     pub async_tasks: AtomicU64,
 }
 
@@ -108,15 +117,18 @@ impl Default for OptsvaConfig {
 pub struct AtomicRmi2 {
     cluster: Arc<Cluster>,
     nodes: Vec<NodeState>,
+    /// System-wide commit/abort/release counters.
     pub stats: Arc<SysStats>,
     config: OptsvaConfig,
 }
 
 impl AtomicRmi2 {
+    /// Stand up the system on `cluster` with the default configuration.
     pub fn new(cluster: Arc<Cluster>) -> Arc<Self> {
         Self::with_config(cluster, OptsvaConfig::default())
     }
 
+    /// Stand up the system on `cluster` with explicit tuning knobs.
     pub fn with_config(cluster: Arc<Cluster>, config: OptsvaConfig) -> Arc<Self> {
         let nodes = cluster
             .node_ids()
@@ -128,10 +140,12 @@ impl AtomicRmi2 {
         Arc::new(AtomicRmi2 { cluster, nodes, stats: Arc::new(SysStats::default()), config })
     }
 
+    /// The simulated cluster this system runs on.
     pub fn cluster(&self) -> &Arc<Cluster> {
         &self.cluster
     }
 
+    /// The configuration this system was stood up with.
     pub fn config(&self) -> OptsvaConfig {
         self.config
     }
@@ -212,6 +226,10 @@ impl Dtm for Arc<AtomicRmi2> {
         "atomic-rmi2 (OptSVA-CF)"
     }
 
+    fn registry(&self) -> Option<&Registry> {
+        Some(&self.cluster.registry)
+    }
+
     fn run_tx(
         &self,
         client: NodeId,
@@ -234,7 +252,7 @@ impl Dtm for Arc<AtomicRmi2> {
                     tx = tx.asynchronous(a);
                 }
                 for d in &spec.decls {
-                    tx.accesses(&d.name, d.suprema);
+                    tx.declare(d.clone());
                 }
                 tx.run(&mut *body).map(|((), ops)| ops)
             },

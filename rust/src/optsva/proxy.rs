@@ -30,7 +30,7 @@ use crate::executor::{Executor, TaskHandle};
 use crate::object::{Mode, OpCall, Value};
 use crate::versioning::ObjectCc;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
 use super::{ObjectSlot, SysStats};
@@ -62,10 +62,6 @@ struct ProxyState {
     rc: u64,
     wc: u64,
     uc: u64,
-    /// Passed the access condition and operates on the object directly.
-    accessed: bool,
-    /// `lv` was advanced on our behalf (early release or async release).
-    released: bool,
     /// Did this transaction modify the live object (directly or via an
     /// applied log)? Governs abort-time invalidation + restore.
     modified: bool,
@@ -77,16 +73,17 @@ struct ProxyState {
     buf: Option<CopyBuffer>,
     /// Log buffer `log_i(x)` — records pure writes before synchronization.
     log: LogBuffer,
-    /// Handle of the async read-only-buffering or last-write-release task.
-    task: Option<TaskHandle>,
     /// Abort rollback already performed (idempotence for §3.4 eviction).
     rolled_back: bool,
 }
 
 /// Server-side proxy: injects OptSVA-CF around method dispatch.
 pub struct Proxy {
+    /// Identity of the shared object this proxy fronts.
     pub oid: Oid,
+    /// Private version acquired for this transaction at start (§2.10.2).
     pub pv: u64,
+    /// Declared per-mode operation bounds for this object.
     pub sup: Suprema,
     slot: Arc<ObjectSlot>,
     executor: Arc<Executor>,
@@ -104,6 +101,18 @@ pub struct Proxy {
     /// Last time (in clock time) the client was heard from (updated on
     /// every dispatch).
     last_beat: Mutex<Duration>,
+    /// Passed the access condition and operates on the object directly.
+    /// True-only; flipped while holding `inner`, read lock-free on the
+    /// executor gate path ([`Proxy::ready_for`]).
+    accessed: AtomicBool,
+    /// `lv` was advanced on our behalf (early release or async release).
+    /// True-only; same locking discipline as `accessed`.
+    released: AtomicBool,
+    /// Handle of the async read-only-buffering or last-write-release task.
+    /// Set at most once per proxy: the read-only constructor path and the
+    /// final-pure-write path are mutually exclusive (`sup.read_only()`
+    /// implies the write counter can never reach a positive supremum).
+    task: OnceLock<TaskHandle>,
     inner: Mutex<ProxyState>,
 }
 
@@ -129,18 +138,18 @@ impl Proxy {
             tx_doomed,
             evicted: AtomicBool::new(false),
             last_beat: Mutex::new(now),
+            accessed: AtomicBool::new(false),
+            released: AtomicBool::new(false),
+            task: OnceLock::new(),
             inner: Mutex::new(ProxyState {
                 rc: 0,
                 wc: 0,
                 uc: 0,
-                accessed: false,
-                released: false,
                 modified: false,
                 st: None,
                 st_epoch: 0,
                 buf: None,
                 log: LogBuffer::new(),
-                task: None,
                 rolled_back: false,
             }),
         });
@@ -223,9 +232,11 @@ impl Proxy {
     /// stays finished, `accessed`/`released` never revert, and our access
     /// condition `lv == pv - 1` can only be invalidated by our own
     /// release).
+    /// Lock-free apart from the versioning check: the executor evaluates
+    /// this gate on every scheduler pass over every parked operation, so it
+    /// must not contend on `inner` with operation bodies.
     pub(super) fn ready_for(&self, mode: Mode) -> bool {
-        let s = self.inner.lock().unwrap();
-        if let Some(t) = &s.task {
+        if let Some(t) = self.task.get() {
             if !t.is_done() {
                 return false; // invoke would join the buffering/release task
             }
@@ -238,13 +249,33 @@ impl Proxy {
             // Read-only objects read the start-time buffer (task gated
             // above); released objects read their copy buffer.
             Mode::Read if self.sup.read_only() => true,
-            _ => s.accessed || s.released || self.access_cond_ready(),
+            _ => {
+                self.accessed.load(Ordering::Acquire)
+                    || self.released.load(Ordering::Acquire)
+                    || self.access_cond_ready()
+            }
         }
     }
 
     /// Dispatch one operation with full OptSVA-CF handling. Runs on the
     /// object's home node (the caller pays RPC latency).
     pub fn invoke(self: &Arc<Self>, call: &OpCall) -> Result<Value, TxError> {
+        // Mode lookup from the cached interface — never touches the
+        // object lock (which concurrent operation bodies may hold for
+        // milliseconds).
+        let mode = self.mode_of(call)?;
+        self.invoke_with_mode(call, mode)
+    }
+
+    /// [`Proxy::invoke`] with the interface scan already done. Asynchronous
+    /// submission resolves the mode once at submit time (it needs it for
+    /// the [`Proxy::ready_for`] gate) and passes it through here so the
+    /// dispatch path never scans the interface twice per operation.
+    pub(super) fn invoke_with_mode(
+        self: &Arc<Self>,
+        call: &OpCall,
+        mode: Mode,
+    ) -> Result<Value, TxError> {
         self.slot.check_alive()?;
         *self.last_beat.lock().unwrap() = self.config.clock.now();
         if self.evicted.load(Ordering::Acquire) {
@@ -253,10 +284,6 @@ impl Proxy {
                 self.oid
             )));
         }
-        // Mode lookup from the cached interface — never touches the
-        // object lock (which concurrent operation bodies may hold for
-        // milliseconds).
-        let mode = self.mode_of(call)?;
         match mode {
             Mode::Read => self.read(call),
             Mode::Write => self.write(call),
@@ -316,7 +343,7 @@ impl Proxy {
         // Last operation of any kind on this object ⇒ release (§2.8.2).
         if s.rc == self.sup.reads && s.wc == self.sup.writes && s.uc == self.sup.updates {
             drop(obj);
-            self.release_now(&mut s);
+            self.release_now();
         }
         Ok(v)
     }
@@ -352,7 +379,7 @@ impl Proxy {
                 s.buf = Some(CopyBuffer::capture(obj.as_ref()));
             }
             drop(obj);
-            self.release_now(&mut s);
+            self.release_now();
         }
         Ok(v)
     }
@@ -370,7 +397,7 @@ impl Proxy {
             });
         }
 
-        if !s.accessed {
+        if !self.accessed.load(Ordering::Acquire) {
             // No preceding reads or updates: execute on the log buffer with
             // no synchronization whatsoever.
             let v = s.log.record(call.clone());
@@ -400,7 +427,7 @@ impl Proxy {
             drop(obj);
             // Done inline, not in a separate thread: "the transaction
             // already has access to obj_x" (§2.8.4).
-            self.release_now(&mut s);
+            self.release_now();
         }
         Ok(v)
     }
@@ -408,17 +435,17 @@ impl Proxy {
     /// First synchronized access: wait at the access condition, make the
     /// checkpoint `st`, and apply any pending log-buffer writes (§2.8.2).
     fn ensure_direct_access(&self) -> Result<(), TxError> {
-        {
-            let s = self.inner.lock().unwrap();
-            if s.accessed {
-                return Ok(());
-            }
-            debug_assert!(!s.released, "direct access after release");
+        if self.accessed.load(Ordering::Acquire) {
+            return Ok(());
         }
+        debug_assert!(
+            !self.released.load(Ordering::Acquire),
+            "direct access after release"
+        );
         // Never hold `inner` while blocking on the version condvar.
         self.wait_access()?;
         let mut s = self.inner.lock().unwrap();
-        if s.accessed {
+        if self.accessed.load(Ordering::Acquire) {
             return Ok(());
         }
         let mut obj = self.slot.object.lock().unwrap();
@@ -434,14 +461,15 @@ impl Proxy {
             log.apply(obj.as_mut())?;
             s.modified = true;
         }
-        s.accessed = true;
+        self.accessed.store(true, Ordering::Release);
         Ok(())
     }
 
-    /// Advance `lv` on our behalf and account the early release.
-    fn release_now(&self, s: &mut ProxyState) {
-        if !s.released {
-            s.released = true;
+    /// Advance `lv` on our behalf and account the early release. The
+    /// atomic swap makes the release at-most-once even though commit,
+    /// abort and the async release task can all race to it.
+    fn release_now(&self) {
+        if !self.released.swap(true, Ordering::AcqRel) {
             self.cc().release(self.pv);
             self.stats.early_releases.fetch_add(1, Ordering::Relaxed);
         }
@@ -449,16 +477,14 @@ impl Proxy {
 
     /// Has the object been released, or is a releasing task in flight?
     fn released_or_pending(&self) -> bool {
-        let s = self.inner.lock().unwrap();
-        s.released || s.task.is_some()
+        self.released.load(Ordering::Acquire) || self.task.get().is_some()
     }
 
     /// Wait for the async buffering/release task, if any (§2.8.5: commit
     /// "waits for extant threads to finish"). Public for tests and
     /// diagnostics.
     pub fn join_task(&self) -> Result<(), TxError> {
-        let task = self.inner.lock().unwrap().task.clone();
-        if let Some(h) = task {
+        if let Some(h) = self.task.get() {
             h.join(self.config.clock.as_ref(), self.config.deadline()).map_err(|()| {
                 TxError::Timeout(crate::versioning::WaitTimeout {
                     what: "async task join",
@@ -487,7 +513,8 @@ impl Proxy {
             me.cc().note_granted(me.pv);
             s.buf = Some(CopyBuffer::capture(obj.as_ref()));
             drop(obj);
-            me.release_now(&mut s);
+            drop(s);
+            me.release_now();
         };
         self.schedule(action);
     }
@@ -505,7 +532,8 @@ impl Proxy {
             if me.cc().doomed(me.pv) {
                 me.tx_doomed.store(true, Ordering::Release);
                 drop(obj);
-                me.release_now(&mut s);
+                drop(s);
+                me.release_now();
                 return;
             }
             if s.st.is_none() {
@@ -525,7 +553,8 @@ impl Proxy {
                 s.buf = Some(CopyBuffer::capture(obj.as_ref()));
             }
             drop(obj);
-            me.release_now(&mut s);
+            drop(s);
+            me.release_now();
         };
         self.schedule(action);
     }
@@ -538,14 +567,23 @@ impl Proxy {
             // Ablation mode: block the calling thread at the condition.
             let _ = self.wait_access();
             action();
-            self.inner.lock().unwrap().task = Some(TaskHandle::ready());
+            assert!(
+                self.task.set(TaskHandle::ready()).is_ok(),
+                "a proxy schedules its async task at most once"
+            );
             return;
         }
+        // Publish the handle *before* handing the task to the executor so
+        // `ready_for`/`released_or_pending` can never observe the window
+        // between submission and publication.
+        let handle = TaskHandle::new();
+        assert!(
+            self.task.set(handle.clone()).is_ok(),
+            "a proxy schedules its async task at most once"
+        );
         let me = Arc::clone(self);
-        let handle = self
-            .executor
-            .submit(move || me.access_cond_ready(), action);
-        self.inner.lock().unwrap().task = Some(handle);
+        self.executor
+            .submit_with_handle(handle, move || me.access_cond_ready(), action);
     }
 
     // ------------------------------------------------------------------
@@ -573,8 +611,8 @@ impl Proxy {
             log.apply(obj.as_mut())?;
             s.modified = true;
         }
-        if !s.released {
-            s.released = true;
+        // Commit-time release is not an *early* release — skip the stat.
+        if !self.released.swap(true, Ordering::AcqRel) {
             self.cc().release(self.pv);
         }
         Ok(())
@@ -615,8 +653,7 @@ impl Proxy {
         // Pending log-buffer writes are simply discarded.
         s.log = LogBuffer::new();
         drop(obj);
-        if !s.released {
-            s.released = true;
+        if !self.released.swap(true, Ordering::AcqRel) {
             self.cc().release(self.pv);
         }
     }
@@ -667,7 +704,7 @@ impl Proxy {
 
     /// Was the object released early (before commit/abort)?
     pub fn released(&self) -> bool {
-        self.inner.lock().unwrap().released
+        self.released.load(Ordering::Acquire)
     }
 
     /// Total operations executed through this proxy.

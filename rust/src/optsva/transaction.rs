@@ -28,7 +28,7 @@
 
 use super::proxy::{Proxy, ProxyConfig};
 use super::AtomicRmi2;
-use crate::api::{ObjHandle, OpFuture, PendingOp, Suprema, TxCtx, TxError};
+use crate::api::{AccessDecl, ObjHandle, OpFuture, PendingOp, Suprema, TxCtx, TxError};
 use crate::clock::Clock;
 use crate::cluster::{Cluster, NodeId};
 use crate::executor::TaskHandle;
@@ -59,11 +59,13 @@ struct SubmittedState {
     taken: bool,
 }
 
-/// One submitted operation: executor handle plus its result slot (shared
-/// with the executor action that fills it).
+/// One submitted operation: executor handle plus its result slot. The slot
+/// lives inside this struct (one `Arc` per submit, not two): the executor
+/// action, the client-held [`OpFuture`] and the commit-time drain all share
+/// the same `Arc<SubmittedOp>`.
 struct SubmittedOp {
     handle: TaskHandle,
-    state: Arc<Mutex<SubmittedState>>,
+    state: Mutex<SubmittedState>,
     node: NodeId,
     /// Executed inline on the client thread (ablation mode): the round
     /// trip is already paid, so neither `wait` nor the commit drain may
@@ -143,7 +145,7 @@ pub struct Transaction {
     /// configuration; `false` is the ablation mode in which `submit`
     /// degrades to the sequential blocking path).
     asynchrony: bool,
-    decls: Vec<(String, Suprema)>,
+    decls: Vec<AccessDecl>,
     proxies: Vec<Arc<Proxy>>,
     tx_doomed: Arc<AtomicBool>,
     /// Set once commit/abort processing starts: a submitted operation that
@@ -227,8 +229,21 @@ impl Transaction {
 
     /// Preamble: declare mixed access with full per-mode suprema.
     pub fn accesses(&mut self, name: &str, sup: Suprema) -> ObjHandle {
+        self.declare(AccessDecl::new(name, sup))
+    }
+
+    /// Preamble: declare access from a prepared [`AccessDecl`] — the path
+    /// the framework-agnostic [`crate::api::TxBuilder`] drives, carrying a
+    /// pre-interned [`crate::cluster::NameId`] so `begin` never hashes the
+    /// name. Declarations without an id are interned here (one stripe read
+    /// for any hosted name; unknown names stay un-interned and fail at
+    /// `begin` with [`TxError::NotDeclared`]).
+    pub fn declare(&mut self, mut decl: AccessDecl) -> ObjHandle {
         assert_eq!(self.phase, Phase::Preamble, "declaration after begin");
-        self.decls.push((name.to_string(), sup));
+        if decl.interned.is_none() {
+            decl.interned = self.sys.cluster().registry.lookup(&decl.name);
+        }
+        self.decls.push(decl);
         ObjHandle(self.decls.len() - 1)
     }
 
@@ -247,14 +262,18 @@ impl Transaction {
         assert_eq!(self.phase, Phase::Preamble, "begin called twice");
         let cluster = Arc::clone(self.sys.cluster());
 
-        // Resolve names and keep declaration order for handles.
+        // Resolve names and keep declaration order for handles. Interned
+        // declarations resolve by id (no string hashing — the per-attempt
+        // hot path); the string fallback covers names bound after they
+        // were declared.
         let mut resolved = Vec::with_capacity(self.decls.len());
-        for (name, sup) in &self.decls {
-            let oid = cluster
-                .registry
-                .locate(name)
-                .ok_or_else(|| TxError::NotDeclared(name.clone()))?;
-            resolved.push((oid, *sup));
+        for d in &self.decls {
+            let oid = d
+                .interned
+                .and_then(|id| cluster.registry.resolve(id))
+                .or_else(|| cluster.registry.locate(&d.name))
+                .ok_or_else(|| TxError::NotDeclared(d.name.clone()))?;
+            resolved.push((oid, d.suprema));
         }
 
         // Sort a view by Oid for globally ordered start-lock acquisition.
@@ -570,12 +589,12 @@ impl TxCtx for Transaction {
             let r = self.call(h, call);
             let op = Arc::new(SubmittedOp {
                 handle: TaskHandle::ready(),
-                state: Arc::new(Mutex::new(SubmittedState {
+                state: Mutex::new(SubmittedState {
                     result: Some(r),
                     done_at: clock.now(),
                     resp_bytes: 0,
                     taken: false,
-                })),
+                }),
                 node,
                 inline: true,
             });
@@ -589,25 +608,34 @@ impl TxCtx for Transaction {
                 inline: true,
             })));
         }
+        // Resolve the mode once, at submit time: the `ready_for` gate needs
+        // it, and the executor action reuses it (`invoke_with_mode`), so
+        // the interface is scanned exactly once per operation.
         let mode = p.mode_of(&call)?;
         // The stub serializes and ships the request; the client pays only
         // the one-way cost and continues — §2.6's "the transaction can
         // proceed without waiting".
         cluster.send(self.client, p.oid.node, call.wire_size());
 
-        let slot = Arc::new(Mutex::new(SubmittedState {
-            result: None,
-            done_at: Duration::ZERO,
-            resp_bytes: 16,
-            taken: false,
-        }));
+        let handle = TaskHandle::new();
+        let op = Arc::new(SubmittedOp {
+            handle: handle.clone(),
+            state: Mutex::new(SubmittedState {
+                result: None,
+                done_at: Duration::ZERO,
+                resp_bytes: 16,
+                taken: false,
+            }),
+            node: p.oid.node,
+            inline: false,
+        });
         let prev = self.chain[h.0].clone();
         let gate = Arc::clone(&p);
         let cond = move || {
             prev.as_ref().map_or(true, TaskHandle::is_done) && gate.ready_for(mode)
         };
         let run_p = Arc::clone(&p);
-        let run_slot = Arc::clone(&slot);
+        let run_op = Arc::clone(&op);
         let closed = Arc::clone(&self.closed);
         let run_clock = Arc::clone(&clock);
         let action = move || {
@@ -617,21 +645,21 @@ impl TxCtx for Transaction {
                 // touching the possibly rolled-back object.
                 Err(TxError::Completed)
             } else {
-                run_p.invoke(&call)
+                run_p.invoke_with_mode(&call, mode)
             };
             let resp_bytes = match &r {
                 Ok(v) => v.wire_size(),
                 Err(_) => 16,
             };
-            let mut s = run_slot.lock().unwrap();
+            let mut s = run_op.state.lock().unwrap();
             s.result = Some(r);
             s.done_at = run_clock.now();
             s.resp_bytes = resp_bytes;
         };
-        let handle = self.sys.executor_of(p.oid.node).submit(cond, action);
-        self.chain[h.0] = Some(handle.clone());
-        let op =
-            Arc::new(SubmittedOp { handle, state: slot, node: p.oid.node, inline: false });
+        self.sys
+            .executor_of(p.oid.node)
+            .submit_with_handle(handle.clone(), cond, action);
+        self.chain[h.0] = Some(handle);
         self.submitted.push(Arc::clone(&op));
         Ok(OpFuture::pending(Box::new(PendingRemoteOp {
             op,

@@ -117,6 +117,7 @@ mod pjrt {
     }
 
     impl XlaRuntime {
+        /// The default artifact directory (`ARMI2_ARTIFACT_DIR` override).
         pub fn default_dir() -> PathBuf {
             default_artifact_dir()
         }
@@ -177,6 +178,7 @@ mod pjrt {
             })
         }
 
+        /// State dimension the loaded artifacts were compiled for.
         pub fn dim(&self) -> usize {
             self.dim
         }
@@ -312,10 +314,12 @@ mod pjrt {
     }
 
     impl XlaBackend {
+        /// Load from [`XlaRuntime::default_dir`].
         pub fn load_default() -> Result<XlaBackend, RuntimeError> {
             Ok(XlaBackend { rt: XlaRuntime::load(&XlaRuntime::default_dir())? })
         }
 
+        /// Load artifacts from an explicit directory.
         pub fn load(dir: &Path) -> Result<XlaBackend, RuntimeError> {
             Ok(XlaBackend { rt: XlaRuntime::load(dir)? })
         }
@@ -359,6 +363,7 @@ mod stub {
     }
 
     impl XlaRuntime {
+        /// The default artifact directory (`ARMI2_ARTIFACT_DIR` override).
         pub fn default_dir() -> PathBuf {
             default_artifact_dir()
         }
@@ -370,18 +375,22 @@ mod stub {
             false
         }
 
+        /// Always fails with [`RuntimeError::FeatureDisabled`].
         pub fn load(_dir: &Path) -> Result<XlaRuntime, RuntimeError> {
             Err(RuntimeError::FeatureDisabled)
         }
 
+        /// Unreachable (the stub cannot be constructed).
         pub fn dim(&self) -> usize {
             match self.never {}
         }
 
+        /// Unreachable (the stub cannot be constructed).
         pub fn mix(&self, _state: &[f32], _params: &[f32]) -> Result<Vec<f32>, RuntimeError> {
             match self.never {}
         }
 
+        /// Unreachable (the stub cannot be constructed).
         pub fn digest(&self, _state: &[f32]) -> Result<f32, RuntimeError> {
             match self.never {}
         }
@@ -393,10 +402,12 @@ mod stub {
     }
 
     impl XlaBackend {
+        /// Always fails with [`RuntimeError::FeatureDisabled`].
         pub fn load_default() -> Result<XlaBackend, RuntimeError> {
             Ok(XlaBackend { rt: XlaRuntime::load(&XlaRuntime::default_dir())? })
         }
 
+        /// Always fails with [`RuntimeError::FeatureDisabled`].
         pub fn load(dir: &Path) -> Result<XlaBackend, RuntimeError> {
             Ok(XlaBackend { rt: XlaRuntime::load(dir)? })
         }

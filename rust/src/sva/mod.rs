@@ -38,13 +38,17 @@ struct Slot {
 pub struct AtomicRmi1 {
     cluster: Arc<Cluster>,
     slots: Vec<RwLock<Vec<Arc<Slot>>>>,
+    /// Committed transactions.
     pub commits: AtomicU64,
+    /// Programmatic aborts ([`crate::api::TxError::ManualAbort`]).
     pub manual_aborts: AtomicU64,
+    /// Cascading aborts forced by an aborting predecessor.
     pub forced_aborts: AtomicU64,
     wait_timeout: Option<Duration>,
 }
 
 impl AtomicRmi1 {
+    /// An SVA system over `cluster` (no objects hosted yet).
     pub fn new(cluster: Arc<Cluster>) -> Arc<Self> {
         let slots = cluster.node_ids().map(|_| RwLock::new(Vec::new())).collect();
         Arc::new(AtomicRmi1 {
@@ -84,6 +88,7 @@ impl AtomicRmi1 {
         f(obj.as_ref())
     }
 
+    /// The cluster this system runs on.
     pub fn cluster(&self) -> &Arc<Cluster> {
         &self.cluster
     }

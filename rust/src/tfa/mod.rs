@@ -53,13 +53,16 @@ pub struct TfaSystem {
     slots: Vec<RwLock<Vec<Arc<Slot>>>>,
     /// Node-local clocks.
     clocks: Vec<AtomicU64>,
+    /// Committed transactions.
     pub commit_count: AtomicU64,
+    /// Aborted attempts (conflict + manual).
     pub abort_count: AtomicU64,
     /// Base backoff between retries.
     pub backoff: Duration,
 }
 
 impl TfaSystem {
+    /// A TFA system over `cluster` (no objects hosted yet).
     pub fn new(cluster: Arc<Cluster>) -> Arc<Self> {
         let slots = cluster.node_ids().map(|_| RwLock::new(Vec::new())).collect();
         let clocks = cluster.node_ids().map(|_| AtomicU64::new(0)).collect();
@@ -73,6 +76,7 @@ impl TfaSystem {
         })
     }
 
+    /// Host `object` on `node` under `name`.
     pub fn host(&self, node: NodeId, name: &str, object: Box<dyn SharedObject>) -> Oid {
         let mut slots = self.slots[node.0 as usize].write().unwrap();
         let oid = Oid::new(node, slots.len() as u32);
@@ -99,6 +103,7 @@ impl TfaSystem {
         f(obj.as_ref())
     }
 
+    /// The cluster this system runs on.
     pub fn cluster(&self) -> &Arc<Cluster> {
         &self.cluster
     }

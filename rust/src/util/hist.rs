@@ -27,6 +27,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Histogram {
             counts: vec![0; OCTAVES * SUB_BUCKETS],
@@ -84,14 +85,17 @@ impl Histogram {
         self.sum += other.sum;
     }
 
+    /// Number of recorded values.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Largest recorded value (exact, not bucketed).
     pub fn max(&self) -> u64 {
         self.max
     }
 
+    /// Smallest recorded value (exact); 0 when empty.
     pub fn min(&self) -> u64 {
         if self.total == 0 {
             0
@@ -100,6 +104,7 @@ impl Histogram {
         }
     }
 
+    /// Arithmetic mean of the recorded values (exact); 0 when empty.
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             0.0

@@ -36,7 +36,9 @@ use std::time::Duration;
 /// tests to detect deadlock regressions.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WaitTimeout {
+    /// Which wait timed out (`"access"`, `"commit"`, …).
     pub what: &'static str,
+    /// How long the waiter blocked before giving up.
     pub waited_ms: u64,
 }
 

@@ -7,6 +7,7 @@
 
 use super::frameworks::FrameworkKind;
 use crate::api::{AccessDecl, Dtm, ObjHandle, OpFuture, Suprema, TxCtx, TxError};
+use crate::bench::BenchEntry;
 use crate::clock::Clock;
 use crate::cluster::{Cluster, NetworkModel};
 use crate::object::{OpCall, RegisterObject};
@@ -20,6 +21,7 @@ use std::time::{Duration, Instant};
 /// scaled to a single evaluation box (see DESIGN.md §2).
 #[derive(Debug, Clone)]
 pub struct EigenbenchParams {
+    /// Which concurrency-control framework to drive.
     pub kind: FrameworkKind,
     /// Cluster size (paper: 16).
     pub nodes: u16,
@@ -61,6 +63,7 @@ pub struct EigenbenchParams {
     /// and throughput is reported against simulated elapsed time. The
     /// default; set `false` to measure wall-clock blocking for real.
     pub virtual_time: bool,
+    /// PRNG seed; every client derives its stream by splitting this.
     pub seed: u64,
 }
 
@@ -89,6 +92,7 @@ impl Default for EigenbenchParams {
 }
 
 impl EigenbenchParams {
+    /// Total client threads across the cluster (`nodes × clients_per_node`).
     pub fn total_clients(&self) -> u32 {
         self.nodes as u32 * self.clients_per_node
     }
@@ -102,13 +106,21 @@ impl EigenbenchParams {
 /// Outcome of one Eigenbench run.
 #[derive(Debug, Clone)]
 pub struct EigenbenchResult {
+    /// Compact scenario label, e.g. `4n/16c/10a/9÷1`.
     pub params_label: String,
+    /// Framework name as reported by [`Dtm::framework_name`].
     pub framework: &'static str,
     /// Committed shared-data operations per second (the paper's metric).
     pub throughput: f64,
+    /// Transactions that ran to commit.
     pub committed_txns: u64,
+    /// Shared-data operations inside committed transactions.
     pub committed_ops: u64,
+    /// Framework-level abort count (0 for the pessimistic frameworks).
     pub aborts: u64,
+    /// Total execution attempts across committed transactions (≥
+    /// `committed_txns`; the excess is retries after aborts).
+    pub attempts: u64,
     /// Fraction of transactions that aborted ≥ once (Fig 13).
     pub abort_rate: f64,
     /// Real elapsed time of the run.
@@ -134,6 +146,25 @@ impl EigenbenchResult {
             self.wall.as_millis(),
             self.sim.as_millis(),
         )
+    }
+
+    /// This result as a [`BenchEntry`] for a `BENCH_*.json` report.
+    ///
+    /// `throughput_ops_s` is directional (higher is better) and gated by
+    /// CI; the rest are context. Latency quantiles come from the simulated
+    /// per-transaction [`Histogram`].
+    pub fn bench_entry(&self, name: impl Into<String>) -> BenchEntry {
+        BenchEntry::new(name)
+            .metric("throughput_ops_s", self.throughput)
+            .metric("committed_txns", self.committed_txns as f64)
+            .metric("committed_ops", self.committed_ops as f64)
+            .metric("aborts", self.aborts as f64)
+            .metric("attempts", self.attempts as f64)
+            .metric("abort_rate", self.abort_rate)
+            .metric("wall_ms", self.wall.as_secs_f64() * 1e3)
+            .metric("sim_ms", self.sim.as_secs_f64() * 1e3)
+            .metric("latency_p50_us", self.latency.quantile(0.5) as f64)
+            .metric("latency_p99_us", self.latency.quantile(0.99) as f64)
     }
 }
 
@@ -255,6 +286,7 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
     let committed_ops = Arc::new(AtomicU64::new(0));
     let latency = Arc::new(Mutex::new(Histogram::new()));
     let txns_with_retry = Arc::new(AtomicU64::new(0));
+    let total_attempts = Arc::new(AtomicU64::new(0));
 
     let t0 = Instant::now();
     let sim0 = clock.now();
@@ -271,6 +303,7 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
             let committed_ops = Arc::clone(&committed_ops);
             let latency = Arc::clone(&latency);
             let txns_with_retry = Arc::clone(&txns_with_retry);
+            let total_attempts = Arc::clone(&total_attempts);
             let mut rng = Prng::seeded(params.seed).split(client_id as u64);
             client_id += 1;
             handles.push(std::thread::spawn(move || {
@@ -309,6 +342,7 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
                         Ok(stats) => {
                             committed_txns.fetch_add(1, Ordering::Relaxed);
                             committed_ops.fetch_add(prog.shared_ops, Ordering::Relaxed);
+                            total_attempts.fetch_add(stats.attempts, Ordering::Relaxed);
                             if stats.attempts > 1 {
                                 txns_with_retry.fetch_add(1, Ordering::Relaxed);
                             }
@@ -359,6 +393,7 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
         committed_txns: txns,
         committed_ops: ops,
         aborts,
+        attempts: total_attempts.load(Ordering::Relaxed),
         abort_rate: if txns == 0 { 0.0 } else { retried as f64 / txns as f64 },
         wall,
         sim,
@@ -394,6 +429,10 @@ mod tests {
             assert_eq!(r.committed_txns, 2 * 2 * 3, "{}", r.framework);
             assert_eq!(r.committed_ops, r.committed_txns * 4);
             assert!(r.throughput > 0.0);
+            assert!(r.attempts >= r.committed_txns, "{}", r.framework);
+            let entry = r.bench_entry("probe");
+            assert_eq!(entry.get("throughput_ops_s"), Some(r.throughput));
+            assert_eq!(entry.get("attempts"), Some(r.attempts as f64));
         }
     }
 

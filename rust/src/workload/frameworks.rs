@@ -108,9 +108,13 @@ impl FrameworkKind {
 
 /// A built framework instance: hosts objects and runs transactions.
 pub enum Framework {
+    /// OptSVA-CF / Atomic RMI 2 (the paper's contribution).
     Optsva(Arc<AtomicRmi2>),
+    /// SVA / Atomic RMI 1 baseline.
     Sva(Arc<AtomicRmi1>),
+    /// Transaction Forwarding (HyFlow2 stand-in).
     Tfa(Arc<TfaSystem>),
+    /// A distributed-lock baseline (mutex/R-W × S2PL/2PL, or global).
     Locks(Arc<LockSystem>),
 }
 

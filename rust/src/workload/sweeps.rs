@@ -16,6 +16,7 @@
 
 use super::eigenbench::{run_eigenbench, EigenbenchParams, EigenbenchResult};
 use super::frameworks::FrameworkKind;
+use crate::bench::BenchReport;
 use crate::metrics::{fmt_throughput, Table};
 use crate::NetworkModel;
 use std::time::Duration;
@@ -24,7 +25,9 @@ use std::time::Duration;
 /// for smoke-testing; full runs regenerate the figures properly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// Smoke-test fraction of the sweep (CI default, `ARMI2_BENCH_QUICK`).
     Quick,
+    /// The full figure-regenerating sweep.
     Full,
 }
 
@@ -56,6 +59,7 @@ pub const FIGURE_FRAMEWORKS: &[FrameworkKind] = &[
     FrameworkKind::GLock,
 ];
 
+/// The paper's three read percentages (9÷1, 5÷5, 1÷9 ratios).
 pub const RATIOS: &[u8] = &[90, 50, 10];
 
 fn base(scale: Scale) -> EigenbenchParams {
@@ -224,6 +228,23 @@ pub fn write_results_csv(name: &str, results: &[EigenbenchResult]) -> std::io::R
     Ok(path.display().to_string())
 }
 
+/// Write a sweep's results as `target/bench-results/BENCH_<name>.json`
+/// (one [`crate::bench::BenchEntry`] per scenario, named
+/// `<framework>/<params_label>`). Returns the written path.
+pub fn write_results_json(
+    name: &str,
+    scale: Scale,
+    results: &[EigenbenchResult],
+) -> std::io::Result<String> {
+    let mut report = BenchReport::new(name).config("scale", format!("{scale:?}"));
+    for r in results {
+        let entry_name = format!("{}/{}", r.framework, r.params_label);
+        report.push(r.bench_entry(entry_name));
+    }
+    let path = report.write_to(&crate::bench::default_output_dir())?;
+    Ok(path.display().to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +266,22 @@ mod tests {
         let path = write_results_csv("test_fig13", &results).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.lines().count() > 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn json_writer_produces_parseable_report() {
+        let (_, results) = fig13(Scale::Quick);
+        let path = write_results_json("test_fig13_json", Scale::Quick, &results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let report = BenchReport::parse(&text).unwrap();
+        assert_eq!(report.bench, "test_fig13_json");
+        assert_eq!(report.entries.len(), results.len());
+        assert!(report.config.iter().any(|(k, v)| k == "scale" && v == "Quick"));
+        for (r, e) in results.iter().zip(&report.entries) {
+            assert!(e.name.starts_with(r.framework));
+            assert_eq!(e.get("committed_txns"), Some(r.committed_txns as f64));
+        }
         let _ = std::fs::remove_file(path);
     }
 }

@@ -1,0 +1,745 @@
+//! Deterministic schedule exploration for OptSVA-CF.
+//!
+//! The explorer replaces "whatever order threads wake" with an explicit,
+//! seed-derived permutation: everything runs on **one** thread, node
+//! executors are threadless ([`crate::executor::Executor::manual`]), the
+//! network is instant, and time is virtual — so the only source of
+//! nondeterminism left is *which enabled action runs next*, and the
+//! explorer owns that choice.
+//!
+//! An **action** is one of: begin a scripted transaction, execute its
+//! next operation, finish it (commit/abort), or fire one ready executor
+//! task (the asynchronous buffering/release work of §2.8.1/§2.8.4 —
+//! the "deliverable messages" of the permutation). An action is
+//! **enabled** only if it is guaranteed not to block, which the gates
+//! [`crate::optsva::Transaction::call_ready`] /
+//! [`crate::optsva::Transaction::finish_ready`] and
+//! [`crate::executor::Executor::ready_count`] decide exactly; all of
+//! them are monotone under the single-threaded discipline, so an enabled
+//! action stays enabled until taken.
+//!
+//! Each round the explorer draws the next choice from a seed-derived
+//! stream ([`ScheduleId`] names the stream), records the full per-run
+//! choice trace, and on completion checks the recorded history with
+//! [`crate::checker::check_last_use_opacity`]; a stuck round (no enabled
+//! action, transactions outstanding) is handed to the wait-for-graph
+//! detector instead. Neighborhood exploration (DPOR-lite) re-runs a base
+//! schedule's trace up to round `k`, forces the alternative `a` there,
+//! and continues seed-derived — `S<seed>~<k>.<a>` replays exactly.
+
+use crate::api::{ObjHandle, TxCtx, TxError};
+use crate::checker::{
+    check_last_use_opacity, FinalProbe, HistoryTx, OpRecord, TxOutcome, WaitGraph,
+};
+use crate::cluster::{Cluster, NetworkModel, NodeId};
+use crate::object::{account::ops, Account, SharedObject, Value};
+use crate::optsva::{AtomicRmi2, OptsvaConfig, ProtocolMutation, Transaction};
+use crate::util::prng::Prng;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::lint::{lint_declarations, DeclUsage, LintDiagnostic};
+use super::scenarios::{Scenario, TxEnd, TxScript};
+
+/// Explorer tuning. The defaults satisfy the acceptance bar (≥ 200
+/// distinct schedules per scenario) within a couple of seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct ExploreConfig {
+    /// Base seed budget: seeds `0..seeds` are always run.
+    pub seeds: u64,
+    /// Rounds eligible for delivery-order flips (DPOR-lite depth).
+    pub flip_depth: usize,
+    /// How many of the first base seeds get neighborhood exploration.
+    pub flip_bases: u64,
+    /// Hard per-run round cap (runaway/livelock guard).
+    pub max_rounds: usize,
+    /// Keep drawing seeds (up to 8× `seeds`) until this many distinct
+    /// schedules were observed.
+    pub min_distinct: usize,
+    /// Protocol mutation to run under ([`ProtocolMutation::None`] checks
+    /// the real protocol).
+    pub mutation: ProtocolMutation,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        ExploreConfig {
+            seeds: 256,
+            flip_depth: 6,
+            flip_bases: 4,
+            max_rounds: 10_000,
+            min_distinct: 200,
+            mutation: ProtocolMutation::None,
+        }
+    }
+}
+
+/// Replayable schedule name: `S<seed>` for a plain seeded run,
+/// `S<seed>~<k>.<a>` for its neighborhood flip (replay the base trace to
+/// round `k`, force alternative `a`, continue seed-derived).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScheduleId {
+    /// The base seed.
+    pub base_seed: u64,
+    /// Optional delivery-order flip `(round, alternative index)`.
+    pub flip: Option<(usize, usize)>,
+}
+
+impl ScheduleId {
+    /// A plain seeded schedule.
+    pub fn seed(base_seed: u64) -> Self {
+        ScheduleId { base_seed, flip: None }
+    }
+
+    /// Parse the `S<seed>[~<k>.<a>]` spelling (violation reports).
+    pub fn parse(s: &str) -> Option<Self> {
+        let rest = s.strip_prefix('S')?;
+        match rest.split_once('~') {
+            None => Some(ScheduleId { base_seed: rest.parse().ok()?, flip: None }),
+            Some((seed, flip)) => {
+                let (k, a) = flip.split_once('.')?;
+                Some(ScheduleId {
+                    base_seed: seed.parse().ok()?,
+                    flip: Some((k.parse().ok()?, a.parse().ok()?)),
+                })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ScheduleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "S{}", self.base_seed)?;
+        if let Some((k, a)) = self.flip {
+            write!(f, "~{k}.{a}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A safety violation found in one explored schedule.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// The schedule that exhibits it — `atomic-rmi2 check --scenario X
+    /// --schedule <this>` replays it exactly.
+    pub schedule: String,
+    /// What the checker found.
+    pub detail: String,
+}
+
+/// The result of running one schedule to completion.
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    /// Schedule identity (rendered).
+    pub schedule: String,
+    /// Full rendered history — deterministic: same [`ScheduleId`] ⇒
+    /// byte-identical string (the regression property the explorer
+    /// rests on).
+    pub history: String,
+    /// Per-round `(enabled action count, chosen index)` trace.
+    pub trace: Vec<(usize, usize)>,
+    /// FNV-64 fingerprint of trace + history (distinct-schedule count).
+    pub fingerprint: u64,
+    /// Checker verdict, if the schedule violated safety.
+    pub violation: Option<String>,
+    /// Per-declaration usage (lint input).
+    pub usages: Vec<DeclUsage>,
+    /// Committed transactions in this run.
+    pub committed: u64,
+    /// Aborted transactions in this run.
+    pub aborted: u64,
+    /// Operations + probes verified by the opacity checker.
+    pub ops_verified: u64,
+}
+
+/// Aggregate over a whole exploration.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Schedules executed (base seeds + flips).
+    pub runs: usize,
+    /// Distinct schedule fingerprints observed.
+    pub distinct_schedules: usize,
+    /// Violations found (capped at 25 samples; see `violations_total`).
+    pub violations: Vec<Violation>,
+    /// Total violating schedules (uncapped count).
+    pub violations_total: usize,
+    /// Committed transactions across all runs.
+    pub committed: u64,
+    /// Aborted transactions across all runs.
+    pub aborted: u64,
+    /// Operations + probes verified by the opacity checker.
+    pub ops_verified: u64,
+    /// Declaration lint diagnostics (aggregated across all runs).
+    pub lint: Vec<LintDiagnostic>,
+}
+
+/// The seed-derived choice stream, with an optional forced prefix for
+/// flip schedules.
+struct ChoiceStream {
+    forced: Vec<usize>,
+    alt: Option<usize>,
+    prng: Prng,
+    round: usize,
+}
+
+impl ChoiceStream {
+    fn base(seed: u64) -> Self {
+        ChoiceStream { forced: Vec::new(), alt: None, prng: Prng::seeded(seed), round: 0 }
+    }
+
+    /// Replay `base_trace[..k]`, force alternative `alt` at round `k`,
+    /// then continue from a deterministic function of (seed, k, alt).
+    fn flip(base_trace: &[(usize, usize)], k: usize, alt: usize, base_seed: u64) -> Self {
+        ChoiceStream {
+            forced: base_trace.iter().take(k).map(|&(_, c)| c).collect(),
+            alt: Some(alt),
+            prng: Prng::seeded(base_seed).split(((k as u64) << 32) | alt as u64),
+            round: 0,
+        }
+    }
+
+    fn choose(&mut self, enabled: usize) -> usize {
+        let r = self.round;
+        self.round += 1;
+        if r < self.forced.len() {
+            return self.forced[r].min(enabled - 1);
+        }
+        if r == self.forced.len() {
+            if let Some(a) = self.alt {
+                return a.min(enabled - 1);
+            }
+        }
+        self.prng.index(enabled)
+    }
+}
+
+/// One scripted transaction being driven through a schedule.
+struct TxRun {
+    script: TxScript,
+    client: NodeId,
+    tx: Option<Transaction>,
+    handles: Vec<ObjHandle>,
+    next: usize,
+    pending_abort: Option<TxError>,
+    ops: Vec<OpRecord>,
+    outcome: Option<TxOutcome>,
+    usages: Vec<DeclUsage>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    /// Begin transaction `i` (acquire versions, create proxies).
+    Begin(usize),
+    /// Execute transaction `i`'s next scripted operation.
+    Step(usize),
+    /// Commit/abort transaction `i`.
+    Finish(usize),
+    /// Fire the `nth` ready task on node `node`'s executor.
+    ExecTask(u16, usize),
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn enabled_actions(runs: &[TxRun], sys: &Arc<AtomicRmi2>, nodes: u16) -> Vec<Action> {
+    let mut acts = Vec::new();
+    for (i, r) in runs.iter().enumerate() {
+        if r.outcome.is_some() {
+            continue;
+        }
+        match &r.tx {
+            None => acts.push(Action::Begin(i)),
+            Some(tx) => {
+                if r.pending_abort.is_some() || r.next >= r.script.steps.len() {
+                    if tx.finish_ready() {
+                        acts.push(Action::Finish(i));
+                    }
+                } else {
+                    let (d, call) = &r.script.steps[r.next];
+                    match tx.call_ready(r.handles[*d], call) {
+                        Ok(true) => acts.push(Action::Step(i)),
+                        Ok(false) => {}
+                        // The call itself will surface the error.
+                        Err(_) => acts.push(Action::Step(i)),
+                    }
+                }
+            }
+        }
+    }
+    for n in 0..nodes {
+        for nth in 0..sys.executor_of(NodeId(n)).ready_count() {
+            acts.push(Action::ExecTask(n, nth));
+        }
+    }
+    acts
+}
+
+fn perform(action: Action, runs: &mut [TxRun], sys: &Arc<AtomicRmi2>, commit_seq: &mut u64) {
+    match action {
+        Action::Begin(i) => {
+            let r = &mut runs[i];
+            let mut tx = sys.tx(r.client);
+            let handles: Vec<ObjHandle> = r
+                .script
+                .decls
+                .iter()
+                .map(|(name, sup)| tx.accesses(name, *sup))
+                .collect();
+            match tx.begin() {
+                Ok(()) => {
+                    r.tx = Some(tx);
+                    r.handles = handles;
+                }
+                Err(e) => {
+                    r.outcome = Some(TxOutcome::Aborted { reason: format!("begin failed: {e}") });
+                }
+            }
+        }
+        Action::Step(i) => {
+            let r = &mut runs[i];
+            let (d, call) = r.script.steps[r.next].clone();
+            r.next += 1;
+            let name = r.script.decls[d].0;
+            let h = r.handles[d];
+            match r.tx.as_mut().expect("step on live tx").call(h, call.clone()) {
+                Ok(v) => r.ops.push(OpRecord { object: name.into(), call, result: v }),
+                Err(e) => r.pending_abort = Some(e),
+            }
+        }
+        Action::Finish(i) => {
+            let r = &mut runs[i];
+            let mut tx = r.tx.take().expect("finish on live tx");
+            // Capture usage before terminating (counters are final here).
+            let counts: Vec<(u64, u64, u64)> = r
+                .handles
+                .iter()
+                .map(|&h| tx.proxy(h).counts())
+                .collect();
+            let outcome = if let Some(e) = r.pending_abort.take() {
+                let reason = e.to_string();
+                let _ = tx.abort();
+                TxOutcome::Aborted { reason }
+            } else {
+                match r.script.end {
+                    TxEnd::Abort => {
+                        let _ = tx.abort();
+                        TxOutcome::Aborted { reason: "manual abort".into() }
+                    }
+                    TxEnd::Commit => match tx.commit() {
+                        Ok(()) => {
+                            let seq = *commit_seq;
+                            *commit_seq += 1;
+                            TxOutcome::Committed { seq }
+                        }
+                        Err(e) => TxOutcome::Aborted { reason: e.to_string() },
+                    },
+                }
+            };
+            let committed = matches!(outcome, TxOutcome::Committed { .. });
+            r.usages = r
+                .script
+                .decls
+                .iter()
+                .zip(&counts)
+                .map(|((name, sup), &(rc, wc, uc))| DeclUsage {
+                    tag: r.script.tag.into(),
+                    object: (*name).into(),
+                    declared: *sup,
+                    used_reads: rc,
+                    used_writes: wc,
+                    used_updates: uc,
+                    committed,
+                })
+                .collect();
+            r.outcome = Some(outcome);
+        }
+        Action::ExecTask(node, nth) => {
+            let fired = sys.executor_of(NodeId(node)).run_ready(nth);
+            debug_assert!(fired, "enabled executor task must fire");
+        }
+    }
+}
+
+/// Wait-for edges at a stuck point: a live transaction blocked at the
+/// access (commit) condition of an object waits for every earlier-pv
+/// transaction on that object that has not released (terminated).
+fn build_wait_graph(runs: &[TxRun]) -> WaitGraph {
+    // (object name) -> [(tag, pv, released, terminated)]
+    let mut holders: BTreeMap<&str, Vec<(&str, u64, bool, bool)>> = BTreeMap::new();
+    for r in runs.iter().filter(|r| r.outcome.is_none()) {
+        if let Some(tx) = &r.tx {
+            for (di, (name, _)) in r.script.decls.iter().enumerate() {
+                let p = tx.proxy(r.handles[di]);
+                holders.entry(name).or_default().push((
+                    r.script.tag,
+                    p.pv,
+                    p.released(),
+                    p.terminated(),
+                ));
+            }
+        }
+    }
+    let mut g = WaitGraph::new();
+    for r in runs.iter().filter(|r| r.outcome.is_none()) {
+        let Some(tx) = &r.tx else { continue };
+        let finishing = r.pending_abort.is_some() || r.next >= r.script.steps.len();
+        for (di, (name, _)) in r.script.decls.iter().enumerate() {
+            let p = tx.proxy(r.handles[di]);
+            let waits_access = !p.task_done()
+                || (!finishing
+                    && r.script.steps.get(r.next).is_some_and(|(d, _)| *d == di)
+                    && !p.released());
+            let waits_commit = finishing && !p.commit_cond_ready();
+            if !(waits_access || waits_commit) {
+                continue;
+            }
+            for &(tag, pv, released, terminated) in holders.get(name).into_iter().flatten() {
+                if pv >= p.pv {
+                    continue;
+                }
+                if waits_access && !released {
+                    g.add(r.script.tag, tag, *name, "access");
+                }
+                if waits_commit && !terminated {
+                    g.add(r.script.tag, tag, *name, "commit");
+                }
+            }
+        }
+    }
+    g
+}
+
+fn render_history(
+    scenario: &Scenario,
+    id: &ScheduleId,
+    runs: &[TxRun],
+    probes: &[FinalProbe],
+    trace: &[(usize, usize)],
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "scenario={} schedule={id}", scenario.name);
+    for r in runs {
+        let outcome = match &r.outcome {
+            Some(TxOutcome::Committed { seq }) => format!("committed seq={seq}"),
+            Some(TxOutcome::Aborted { reason }) => format!("aborted ({reason})"),
+            None => "unfinished".into(),
+        };
+        let _ = writeln!(out, "{}: {outcome}", r.script.tag);
+        for op in &r.ops {
+            let args: Vec<String> = op.call.args.iter().map(Value::to_string).collect();
+            let _ = writeln!(
+                out,
+                "  {}.{}({}) -> {}",
+                op.object,
+                op.call.method,
+                args.join(","),
+                op.result
+            );
+        }
+    }
+    let finals: Vec<String> = probes.iter().map(|p| format!("{}={}", p.object, p.live)).collect();
+    let _ = writeln!(out, "final: {}", finals.join(" "));
+    let choices: Vec<String> = trace.iter().map(|(e, c)| format!("{e}.{c}")).collect();
+    let _ = writeln!(out, "trace: {}", choices.join(" "));
+    out
+}
+
+fn run_with_chooser(
+    scenario: &Scenario,
+    mutation: ProtocolMutation,
+    mut chooser: ChoiceStream,
+    id: &ScheduleId,
+    max_rounds: usize,
+) -> RunOutcome {
+    let nodes = scenario.nodes();
+    let cluster = Arc::new(Cluster::new_virtual(nodes, NetworkModel::instant()));
+    let sys = AtomicRmi2::for_analysis(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(30)), asynchrony: true },
+        mutation,
+    );
+    let oids: Vec<_> = scenario
+        .objects
+        .iter()
+        .map(|o| sys.host(NodeId(o.node), o.name, Box::new(Account::with_balance(o.initial))))
+        .collect();
+
+    let mut runs: Vec<TxRun> = scenario
+        .txs
+        .iter()
+        .enumerate()
+        .map(|(i, script)| TxRun {
+            script: script.clone(),
+            client: NodeId((i as u16) % nodes),
+            tx: None,
+            handles: Vec::new(),
+            next: 0,
+            pending_abort: None,
+            ops: Vec::new(),
+            outcome: None,
+            usages: Vec::new(),
+        })
+        .collect();
+
+    let mut trace: Vec<(usize, usize)> = Vec::new();
+    let mut commit_seq = 0u64;
+    let mut stuck: Option<String> = None;
+    loop {
+        let acts = enabled_actions(&runs, &sys, nodes);
+        if acts.is_empty() {
+            if runs.iter().all(|r| r.outcome.is_some()) {
+                break;
+            }
+            let graph = build_wait_graph(&runs);
+            stuck = Some(match graph.find_cycle() {
+                Some(cycle) => {
+                    format!("deadlock: cycle {}\n{}", cycle.join(" -> "), graph.render())
+                }
+                None => format!(
+                    "livelock or lost wakeup: no transaction can progress\n{}",
+                    graph.render()
+                ),
+            });
+            break;
+        }
+        if trace.len() >= max_rounds {
+            stuck = Some(format!("schedule did not quiesce within {max_rounds} rounds"));
+            break;
+        }
+        let choice = chooser.choose(acts.len());
+        trace.push((acts.len(), choice));
+        perform(acts[choice], &mut runs, &sys, &mut commit_seq);
+    }
+
+    // Force any stragglers down (stuck schedules only): dropping a
+    // running transaction aborts it; virtual-time stall escape bounds
+    // the commit-condition waits inside that abort.
+    for r in &mut runs {
+        r.tx = None;
+        if r.outcome.is_none() {
+            r.outcome =
+                Some(TxOutcome::Aborted { reason: "unfinished at stuck schedule".into() });
+        }
+    }
+
+    // Live final state, probed through object snapshots.
+    let probes: Vec<FinalProbe> = scenario
+        .objects
+        .iter()
+        .zip(&oids)
+        .map(|(spec, &oid)| {
+            let mut snap = sys.with_object(oid, |o| o.snapshot());
+            let live = snap.invoke(&ops::balance()).unwrap_or(Value::Unit);
+            FinalProbe { object: spec.name.into(), call: ops::balance(), live }
+        })
+        .collect();
+
+    let history: Vec<HistoryTx> = runs
+        .iter()
+        .map(|r| HistoryTx {
+            tag: r.script.tag.into(),
+            ops: r.ops.clone(),
+            outcome: r.outcome.clone().expect("all runs finished"),
+        })
+        .collect();
+    let initial: BTreeMap<String, Box<dyn SharedObject>> = scenario
+        .objects
+        .iter()
+        .map(|o| {
+            (
+                o.name.to_string(),
+                Box::new(Account::with_balance(o.initial)) as Box<dyn SharedObject>,
+            )
+        })
+        .collect();
+
+    let mut ops_verified = 0u64;
+    let violation = if let Some(s) = stuck {
+        Some(s)
+    } else {
+        match check_last_use_opacity(initial, &history, &probes) {
+            Ok(stats) => {
+                ops_verified = stats.ops_verified + stats.probes_verified as u64;
+                None
+            }
+            Err(v) => Some(v.to_string()),
+        }
+    };
+
+    let committed = history
+        .iter()
+        .filter(|t| matches!(t.outcome, TxOutcome::Committed { .. }))
+        .count() as u64;
+    let rendered = render_history(scenario, id, &runs, &probes, &trace);
+    let fingerprint = fnv64(rendered.as_bytes());
+    let usages = runs.iter().flat_map(|r| r.usages.iter().cloned()).collect();
+    sys.shutdown();
+
+    RunOutcome {
+        schedule: id.to_string(),
+        history: rendered,
+        trace,
+        fingerprint,
+        violation,
+        usages,
+        committed,
+        aborted: history.len() as u64 - committed,
+        ops_verified,
+    }
+}
+
+/// Run one named schedule (replay path of `atomic-rmi2 check
+/// --schedule`). Flip schedules recompute their base trace first — the
+/// id alone is a complete, replayable description.
+pub fn run_schedule(
+    scenario: &Scenario,
+    id: &ScheduleId,
+    mutation: ProtocolMutation,
+) -> RunOutcome {
+    run_schedule_bounded(scenario, id, mutation, ExploreConfig::default().max_rounds)
+}
+
+fn run_schedule_bounded(
+    scenario: &Scenario,
+    id: &ScheduleId,
+    mutation: ProtocolMutation,
+    max_rounds: usize,
+) -> RunOutcome {
+    match id.flip {
+        None => {
+            run_with_chooser(scenario, mutation, ChoiceStream::base(id.base_seed), id, max_rounds)
+        }
+        Some((k, alt)) => {
+            let base = run_with_chooser(
+                scenario,
+                mutation,
+                ChoiceStream::base(id.base_seed),
+                &ScheduleId::seed(id.base_seed),
+                max_rounds,
+            );
+            run_with_chooser(
+                scenario,
+                mutation,
+                ChoiceStream::flip(&base.trace, k, alt, id.base_seed),
+                id,
+                max_rounds,
+            )
+        }
+    }
+}
+
+const VIOLATION_SAMPLE_CAP: usize = 25;
+
+fn absorb(report: &mut ExploreReport, seen: &mut BTreeSet<u64>, usages: &mut Vec<DeclUsage>, out: RunOutcome) {
+    report.runs += 1;
+    seen.insert(out.fingerprint);
+    report.committed += out.committed;
+    report.aborted += out.aborted;
+    report.ops_verified += out.ops_verified;
+    if let Some(detail) = out.violation {
+        report.violations_total += 1;
+        if report.violations.len() < VIOLATION_SAMPLE_CAP {
+            report.violations.push(Violation { schedule: out.schedule, detail });
+        }
+    }
+    usages.extend(out.usages);
+}
+
+/// Explore `scenario` under `cfg`: base seeds `0..seeds` (extended up to
+/// 8× until `min_distinct` distinct schedules were seen), plus
+/// depth-bounded delivery-order flips of the first `flip_bases` seeds.
+pub fn explore(scenario: &Scenario, cfg: &ExploreConfig) -> ExploreReport {
+    let mut report = ExploreReport { scenario: scenario.name.to_string(), ..Default::default() };
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut usages: Vec<DeclUsage> = Vec::new();
+    let mut base_traces: Vec<(u64, Vec<(usize, usize)>)> = Vec::new();
+
+    let hard_cap = cfg.seeds.saturating_mul(8).max(cfg.seeds);
+    let mut seed = 0u64;
+    while seed < cfg.seeds || (seen.len() < cfg.min_distinct && seed < hard_cap) {
+        let id = ScheduleId::seed(seed);
+        let out = run_with_chooser(
+            scenario,
+            cfg.mutation,
+            ChoiceStream::base(seed),
+            &id,
+            cfg.max_rounds,
+        );
+        if seed < cfg.flip_bases {
+            base_traces.push((seed, out.trace.clone()));
+        }
+        absorb(&mut report, &mut seen, &mut usages, out);
+        seed += 1;
+    }
+
+    for (base_seed, trace) in &base_traces {
+        for (k, &(enabled, chosen)) in trace.iter().take(cfg.flip_depth).enumerate() {
+            for alt in 0..enabled {
+                if alt == chosen {
+                    continue;
+                }
+                let id = ScheduleId { base_seed: *base_seed, flip: Some((k, alt)) };
+                let out = run_with_chooser(
+                    scenario,
+                    cfg.mutation,
+                    ChoiceStream::flip(trace, k, alt, *base_seed),
+                    &id,
+                    cfg.max_rounds,
+                );
+                absorb(&mut report, &mut seen, &mut usages, out);
+            }
+        }
+    }
+
+    report.distinct_schedules = seen.len();
+    report.lint = lint_declarations(&usages);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scenarios;
+
+    #[test]
+    fn schedule_id_roundtrip() {
+        for id in [
+            ScheduleId::seed(0),
+            ScheduleId::seed(17),
+            ScheduleId { base_seed: 17, flip: Some((3, 1)) },
+        ] {
+            assert_eq!(ScheduleId::parse(&id.to_string()), Some(id));
+        }
+        assert_eq!(ScheduleId::parse("17"), None);
+        assert_eq!(ScheduleId::parse("S17~3"), None);
+    }
+
+    #[test]
+    fn single_schedule_runs_clean_on_transfers() {
+        let s = scenarios::by_name("transfers").unwrap();
+        let out = run_schedule(&s, &ScheduleId::seed(1), ProtocolMutation::None);
+        assert!(out.violation.is_none(), "{:?}\n{}", out.violation, out.history);
+        assert_eq!(out.committed + out.aborted, 3);
+        assert!(out.history.contains("final:"));
+    }
+
+    #[test]
+    fn flip_schedule_replays_deterministically() {
+        let s = scenarios::by_name("cascade").unwrap();
+        let id = ScheduleId { base_seed: 3, flip: Some((2, 0)) };
+        let a = run_schedule(&s, &id, ProtocolMutation::None);
+        let b = run_schedule(&s, &id, ProtocolMutation::None);
+        assert_eq!(a.history, b.history);
+        assert_eq!(a.fingerprint, b.fingerprint);
+    }
+}

@@ -1,0 +1,293 @@
+//! Declaration lint: declared suprema vs. recorded operation usage.
+//!
+//! The preamble's suprema drive everything in OptSVA-CF: the access
+//! condition, the release points, the commit condition. Mis-declaring
+//! them is therefore either *unsafe* or *slow*:
+//!
+//!   * **under-declared** — the body attempted more operations of a mode
+//!     than declared. The runtime catches the overflow
+//!     (`TxError::SupremaExceeded`) and aborts, so this is correctness-
+//!     adjacent: the transaction can never succeed.
+//!   * **over-declared** — the supremum is higher than the body ever
+//!     uses, so the object is released later than necessary and every
+//!     successor waits longer than it has to. Safe, but it surrenders
+//!     exactly the parallelism §3 is about.
+//!   * **unused** — declared but never touched: the successor chain on
+//!     that object serializes behind a transaction that does not need it
+//!     at all (the degenerate over-declaration).
+//!   * **unbounded** — `Suprema::unknown()` (no supremum): the object is
+//!     only released at commit, i.e. early release is disabled for it.
+//!
+//! Usage is aggregated across all explored schedules per (transaction
+//! tag, object): under-declaration is judged against the *maximum* usage
+//! seen anywhere; over-declaration only against schedules where the
+//! transaction committed (an aborted run may have stopped early, which
+//! proves nothing about the declaration).
+
+use crate::api::Suprema;
+use std::collections::BTreeMap;
+
+/// Observed per-mode usage of one declaration in one run.
+#[derive(Debug, Clone)]
+pub struct DeclUsage {
+    /// Transaction tag.
+    pub tag: String,
+    /// Declared object name.
+    pub object: String,
+    /// Declared suprema.
+    pub declared: Suprema,
+    /// Read operations attempted (counter value, may exceed the bound).
+    pub used_reads: u64,
+    /// Write operations attempted.
+    pub used_writes: u64,
+    /// Update operations attempted.
+    pub used_updates: u64,
+    /// Did this run of the transaction commit?
+    pub committed: bool,
+}
+
+/// What a lint diagnostic is about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintKind {
+    /// Usage exceeded the declared supremum (runtime-error territory).
+    UnderDeclared,
+    /// The declared supremum was never reached by any committed run.
+    OverDeclared,
+    /// Declared but never used in any run.
+    UnusedDeclaration,
+    /// Declared with no bound (`Suprema::unknown()`): early release off.
+    UnboundedSupremum,
+}
+
+impl LintKind {
+    /// Stable lint code (docs/ANALYSIS.md catalogue).
+    pub fn code(&self) -> &'static str {
+        match self {
+            LintKind::UnderDeclared => "under-declared",
+            LintKind::OverDeclared => "over-declared",
+            LintKind::UnusedDeclaration => "unused-declaration",
+            LintKind::UnboundedSupremum => "unbounded-supremum",
+        }
+    }
+}
+
+/// One structured lint diagnostic.
+#[derive(Debug, Clone)]
+pub struct LintDiagnostic {
+    /// Which lint fired.
+    pub kind: LintKind,
+    /// Transaction tag.
+    pub tag: String,
+    /// Object name.
+    pub object: String,
+    /// The mode concerned (`"read"`/`"write"`/`"update"`; `"*"` for
+    /// whole-declaration lints).
+    pub mode: &'static str,
+    /// The declared supremum for that mode (0 for whole-declaration
+    /// lints, `u64::MAX` for unbounded).
+    pub declared: u64,
+    /// Maximum observed usage relevant to the lint.
+    pub used: u64,
+}
+
+impl std::fmt::Display for LintDiagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            LintKind::UnderDeclared => write!(
+                f,
+                "[under-declared] tx {} on {}: attempted {} {} ops, declared supremum {} — \
+                 the transaction cannot succeed",
+                self.tag, self.object, self.used, self.mode, self.declared
+            ),
+            LintKind::OverDeclared => write!(
+                f,
+                "[over-declared] tx {} on {}: declared {} {} ops but committed runs use at \
+                 most {} — the object is released later than necessary (§3 parallelism bug)",
+                self.tag, self.object, self.declared, self.mode, self.used
+            ),
+            LintKind::UnusedDeclaration => write!(
+                f,
+                "[unused-declaration] tx {} declares {} but never touches it — successors \
+                 serialize behind it for nothing",
+                self.tag, self.object
+            ),
+            LintKind::UnboundedSupremum => write!(
+                f,
+                "[unbounded-supremum] tx {} on {}: no {} bound declared — early release is \
+                 disabled for this object",
+                self.tag, self.object, self.mode
+            ),
+        }
+    }
+}
+
+#[derive(Default)]
+struct Agg {
+    declared: Option<Suprema>,
+    max_used: [u64; 3],
+    max_used_committed: [u64; 3],
+    any_committed: bool,
+    any_used: bool,
+}
+
+const MODES: [&str; 3] = ["read", "write", "update"];
+
+fn per_mode(s: &Suprema) -> [u64; 3] {
+    [s.reads, s.writes, s.updates]
+}
+
+/// Aggregate usage records and produce the lint diagnostics, in a stable
+/// (tag, object, mode) order.
+pub fn lint_declarations(usages: &[DeclUsage]) -> Vec<LintDiagnostic> {
+    let mut aggs: BTreeMap<(String, String), Agg> = BTreeMap::new();
+    for u in usages {
+        let agg = aggs.entry((u.tag.clone(), u.object.clone())).or_default();
+        agg.declared.get_or_insert(u.declared);
+        let used = [u.used_reads, u.used_writes, u.used_updates];
+        for m in 0..3 {
+            agg.max_used[m] = agg.max_used[m].max(used[m]);
+            if u.committed {
+                agg.max_used_committed[m] = agg.max_used_committed[m].max(used[m]);
+            }
+        }
+        agg.any_committed |= u.committed;
+        agg.any_used |= used.iter().any(|&c| c > 0);
+    }
+
+    let mut out = Vec::new();
+    for ((tag, object), agg) in &aggs {
+        let declared = per_mode(&agg.declared.expect("aggregate has a declaration"));
+        if !agg.any_used {
+            out.push(LintDiagnostic {
+                kind: LintKind::UnusedDeclaration,
+                tag: tag.clone(),
+                object: object.clone(),
+                mode: "*",
+                declared: 0,
+                used: 0,
+            });
+        }
+        for m in 0..3 {
+            if declared[m] == u64::MAX {
+                out.push(LintDiagnostic {
+                    kind: LintKind::UnboundedSupremum,
+                    tag: tag.clone(),
+                    object: object.clone(),
+                    mode: MODES[m],
+                    declared: u64::MAX,
+                    used: agg.max_used[m],
+                });
+                continue;
+            }
+            if agg.max_used[m] > declared[m] {
+                out.push(LintDiagnostic {
+                    kind: LintKind::UnderDeclared,
+                    tag: tag.clone(),
+                    object: object.clone(),
+                    mode: MODES[m],
+                    declared: declared[m],
+                    used: agg.max_used[m],
+                });
+            } else if agg.any_committed
+                && agg.any_used
+                && declared[m] > 0
+                && agg.max_used_committed[m] > 0
+                && agg.max_used_committed[m] < declared[m]
+            {
+                out.push(LintDiagnostic {
+                    kind: LintKind::OverDeclared,
+                    tag: tag.clone(),
+                    object: object.clone(),
+                    mode: MODES[m],
+                    declared: declared[m],
+                    used: agg.max_used_committed[m],
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn usage(
+        tag: &str,
+        object: &str,
+        declared: Suprema,
+        used: (u64, u64, u64),
+        committed: bool,
+    ) -> DeclUsage {
+        DeclUsage {
+            tag: tag.into(),
+            object: object.into(),
+            declared,
+            used_reads: used.0,
+            used_writes: used.1,
+            used_updates: used.2,
+            committed,
+        }
+    }
+
+    fn kinds_for(diags: &[LintDiagnostic], tag: &str, object: &str) -> Vec<LintKind> {
+        diags
+            .iter()
+            .filter(|d| d.tag == tag && d.object == object)
+            .map(|d| d.kind)
+            .collect()
+    }
+
+    #[test]
+    fn exact_declaration_is_clean() {
+        let diags =
+            lint_declarations(&[usage("t", "a", Suprema::new(1, 0, 1), (1, 0, 1), true)]);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn under_declaration_is_flagged_even_on_aborted_runs() {
+        let diags = lint_declarations(&[usage("t", "a", Suprema::updates(1), (0, 0, 2), false)]);
+        assert_eq!(kinds_for(&diags, "t", "a"), vec![LintKind::UnderDeclared]);
+    }
+
+    #[test]
+    fn over_declaration_needs_a_committed_run() {
+        // Only aborted runs: usage proves nothing, no over-declaration.
+        let aborted = lint_declarations(&[usage("t", "a", Suprema::updates(5), (0, 0, 1), false)]);
+        assert!(aborted.is_empty(), "{aborted:?}");
+        // A committed run that never gets past 2 of 5: flagged.
+        let diags = lint_declarations(&[
+            usage("t", "a", Suprema::updates(5), (0, 0, 1), false),
+            usage("t", "a", Suprema::updates(5), (0, 0, 2), true),
+        ]);
+        assert_eq!(kinds_for(&diags, "t", "a"), vec![LintKind::OverDeclared]);
+        assert_eq!(diags[0].used, 2);
+    }
+
+    #[test]
+    fn max_usage_across_runs_suppresses_over_declaration() {
+        let diags = lint_declarations(&[
+            usage("t", "a", Suprema::updates(2), (0, 0, 1), true),
+            usage("t", "a", Suprema::updates(2), (0, 0, 2), true),
+        ]);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn unused_and_unbounded_are_flagged() {
+        let diags = lint_declarations(&[usage("t", "b", Suprema::unknown(), (0, 0, 0), true)]);
+        let kinds = kinds_for(&diags, "t", "b");
+        assert!(kinds.contains(&LintKind::UnusedDeclaration), "{diags:?}");
+        assert!(kinds.contains(&LintKind::UnboundedSupremum), "{diags:?}");
+        // Unbounded modes must not additionally read as over-declared.
+        assert!(!kinds.contains(&LintKind::OverDeclared));
+    }
+
+    #[test]
+    fn diagnostics_render() {
+        let diags = lint_declarations(&[usage("t2", "a", Suprema::updates(1), (0, 0, 2), false)]);
+        let msg = diags[0].to_string();
+        assert!(msg.contains("under-declared") && msg.contains("t2"), "{msg}");
+    }
+}

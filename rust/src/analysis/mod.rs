@@ -1,0 +1,29 @@
+//! Schedule exploration and static analysis for OptSVA-CF
+//! (`atomic-rmi2 check`).
+//!
+//! Three coordinated parts (see `docs/ANALYSIS.md`):
+//!
+//!   * [`explorer`] — a controlled-scheduler harness that runs small
+//!     multi-transaction [`scenarios`] under hundreds of seed-derived
+//!     schedules (plus depth-bounded delivery-order flips), entirely
+//!     deterministic on one thread over virtual time;
+//!   * the history checkers in [`crate::checker`] — every explored
+//!     schedule's full history is checked for last-use opacity, and
+//!     stuck schedules are explained by a wait-for-graph;
+//!   * [`lint`] — a static pass over declared suprema vs. recorded
+//!     usage, flagging under-declared (unsafe), over-declared
+//!     (serializing), unused, and unbounded declarations.
+//!
+//! Violations are reported with a replayable [`explorer::ScheduleId`];
+//! the harness validates itself by catching seeded protocol mutations
+//! ([`crate::optsva::ProtocolMutation`]) within the seed budget.
+
+pub mod explorer;
+pub mod lint;
+pub mod scenarios;
+
+pub use explorer::{
+    explore, run_schedule, ExploreConfig, ExploreReport, RunOutcome, ScheduleId, Violation,
+};
+pub use lint::{lint_declarations, DeclUsage, LintDiagnostic, LintKind};
+pub use scenarios::{ObjectSpec, Scenario, TxEnd, TxScript};

@@ -1,0 +1,272 @@
+//! Built-in explorer scenarios: small multi-transaction programs (2–4
+//! transactions over 2–3 objects) distilled from the paper_scenarios and
+//! consistency suites, shaped so that the interesting OptSVA-CF machinery
+//! — early release at suprema (§2.8.3), read-only asynchronous buffering
+//! (§2.8.1), pure-write log buffers (§2.8.4, Fig 5), cascading aborts
+//! (§2.7) — all fire under at least some interleavings.
+//!
+//! Scenario scripts must be valid under *any* private-version order: the
+//! explorer schedules `begin` as an ordinary action, so any transaction
+//! may acquire its versions first.
+
+use crate::api::Suprema;
+use crate::object::account::ops;
+use crate::object::OpCall;
+
+/// One shared object a scenario hosts: an [`crate::object::Account`] with
+/// a starting balance.
+#[derive(Debug, Clone)]
+pub struct ObjectSpec {
+    /// Registry name.
+    pub name: &'static str,
+    /// Home node index.
+    pub node: u16,
+    /// Initial account balance.
+    pub initial: i64,
+}
+
+/// How a transaction script ends (after its last operation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TxEnd {
+    /// Commit (may still be forced to abort by a cascade).
+    Commit,
+    /// Voluntary abort — the trigger for §2.7 cascades.
+    Abort,
+}
+
+/// A scripted transaction: declarations, operations in program order
+/// (each referencing a declaration by index), and how it ends.
+#[derive(Debug, Clone)]
+pub struct TxScript {
+    /// Tag for histories and diagnostics.
+    pub tag: &'static str,
+    /// The preamble: (object name, suprema) per declared object.
+    pub decls: Vec<(&'static str, Suprema)>,
+    /// Operations in program order: (declaration index, call).
+    pub steps: Vec<(usize, OpCall)>,
+    /// Terminal action.
+    pub end: TxEnd,
+}
+
+/// A complete explorer scenario.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Scenario name (CLI `--scenario`).
+    pub name: &'static str,
+    /// One-line description for reports.
+    pub description: &'static str,
+    /// Hosted objects.
+    pub objects: Vec<ObjectSpec>,
+    /// Scripted transactions.
+    pub txs: Vec<TxScript>,
+}
+
+impl Scenario {
+    /// Number of cluster nodes the scenario needs.
+    pub fn nodes(&self) -> u16 {
+        self.objects.iter().map(|o| o.node + 1).max().unwrap_or(1)
+    }
+}
+
+/// Cross-transfers with a read-only auditor: the bread-and-butter bank
+/// workload (consistency suite shape). Exercises early release after the
+/// last update and §2.8.1 read-only buffering (the auditor).
+fn transfers() -> Scenario {
+    Scenario {
+        name: "transfers",
+        description: "two cross transfers + read-only auditor",
+        objects: vec![
+            ObjectSpec { name: "a", node: 0, initial: 100 },
+            ObjectSpec { name: "b", node: 1, initial: 100 },
+        ],
+        txs: vec![
+            TxScript {
+                tag: "t0",
+                decls: vec![("a", Suprema::new(1, 0, 1)), ("b", Suprema::updates(1))],
+                steps: vec![
+                    (0, ops::withdraw(30)),
+                    (1, ops::deposit(30)),
+                    (0, ops::balance()),
+                ],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t1",
+                decls: vec![("b", Suprema::new(1, 0, 1)), ("a", Suprema::updates(1))],
+                steps: vec![
+                    (0, ops::withdraw(10)),
+                    (1, ops::deposit(10)),
+                    (0, ops::balance()),
+                ],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t2",
+                decls: vec![("a", Suprema::reads(1)), ("b", Suprema::reads(1))],
+                steps: vec![(0, ops::balance()), (1, ops::balance())],
+                end: TxEnd::Commit,
+            },
+        ],
+    }
+}
+
+/// A voluntary abort after an early release: under schedules where the
+/// reader consumes the early-released state before the rollback, the
+/// §2.7 cascade must doom the reader (and its own reader, transitively).
+/// This is the scenario that catches the `skip-invalidation` mutation.
+fn cascade() -> Scenario {
+    Scenario {
+        name: "cascade",
+        description: "early release + voluntary abort -> cascade",
+        objects: vec![
+            ObjectSpec { name: "a", node: 0, initial: 100 },
+            ObjectSpec { name: "b", node: 1, initial: 100 },
+        ],
+        txs: vec![
+            TxScript {
+                tag: "t0",
+                decls: vec![("a", Suprema::updates(1))],
+                steps: vec![(0, ops::deposit(900))],
+                end: TxEnd::Abort,
+            },
+            TxScript {
+                tag: "t1",
+                decls: vec![("a", Suprema::reads(1)), ("b", Suprema::updates(1))],
+                steps: vec![(0, ops::balance()), (1, ops::deposit(5))],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t2",
+                decls: vec![("a", Suprema::reads(1)), ("b", Suprema::reads(1))],
+                steps: vec![(0, ops::balance()), (1, ops::balance())],
+                end: TxEnd::Commit,
+            },
+        ],
+    }
+}
+
+/// Update-heavy contention on one object plus a pure-write object: the
+/// copy-buffer (stale-read) and log-buffer (Fig 5 asynchronous apply +
+/// release) paths. This is the scenario that catches the
+/// `premature-release` mutation: releasing `a` one update early leaves
+/// `t0`'s copy buffer stale, so its later read diverges from any
+/// committed-order replay.
+fn async_buffering() -> Scenario {
+    Scenario {
+        name: "async_buffering",
+        description: "copy/log buffer asynchrony under update contention",
+        objects: vec![
+            ObjectSpec { name: "a", node: 0, initial: 10 },
+            ObjectSpec { name: "b", node: 1, initial: 0 },
+        ],
+        txs: vec![
+            TxScript {
+                tag: "t0",
+                decls: vec![("a", Suprema::new(1, 0, 2))],
+                steps: vec![
+                    (0, ops::deposit(5)),
+                    (0, ops::deposit(7)),
+                    (0, ops::balance()),
+                ],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t1",
+                decls: vec![("a", Suprema::new(1, 0, 1))],
+                steps: vec![(0, ops::deposit(100)), (0, ops::balance())],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t2",
+                decls: vec![("b", Suprema::new(1, 1, 0))],
+                steps: vec![(0, ops::reset()), (0, ops::balance())],
+                end: TxEnd::Commit,
+            },
+        ],
+    }
+}
+
+/// Deliberately mis-declared preambles for the declaration lint: an
+/// over-declared updater (serializes for nothing, §3), an unused +
+/// unbounded declaration, and an under-declared updater that trips the
+/// runtime supremum check. The runs themselves stay opaque — the lint
+/// diagnostics are warnings, not violations.
+fn lint_demo() -> Scenario {
+    Scenario {
+        name: "lint_demo",
+        description: "declaration lint showcase (over/under/unused/unbounded)",
+        objects: vec![
+            ObjectSpec { name: "a", node: 0, initial: 50 },
+            ObjectSpec { name: "b", node: 1, initial: 50 },
+        ],
+        txs: vec![
+            TxScript {
+                tag: "t0",
+                decls: vec![("a", Suprema::updates(5))],
+                steps: vec![(0, ops::deposit(1)), (0, ops::deposit(2))],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t1",
+                decls: vec![("a", Suprema::reads(2)), ("b", Suprema::unknown())],
+                steps: vec![(0, ops::balance())],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t2",
+                decls: vec![("a", Suprema::updates(1))],
+                steps: vec![(0, ops::deposit(3)), (0, ops::deposit(4))],
+                end: TxEnd::Commit,
+            },
+        ],
+    }
+}
+
+/// Every built-in scenario, in a stable order.
+pub fn builtin() -> Vec<Scenario> {
+    vec![transfers(), cascade(), async_buffering(), lint_demo()]
+}
+
+/// Look up a built-in scenario by name.
+pub fn by_name(name: &str) -> Option<Scenario> {
+    builtin().into_iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_scenarios_are_well_formed() {
+        let all = builtin();
+        assert_eq!(all.len(), 4);
+        for s in &all {
+            assert!(s.nodes() >= 1);
+            assert!(!s.txs.is_empty());
+            for tx in &s.txs {
+                for (decl_idx, _) in &tx.steps {
+                    assert!(
+                        *decl_idx < tx.decls.len(),
+                        "{}.{}: step references undeclared handle",
+                        s.name,
+                        tx.tag
+                    );
+                }
+                for (name, _) in &tx.decls {
+                    assert!(
+                        s.objects.iter().any(|o| o.name == *name),
+                        "{}.{}: declaration of unhosted object {name}",
+                        s.name,
+                        tx.tag
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("cascade").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -12,6 +12,14 @@
 //! Used by the integration and property tests; exposed publicly so
 //! downstream users can check their own workloads.
 
+pub mod opacity;
+pub mod waitgraph;
+
+pub use opacity::{
+    check_last_use_opacity, FinalProbe, HistoryTx, OpacityStats, OpacityViolation, TxOutcome,
+};
+pub use waitgraph::{WaitEdge, WaitGraph};
+
 use crate::object::{OpCall, SharedObject, Value};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};

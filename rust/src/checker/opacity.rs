@@ -1,0 +1,353 @@
+//! Last-use opacity checking over full (committed + aborted) histories.
+//!
+//! Last-use opacity (§2.10.1) permits a transaction to read another's
+//! writes *after the writer's last use* of the object (early release) —
+//! but only if the writer then commits. Concretely, over a recorded
+//! history this means:
+//!
+//!   1. every value observed by a **committed** transaction must be
+//!      explained by the serial replay of committed transactions in
+//!      commit-completion order (reads come from a committed-or-
+//!      will-commit writer at or before its last use), and
+//!   2. writes of **aborted** transactions must never leak: the live
+//!      system's final object states must equal the committed-only
+//!      replay's final states (an aborted write that escaped past early
+//!      release and survived rollback shows up here, as does a consumed
+//!      dirty read that was laundered into a committed write).
+//!
+//! Both checks run against the same replay, so a single pass over a
+//! history decides last-use opacity for the observable behaviours the
+//! recorded operations and final-state probes can distinguish.
+
+use crate::object::{OpCall, SharedObject, Value};
+use std::collections::BTreeMap;
+
+use super::{OpRecord, TxRecord};
+
+/// How a transaction in a recorded history ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TxOutcome {
+    /// Commit completed; `seq` is the global commit-completion sequence.
+    Committed {
+        /// Global commit-completion sequence number.
+        seq: u64,
+    },
+    /// The transaction aborted (voluntarily or by cascade/force).
+    Aborted {
+        /// Human-readable abort reason for diagnostics.
+        reason: String,
+    },
+}
+
+/// One transaction's observations in a full history — unlike
+/// [`TxRecord`], aborted transactions are first-class here because
+/// last-use opacity constrains them too.
+#[derive(Debug, Clone)]
+pub struct HistoryTx {
+    /// Client-chosen tag for diagnostics.
+    pub tag: String,
+    /// Operations in program order with observed results.
+    pub ops: Vec<OpRecord>,
+    /// Commit or abort.
+    pub outcome: TxOutcome,
+}
+
+impl HistoryTx {
+    /// The commit sequence, if committed.
+    pub fn commit_seq(&self) -> Option<u64> {
+        match self.outcome {
+            TxOutcome::Committed { seq } => Some(seq),
+            TxOutcome::Aborted { .. } => None,
+        }
+    }
+}
+
+/// A read of the live system's final state: invoke `call` on `object`
+/// after all transactions are done and record what came back. The
+/// checker repeats the probe against the committed-only replay.
+#[derive(Debug, Clone)]
+pub struct FinalProbe {
+    /// Registry name of the probed object.
+    pub object: String,
+    /// The probing invocation (a read-mode method).
+    pub call: OpCall,
+    /// What the live system returned.
+    pub live: Value,
+}
+
+/// Counts from a successful opacity check.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpacityStats {
+    /// Committed transactions replayed.
+    pub committed: usize,
+    /// Aborted transactions in the history (constrain final state only).
+    pub aborted: usize,
+    /// Operation results compared against the replay.
+    pub ops_verified: u64,
+    /// Final-state probes compared.
+    pub probes_verified: usize,
+}
+
+/// A last-use-opacity violation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpacityViolation {
+    /// A committed transaction observed a value no committed-order serial
+    /// replay explains — a read served from an aborted writer's leaked
+    /// state, or from a committed writer out of commit order.
+    InconsistentRead {
+        /// Tag of the observing transaction.
+        tag: String,
+        /// Index of the operation within the transaction.
+        index: usize,
+        /// Registry name of the object.
+        object: String,
+        /// What the live run observed.
+        live: String,
+        /// What the committed-only replay produced.
+        replayed: String,
+    },
+    /// The live final state differs from the committed-only replay —
+    /// an aborted transaction's write leaked past early release and
+    /// survived rollback (or a committed write was lost).
+    AbortedWriteLeak {
+        /// Registry name of the object.
+        object: String,
+        /// The probe method used.
+        probe: String,
+        /// Final value observed on the live system.
+        live: String,
+        /// Final value after committed-only replay.
+        replayed: String,
+    },
+    /// A record references an object the checker was not given.
+    UnknownObject {
+        /// Tag of the referencing transaction (or `"<probe>"`).
+        tag: String,
+        /// The unknown object's name.
+        object: String,
+    },
+    /// Replaying a recorded call failed outright.
+    ReplayFailed {
+        /// Registry name of the object.
+        object: String,
+        /// The object-level error.
+        error: String,
+    },
+}
+
+impl std::fmt::Display for OpacityViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpacityViolation::InconsistentRead { tag, index, object, live, replayed } => write!(
+                f,
+                "inconsistent read: tx {tag} op #{index} on {object} observed {live}, \
+                 committed-order replay says {replayed}"
+            ),
+            OpacityViolation::AbortedWriteLeak { object, probe, live, replayed } => write!(
+                f,
+                "aborted-write leak: final {probe} on {object} is {live} live but {replayed} \
+                 after committed-only replay"
+            ),
+            OpacityViolation::UnknownObject { tag, object } => {
+                write!(f, "tx {tag} references unknown object {object}")
+            }
+            OpacityViolation::ReplayFailed { object, error } => {
+                write!(f, "replay error on {object}: {error}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for OpacityViolation {}
+
+/// Check last-use opacity of a full history against `initial` object
+/// states and final-state `probes` taken on the live system.
+pub fn check_last_use_opacity(
+    initial: BTreeMap<String, Box<dyn SharedObject>>,
+    history: &[HistoryTx],
+    probes: &[FinalProbe],
+) -> Result<OpacityStats, OpacityViolation> {
+    let mut objects = initial;
+    let mut stats = OpacityStats::default();
+
+    let mut committed: Vec<&HistoryTx> =
+        history.iter().filter(|t| t.commit_seq().is_some()).collect();
+    committed.sort_by_key(|t| t.commit_seq());
+    stats.committed = committed.len();
+    stats.aborted = history.len() - committed.len();
+
+    for tx in committed {
+        for (i, op) in tx.ops.iter().enumerate() {
+            let obj = objects
+                .get_mut(&op.object)
+                .ok_or_else(|| OpacityViolation::UnknownObject {
+                    tag: tx.tag.clone(),
+                    object: op.object.clone(),
+                })?;
+            let replayed =
+                obj.invoke(&op.call)
+                    .map_err(|e| OpacityViolation::ReplayFailed {
+                        object: op.object.clone(),
+                        error: e.to_string(),
+                    })?;
+            if replayed != op.result {
+                return Err(OpacityViolation::InconsistentRead {
+                    tag: tx.tag.clone(),
+                    index: i,
+                    object: op.object.clone(),
+                    live: op.result.to_string(),
+                    replayed: replayed.to_string(),
+                });
+            }
+            stats.ops_verified += 1;
+        }
+    }
+
+    for probe in probes {
+        let obj = objects
+            .get_mut(&probe.object)
+            .ok_or_else(|| OpacityViolation::UnknownObject {
+                tag: "<probe>".into(),
+                object: probe.object.clone(),
+            })?;
+        let replayed = obj
+            .invoke(&probe.call)
+            .map_err(|e| OpacityViolation::ReplayFailed {
+                object: probe.object.clone(),
+                error: e.to_string(),
+            })?;
+        if replayed != probe.live {
+            return Err(OpacityViolation::AbortedWriteLeak {
+                object: probe.object.clone(),
+                probe: probe.call.method.to_string(),
+                live: probe.live.to_string(),
+                replayed: replayed.to_string(),
+            });
+        }
+        stats.probes_verified += 1;
+    }
+
+    Ok(stats)
+}
+
+/// Adapt a full history's committed transactions into [`TxRecord`]s for
+/// the plain serializability checker.
+pub fn committed_records(history: &[HistoryTx]) -> Vec<TxRecord> {
+    history
+        .iter()
+        .filter_map(|t| {
+            t.commit_seq().map(|seq| TxRecord {
+                tag: t.tag.clone(),
+                ops: t.ops.clone(),
+                commit_seq: seq,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::object::{account::ops, Account};
+
+    fn acct(v: i64) -> Box<dyn SharedObject> {
+        Box::new(Account::with_balance(v))
+    }
+
+    fn rec(object: &str, call: OpCall, result: Value) -> OpRecord {
+        OpRecord { object: object.into(), call, result }
+    }
+
+    #[test]
+    fn clean_history_passes() {
+        let history = vec![
+            HistoryTx {
+                tag: "t0".into(),
+                ops: vec![
+                    rec("a", ops::deposit(10), Value::Unit),
+                    rec("a", ops::balance(), Value::Int(110)),
+                ],
+                outcome: TxOutcome::Committed { seq: 0 },
+            },
+            HistoryTx {
+                tag: "t1".into(),
+                ops: vec![rec("a", ops::deposit(500), Value::Unit)],
+                outcome: TxOutcome::Aborted { reason: "voluntary".into() },
+            },
+        ];
+        let probes = vec![FinalProbe {
+            object: "a".into(),
+            call: ops::balance(),
+            live: Value::Int(110),
+        }];
+        let mut init = BTreeMap::new();
+        init.insert("a".to_string(), acct(100));
+        let stats = check_last_use_opacity(init, &history, &probes).unwrap();
+        assert_eq!(stats.committed, 1);
+        assert_eq!(stats.aborted, 1);
+        assert_eq!(stats.ops_verified, 2);
+        assert_eq!(stats.probes_verified, 1);
+    }
+
+    #[test]
+    fn dirty_read_from_aborted_writer_is_caught() {
+        // t1 aborted after deposit(500); t0 committed having read 600 —
+        // a value only explainable by the aborted write.
+        let history = vec![
+            HistoryTx {
+                tag: "t1".into(),
+                ops: vec![rec("a", ops::deposit(500), Value::Unit)],
+                outcome: TxOutcome::Aborted { reason: "voluntary".into() },
+            },
+            HistoryTx {
+                tag: "t0".into(),
+                ops: vec![rec("a", ops::balance(), Value::Int(600))],
+                outcome: TxOutcome::Committed { seq: 0 },
+            },
+        ];
+        let mut init = BTreeMap::new();
+        init.insert("a".to_string(), acct(100));
+        let err = check_last_use_opacity(init, &history, &[]).unwrap_err();
+        assert!(matches!(err, OpacityViolation::InconsistentRead { .. }), "{err}");
+    }
+
+    #[test]
+    fn aborted_write_leak_in_final_state_is_caught() {
+        // No committed tx touched `a`, yet the live final balance shows
+        // the aborted deposit: rollback failed to restore.
+        let history = vec![HistoryTx {
+            tag: "t1".into(),
+            ops: vec![rec("a", ops::deposit(500), Value::Unit)],
+            outcome: TxOutcome::Aborted { reason: "forced".into() },
+        }];
+        let probes = vec![FinalProbe {
+            object: "a".into(),
+            call: ops::balance(),
+            live: Value::Int(600),
+        }];
+        let mut init = BTreeMap::new();
+        init.insert("a".to_string(), acct(100));
+        let err = check_last_use_opacity(init, &history, &probes).unwrap_err();
+        assert!(matches!(err, OpacityViolation::AbortedWriteLeak { .. }), "{err}");
+    }
+
+    #[test]
+    fn committed_records_adapter_drops_aborts() {
+        let history = vec![
+            HistoryTx {
+                tag: "c".into(),
+                ops: vec![],
+                outcome: TxOutcome::Committed { seq: 3 },
+            },
+            HistoryTx {
+                tag: "a".into(),
+                ops: vec![],
+                outcome: TxOutcome::Aborted { reason: "x".into() },
+            },
+        ];
+        let recs = committed_records(&history);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].tag, "c");
+        assert_eq!(recs[0].commit_seq, 3);
+    }
+}

@@ -174,6 +174,22 @@ impl Executor {
         exec
     }
 
+    /// A threadless executor for the schedule explorer (`analysis::`).
+    ///
+    /// No loop thread is spawned: queued tasks run only when the explorer
+    /// explicitly picks one via [`Executor::run_ready`]. That turns each
+    /// asynchronous buffering/release task into a first-class scheduling
+    /// decision — the "deliverable message" of the permutation — instead
+    /// of something the OS thread scheduler fires at an arbitrary moment.
+    /// [`Executor::shutdown`] works unchanged (there is no thread to join).
+    pub fn manual() -> Arc<Executor> {
+        Arc::new(Executor {
+            signal: Arc::new(Signal::new()),
+            state: Mutex::new(ExecutorState { queue: Vec::new(), shutdown: false }),
+            thread: Mutex::new(None),
+        })
+    }
+
     /// The signal that `ObjectCc::watch` should be given for every object
     /// hosted on this executor's node.
     pub fn signal(&self) -> Arc<Signal> {
@@ -217,6 +233,45 @@ impl Executor {
     /// Number of queued (not yet run) tasks.
     pub fn pending(&self) -> usize {
         self.state.lock().unwrap().queue.len()
+    }
+
+    /// Number of queued tasks whose condition currently holds (manual
+    /// mode: how many executor actions the explorer may schedule now).
+    pub fn ready_count(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.queue.iter().filter(|t| (t.cond)()).count()
+    }
+
+    /// Run the `n`-th currently-ready task (0-based, in submission order
+    /// over ready tasks only). Returns `false` if fewer than `n + 1`
+    /// tasks are ready. Manual mode's analogue of one `run_loop` firing:
+    /// the action runs on the calling thread, outside the queue lock.
+    pub fn run_ready(&self, n: usize) -> bool {
+        let picked = {
+            let mut st = self.state.lock().unwrap();
+            let mut ready_seen = 0usize;
+            let pos = st.queue.iter().position(|t| {
+                if (t.cond)() {
+                    let hit = ready_seen == n;
+                    ready_seen += 1;
+                    hit
+                } else {
+                    false
+                }
+            });
+            pos.map(|i| {
+                let mut t = st.queue.remove(i);
+                (t.action.take().unwrap(), t.handle.clone())
+            })
+        };
+        match picked {
+            Some((action, handle)) => {
+                action();
+                handle.complete();
+                true
+            }
+            None => false,
+        }
     }
 
     fn run_loop(&self) {
@@ -359,6 +414,40 @@ mod tests {
         assert_eq!(s.generation(), g + 1);
         let waited = s.wait_past(g, Duration::from_millis(10));
         assert!(waited > g);
+    }
+
+    #[test]
+    fn manual_executor_runs_tasks_only_on_request() {
+        let ex = Executor::manual();
+        let ran = Arc::new(AtomicU64::new(0));
+        let (r1, r2) = (Arc::clone(&ran), Arc::clone(&ran));
+        let gate = Arc::new(AtomicBool::new(false));
+        let g = Arc::clone(&gate);
+        let h1 = ex.submit(
+            || true,
+            move || {
+                r1.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+        let h2 = ex.submit(
+            move || g.load(Ordering::SeqCst),
+            move || {
+                r2.fetch_add(10, Ordering::SeqCst);
+            },
+        );
+        assert_eq!(ex.pending(), 2);
+        assert_eq!(ex.ready_count(), 1, "gated task must not count as ready");
+        assert!(!h1.is_done(), "no thread: nothing runs until run_ready");
+        assert!(ex.run_ready(0));
+        assert!(h1.is_done());
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+        assert!(!ex.run_ready(0), "only ready tasks are schedulable");
+        gate.store(true, Ordering::SeqCst);
+        assert_eq!(ex.ready_count(), 1);
+        assert!(ex.run_ready(0));
+        assert!(h2.is_done());
+        assert_eq!(ran.load(Ordering::SeqCst), 11);
+        ex.shutdown();
     }
 
     #[test]

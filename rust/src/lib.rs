@@ -32,6 +32,9 @@
 //!   scenario configuration, safety checking, fault injection;
 //! * [`bench`] — machine-readable `BENCH_*.json` reports and the CI
 //!   regression gate (see `docs/BENCHMARKS.md`);
+//! * [`analysis`] — deterministic schedule exploration, last-use-opacity
+//!   checking over explored histories, and the declaration lint behind
+//!   `atomic-rmi2 check` (see `docs/ANALYSIS.md`);
 //! * [`runtime`] — PJRT/XLA loader executing the AOT-compiled Pallas
 //!   kernel used by `object::ComputeObject` (CF compute delegation).
 //!
@@ -40,6 +43,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod api;
 pub mod bench;
 pub mod checker;

@@ -3,21 +3,26 @@
 //! ```text
 //! atomic-rmi2 eigenbench [--config FILE] [--framework F] [--nodes N] …
 //! atomic-rmi2 sweep fig10|fig11|fig12|fig13 [--quick] [--csv]
+//! atomic-rmi2 check [--scenario NAME] [--mutation M] [--schedule SID] …
 //! atomic-rmi2 demo
 //! atomic-rmi2 list-frameworks
 //! ```
 //!
 //! `eigenbench` runs one scenario (file options overridden by CLI flags);
 //! `sweep` regenerates a paper figure (tables on stdout, raw CSV and
-//! `BENCH_*.json` under `target/bench-results/`); `demo` runs the Fig 9
-//! bank transfer; `bench-gate` compares a fresh `BENCH_*.json` against a
-//! committed baseline and exits non-zero on regression (the CI gate —
-//! see `docs/BENCHMARKS.md`).
+//! `BENCH_*.json` under `target/bench-results/`); `check` explores
+//! transaction schedules deterministically and checks every history for
+//! last-use opacity and deadlock-freedom (see `docs/ANALYSIS.md`); `demo`
+//! runs the Fig 9 bank transfer; `bench-gate` compares a fresh
+//! `BENCH_*.json` against a committed baseline and exits non-zero on
+//! regression (the CI gate — see `docs/BENCHMARKS.md`).
 
+use atomic_rmi2::analysis::{self, ExploreConfig, ScheduleId};
 use atomic_rmi2::bench::{gate, BenchReport};
 use atomic_rmi2::config::{CliArgs, KvConfig};
 use atomic_rmi2::metrics::fmt_throughput;
 use atomic_rmi2::object::{Account, AccountRef};
+use atomic_rmi2::optsva::ProtocolMutation;
 use atomic_rmi2::workload::sweeps::{self, Scale};
 use atomic_rmi2::workload::{run_eigenbench, FrameworkKind, ALL_FRAMEWORKS};
 use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx};
@@ -32,6 +37,10 @@ USAGE:
               [--hot_ops H] [--mild_ops M] [--txns_per_client T]
               [--op_delay_us U] [--irrevocable true] [--seed S]
   atomic-rmi2 sweep fig10|fig11|fig12|fig13|all [--quick]
+  atomic-rmi2 check [--scenario NAME] [--seeds N] [--flip-depth D]
+              [--flip-bases B] [--min-distinct K]
+              [--mutation none|premature-release|skip-invalidation]
+              [--schedule SID] [--expect-violation]
   atomic-rmi2 bench-gate FRESH.json BASELINE.json [--tolerance 0.20]
   atomic-rmi2 demo
   atomic-rmi2 list-frameworks
@@ -45,6 +54,7 @@ fn main() {
     match args.positional.first().map(String::as_str) {
         Some("eigenbench") => eigenbench(&args),
         Some("sweep") => sweep(&args),
+        Some("check") => check(&args),
         Some("bench-gate") => bench_gate(&args),
         Some("demo") => demo(),
         Some("list-frameworks") => {
@@ -156,6 +166,159 @@ fn report_results(name: &str, scale: Scale, results: &[atomic_rmi2::workload::Ei
     }
 }
 
+fn parse_num<T: std::str::FromStr>(args: &CliArgs, key: &str, default: T) -> T {
+    match args.option(key) {
+        None => default,
+        Some(s) => match s.parse() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!("check: --{key} must be a number, got {s:?}");
+                std::process::exit(2);
+            }
+        },
+    }
+}
+
+fn check(args: &CliArgs) {
+    let mutation = match args.option("mutation") {
+        None => ProtocolMutation::None,
+        Some(m) => match ProtocolMutation::parse(m) {
+            Some(m) => m,
+            None => {
+                eprintln!(
+                    "check: unknown --mutation {m:?}; use none|premature-release|skip-invalidation"
+                );
+                std::process::exit(2);
+            }
+        },
+    };
+    let cfg = ExploreConfig {
+        seeds: parse_num(args, "seeds", ExploreConfig::default().seeds),
+        flip_depth: parse_num(args, "flip-depth", ExploreConfig::default().flip_depth),
+        flip_bases: parse_num(args, "flip-bases", ExploreConfig::default().flip_bases),
+        min_distinct: parse_num(args, "min-distinct", ExploreConfig::default().min_distinct),
+        max_rounds: parse_num(args, "max-rounds", ExploreConfig::default().max_rounds),
+        mutation,
+    };
+    let expect_violation = args.flag("expect-violation");
+    let scenarios: Vec<analysis::Scenario> = match args.option("scenario") {
+        None => analysis::scenarios::builtin(),
+        Some(name) => match analysis::scenarios::by_name(name) {
+            Some(s) => vec![s],
+            None => {
+                let names: Vec<&str> =
+                    analysis::scenarios::builtin().iter().map(|s| s.name).collect();
+                eprintln!("check: unknown scenario {name:?}; one of: {}", names.join(", "));
+                std::process::exit(2);
+            }
+        },
+    };
+
+    // Single-schedule replay mode: run the named schedule, dump its
+    // history, and report the checker verdict for exactly that run.
+    if let Some(sid) = args.option("schedule") {
+        let Some(id) = ScheduleId::parse(sid) else {
+            eprintln!("check: bad --schedule {sid:?}; expected S<seed> or S<seed>~<k>.<a>");
+            std::process::exit(2);
+        };
+        if scenarios.len() != 1 {
+            eprintln!("check: --schedule needs an explicit --scenario");
+            std::process::exit(2);
+        }
+        let out = analysis::run_schedule(&scenarios[0], &id, mutation);
+        print!("{}", out.history);
+        match &out.violation {
+            Some(v) => {
+                println!("VIOLATION: {v}");
+                std::process::exit(if expect_violation { 0 } else { 1 });
+            }
+            None => {
+                println!("schedule {id} is clean ({} op results verified)", out.ops_verified);
+                if expect_violation {
+                    std::process::exit(1);
+                }
+                return;
+            }
+        }
+    }
+
+    let mut total_violations = 0usize;
+    let mut distinct_shortfall = false;
+    for scenario in &scenarios {
+        let report = analysis::explore(scenario, &cfg);
+        println!("check: scenario {} — {}", scenario.name, scenario.description);
+        println!(
+            "  mutation  : {}",
+            mutation.label()
+        );
+        println!(
+            "  schedules : {} run, {} distinct (floor {})",
+            report.runs, report.distinct_schedules, cfg.min_distinct
+        );
+        println!(
+            "  txns      : {} committed, {} aborted; {} op results verified",
+            report.committed, report.aborted, report.ops_verified
+        );
+        if report.violations.is_empty() {
+            println!("  violations: none");
+        } else {
+            println!(
+                "  violations: {} schedule(s){}",
+                report.violations_total,
+                if report.violations_total > report.violations.len() {
+                    " (first shown)"
+                } else {
+                    ""
+                }
+            );
+            for v in &report.violations {
+                println!("    {}: {}", v.schedule, v.detail.replace('\n', "\n      "));
+            }
+            if let Some(first) = report.violations.first() {
+                println!(
+                    "  replay    : atomic-rmi2 check --scenario {} --schedule {}{}",
+                    scenario.name,
+                    first.schedule,
+                    if mutation == ProtocolMutation::None {
+                        String::new()
+                    } else {
+                        format!(" --mutation {}", mutation.label())
+                    }
+                );
+            }
+        }
+        if report.lint.is_empty() {
+            println!("  lint      : clean");
+        } else {
+            println!("  lint      : {} warning(s)", report.lint.len());
+            for d in &report.lint {
+                println!("    {d}");
+            }
+        }
+        total_violations += report.violations_total;
+        if report.distinct_schedules < cfg.min_distinct {
+            distinct_shortfall = true;
+            println!(
+                "  WARNING: only {} distinct schedules (< {})",
+                report.distinct_schedules, cfg.min_distinct
+            );
+        }
+    }
+
+    if expect_violation {
+        if total_violations == 0 {
+            println!("check: expected a violation under mutation {}, found none", mutation.label());
+            std::process::exit(1);
+        }
+        println!("check: mutation caught ({total_violations} violating schedule(s)) — as expected");
+        return;
+    }
+    if total_violations > 0 || distinct_shortfall {
+        std::process::exit(1);
+    }
+    println!("check: all scenarios clean");
+}
+
 fn load_report(path: &str) -> BenchReport {
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
@@ -170,6 +333,16 @@ fn load_report(path: &str) -> BenchReport {
             eprintln!("bench-gate: cannot parse {path}: {e}");
             std::process::exit(2);
         }
+    }
+}
+
+/// Append a line to the GitHub Actions job summary, when running in CI
+/// (`$GITHUB_STEP_SUMMARY` set). No-op locally.
+fn append_step_summary(line: &str) {
+    use std::io::Write as _;
+    let Some(path) = std::env::var_os("GITHUB_STEP_SUMMARY") else { return };
+    if let Ok(mut f) = std::fs::OpenOptions::new().append(true).create(true).open(path) {
+        let _ = writeln!(f, "{line}");
     }
 }
 
@@ -193,7 +366,11 @@ fn bench_gate(args: &CliArgs) {
     let baseline = load_report(base_path);
     let outcome = gate(&fresh, &baseline, tolerance);
     if let Some(reason) = &outcome.skipped {
-        println!("bench-gate: SKIPPED — {reason}");
+        println!("bench-gate: PROVISIONAL BASELINE — gate skipped ({reason})");
+        append_step_summary(&format!(
+            "> **bench-gate** `{base_path}`: PROVISIONAL BASELINE — gate skipped ({reason}). \
+             Refresh the baseline from a CI artifact (see docs/BENCHMARKS.md)."
+        ));
         return;
     }
     println!(

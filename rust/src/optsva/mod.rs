@@ -95,6 +95,50 @@ pub struct SysStats {
     pub async_tasks: AtomicU64,
 }
 
+/// A deliberately seeded protocol defect, used to validate the schedule
+/// explorer (`analysis::`): a correct checker must catch each of these
+/// within the seed budget. `None` is the real protocol.
+///
+/// The mutations are confined to [`proxy`] and are inert unless an
+/// instance is built with [`AtomicRmi2::for_analysis`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProtocolMutation {
+    /// The real, unmutated protocol.
+    #[default]
+    None,
+    /// Release an update-mode object one operation *before* its declared
+    /// supremum is reached (§2.8.3 done wrong): a successor can observe
+    /// state the transaction will still change, so a stale copy buffer or
+    /// a dirty read becomes visible — a last-use-opacity violation.
+    PrematureRelease,
+    /// Skip `mark_invalid` during rollback (§2.7 done wrong): successors
+    /// that consumed the aborted transaction's writes via early release
+    /// are never cascade-aborted and commit dirty state.
+    SkipInvalidation,
+}
+
+impl ProtocolMutation {
+    /// Parse the CLI spelling (`none` / `premature-release` /
+    /// `skip-invalidation`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(ProtocolMutation::None),
+            "premature-release" => Some(ProtocolMutation::PrematureRelease),
+            "skip-invalidation" => Some(ProtocolMutation::SkipInvalidation),
+            _ => None,
+        }
+    }
+
+    /// The CLI spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ProtocolMutation::None => "none",
+            ProtocolMutation::PrematureRelease => "premature-release",
+            ProtocolMutation::SkipInvalidation => "skip-invalidation",
+        }
+    }
+}
+
 /// Tuning knobs for the OptSVA-CF instance.
 #[derive(Debug, Clone, Copy)]
 pub struct OptsvaConfig {
@@ -120,6 +164,9 @@ pub struct AtomicRmi2 {
     /// System-wide commit/abort/release counters.
     pub stats: Arc<SysStats>,
     config: OptsvaConfig,
+    /// Seeded protocol defect ([`ProtocolMutation::None`] outside the
+    /// schedule explorer's mutation-validation runs).
+    mutation: ProtocolMutation,
 }
 
 impl AtomicRmi2 {
@@ -137,7 +184,38 @@ impl AtomicRmi2 {
                 executor: Executor::spawn(),
             })
             .collect();
-        Arc::new(AtomicRmi2 { cluster, nodes, stats: Arc::new(SysStats::default()), config })
+        Arc::new(AtomicRmi2 {
+            cluster,
+            nodes,
+            stats: Arc::new(SysStats::default()),
+            config,
+            mutation: ProtocolMutation::None,
+        })
+    }
+
+    /// Stand up the system for the schedule explorer: node executors run
+    /// in manual (threadless) mode so every asynchronous task becomes an
+    /// explicit scheduling decision, and `mutation` optionally seeds a
+    /// protocol defect. Production code wants [`AtomicRmi2::with_config`].
+    pub fn for_analysis(
+        cluster: Arc<Cluster>,
+        config: OptsvaConfig,
+        mutation: ProtocolMutation,
+    ) -> Arc<Self> {
+        let nodes = cluster
+            .node_ids()
+            .map(|_| NodeState {
+                slots: RwLock::new(Vec::new()),
+                executor: Executor::manual(),
+            })
+            .collect();
+        Arc::new(AtomicRmi2 {
+            cluster,
+            nodes,
+            stats: Arc::new(SysStats::default()),
+            config,
+            mutation,
+        })
     }
 
     /// The simulated cluster this system runs on.

@@ -48,6 +48,10 @@ pub struct ProxyConfig {
     /// The cluster's time source: deadlines, heartbeats and staleness all
     /// run against it (virtual under [`crate::clock::VirtualClock`]).
     pub clock: Arc<dyn Clock>,
+    /// Seeded protocol defect for explorer validation —
+    /// [`super::ProtocolMutation::None`] everywhere outside
+    /// [`super::AtomicRmi2::for_analysis`] runs.
+    pub(crate) mutation: super::ProtocolMutation,
 }
 
 impl ProxyConfig {
@@ -374,7 +378,14 @@ impl Proxy {
         s.modified = true;
         // No further writes or updates ⇒ snapshot to buf and release; all
         // remaining reads are served from the buffer (§2.8.3).
-        if s.wc == self.sup.writes && s.uc == self.sup.updates {
+        let updates_done = match self.config.mutation {
+            // Seeded defect: treat the *penultimate* update as the last
+            // use, releasing one operation too early — a successor can
+            // observe state this transaction will still change.
+            super::ProtocolMutation::PrematureRelease => s.uc + 1 >= self.sup.updates,
+            _ => s.uc == self.sup.updates,
+        };
+        if s.wc == self.sup.writes && updates_done {
             if s.rc < self.sup.reads {
                 s.buf = Some(CopyBuffer::capture(obj.as_ref()));
             }
@@ -505,6 +516,12 @@ impl Proxy {
     fn schedule_buffer_and_release(self: &Arc<Self>) {
         let me = Arc::clone(self);
         let action = move || {
+            if me.released.load(Ordering::Acquire) {
+                // The transaction released through another path (rollback
+                // after a timed-out join) before this task became runnable:
+                // buffering now would snapshot a successor's state.
+                return;
+            }
             let mut s = me.inner.lock().unwrap();
             let obj = me.slot.object.lock().unwrap();
             // Record the grant *before* observing state, under the object
@@ -524,6 +541,11 @@ impl Proxy {
     fn schedule_apply_log_and_release(self: &Arc<Self>) {
         let me = Arc::clone(self);
         let action = move || {
+            if me.released.load(Ordering::Acquire) {
+                // Stale task (see `schedule_buffer_and_release`): the
+                // rollback already discarded the log.
+                return;
+            }
             let mut s = me.inner.lock().unwrap();
             let mut obj = me.slot.object.lock().unwrap();
             me.cc().note_granted(me.pv);
@@ -582,8 +604,17 @@ impl Proxy {
             "a proxy schedules its async task at most once"
         );
         let me = Arc::clone(self);
-        self.executor
-            .submit_with_handle(handle, move || me.access_cond_ready(), action);
+        self.executor.submit_with_handle(
+            handle,
+            // `|| released`: if the transaction released through another
+            // path (rollback after a timed-out join) before this task ever
+            // became runnable, its own release has made the access
+            // condition false forever — let the task fire and no-op (the
+            // actions guard on `released`) instead of pinning the executor
+            // queue open across shutdown.
+            move || me.access_cond_ready() || me.released.load(Ordering::Acquire),
+            action,
+        );
     }
 
     // ------------------------------------------------------------------
@@ -635,7 +666,12 @@ impl Proxy {
         let mut obj = self.slot.object.lock().unwrap();
         if s.modified {
             // Invalidate everyone who observed our (now aborted) state.
-            self.cc().mark_invalid(self.pv);
+            match self.config.mutation {
+                // Seeded defect: successors that consumed our writes via
+                // early release are never cascade-aborted.
+                super::ProtocolMutation::SkipInvalidation => {}
+                _ => self.cc().mark_invalid(self.pv),
+            }
             // Restore only a valid-lineage checkpoint: if another aborter
             // restored since we checkpointed, our checkpoint captured
             // since-invalidated state and the older restore stands.
@@ -689,6 +725,20 @@ impl Proxy {
     /// Is this proxy finished (its `ltv` advanced past it)?
     pub(crate) fn terminated(&self) -> bool {
         self.cc().versions().1 >= self.pv
+    }
+
+    /// Does this proxy's commit (termination) condition hold right now?
+    /// Explorer gate: `Transaction::finish_ready` must be exact, because
+    /// the single-threaded harness may never take a blocking step.
+    /// Crate-visible for the `analysis::` wait-graph builder.
+    pub(crate) fn commit_cond_ready(&self) -> bool {
+        self.cc().commit_ready(self.pv)
+    }
+
+    /// Has the async buffering/release task finished? `true` when none
+    /// was ever scheduled. Crate-visible for `analysis::`.
+    pub(crate) fn task_done(&self) -> bool {
+        self.task.get().map(TaskHandle::is_done).unwrap_or(true)
     }
 
     /// Would eviction preserve termination order right now?

@@ -308,6 +308,7 @@ impl Transaction {
             irrevocable: self.irrevocable,
             asynchrony: self.asynchrony,
             clock: Arc::clone(cluster.clock()),
+            mutation: self.sys.mutation,
         };
         let mut proxies: Vec<Option<Arc<Proxy>>> = vec![None; resolved.len()];
         for (pos, &i) in order.iter().enumerate() {
@@ -331,6 +332,52 @@ impl Transaction {
     /// The proxy behind a handle (tests, diagnostics).
     pub fn proxy(&self, h: ObjHandle) -> &Arc<Proxy> {
         &self.proxies[h.0]
+    }
+
+    /// Explorer gate: would [`TxCtx::call`] for `call` on `h` run to
+    /// completion right now without blocking on a versioning wait, a
+    /// program-order chain, or an unfinished async task?
+    ///
+    /// The schedule explorer (`analysis::`) runs everything on one thread
+    /// over threadless executors, so it may only take steps this gate
+    /// approves — a blocking step would hang the harness. `true` answers
+    /// must therefore be exact; all the conditions involved are monotone
+    /// under the explorer's single-threaded discipline (a finished task
+    /// stays finished, `accessed`/`released` never revert, and the access
+    /// condition can only be invalidated by this transaction's own
+    /// release).
+    pub fn call_ready(&self, h: ObjHandle, call: &OpCall) -> Result<bool, TxError> {
+        if self.phase != Phase::Running {
+            return Ok(true); // the call would fail fast with `Completed`
+        }
+        let p = self
+            .proxies
+            .get(h.0)
+            .ok_or_else(|| TxError::NotDeclared(format!("handle #{}", h.0)))?;
+        if let Some(prev) = &self.chain[h.0] {
+            if !prev.is_done() {
+                return Ok(false); // program order behind a submitted op
+            }
+        }
+        let mode = p.mode_of(call)?;
+        Ok(p.ready_for(mode))
+    }
+
+    /// Explorer gate: would [`Transaction::commit`] /
+    /// [`Transaction::abort`] run to completion right now without
+    /// blocking? Both join every submitted operation and async task and
+    /// wait out every object's commit (termination) condition, so all of
+    /// those must already hold. Same exactness contract as
+    /// [`Transaction::call_ready`].
+    pub fn finish_ready(&self) -> bool {
+        if self.phase != Phase::Running {
+            return true;
+        }
+        self.submitted.iter().all(|op| op.handle.is_done())
+            && self
+                .proxies
+                .iter()
+                .all(|p| p.task_done() && (p.is_evicted() || p.commit_cond_ready()))
     }
 
     /// Execute `body` as the transaction's code: begin, run, then commit —

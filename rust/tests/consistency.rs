@@ -17,7 +17,10 @@ use std::sync::Arc;
 const ACCOUNTS: usize = 8;
 const INITIAL: i64 = 100;
 
-/// Transfers conserve money under every framework.
+/// Transfers conserve money under every framework — and the committed
+/// history must replay serially to exactly the live final state
+/// (serial-replay verification on by default, not just in the dedicated
+/// replay test below).
 #[test]
 fn all_frameworks_conserve_money_under_concurrency() {
     for kind in ALL_FRAMEWORKS {
@@ -30,12 +33,14 @@ fn all_frameworks_conserve_money_under_concurrency() {
                 Box::new(Account::with_balance(INITIAL)),
             );
         }
+        let recorder = Arc::new(Recorder::new());
         let mut threads = vec![];
         for c in 0..4u64 {
             let fw = Arc::clone(&fw);
+            let recorder = Arc::clone(&recorder);
             threads.push(std::thread::spawn(move || {
                 let mut rng = Prng::seeded(0xC0 ^ c);
-                for _ in 0..15 {
+                for n in 0..15 {
                     let from = rng.index(ACCOUNTS);
                     let to = (from + 1 + rng.index(ACCOUNTS - 1)) % ACCOUNTS;
                     let amt = 1 + rng.below(30) as i64;
@@ -43,15 +48,29 @@ fn all_frameworks_conserve_money_under_concurrency() {
                         AccessDecl::new(format!("a{from}"), Suprema::updates(1)),
                         AccessDecl::new(format!("a{to}"), Suprema::updates(1)),
                     ];
-                    fw.dtm()
+                    // The observation record is the body's return value.
+                    let (obs, _) = fw
+                        .dtm()
                         .tx(NodeId(0))
                         .with_decls(&decls)
                         .run(|t| {
-                            t.call(ObjHandle(0), ops::withdraw(amt))?;
-                            t.call(ObjHandle(1), ops::deposit(amt))?;
-                            Ok(())
+                            let mut obs: Vec<OpRecord> = Vec::new();
+                            let w = t.call(ObjHandle(0), ops::withdraw(amt))?;
+                            obs.push(OpRecord {
+                                object: format!("a{from}"),
+                                call: ops::withdraw(amt),
+                                result: w,
+                            });
+                            let d = t.call(ObjHandle(1), ops::deposit(amt))?;
+                            obs.push(OpRecord {
+                                object: format!("a{to}"),
+                                call: ops::deposit(amt),
+                                result: d,
+                            });
+                            Ok(obs)
                         })
                         .unwrap();
+                    recorder.commit(format!("c{c}-t{n}"), obs);
                 }
             }));
         }
@@ -67,6 +86,29 @@ fn all_frameworks_conserve_money_under_concurrency() {
             })
             .sum();
         assert_eq!(total, INITIAL * ACCOUNTS as i64, "{}", kind.label());
+
+        // Serial-replay verification: the committed history, replayed in
+        // commit order against fresh objects, must land on the live state.
+        let mut initial: BTreeMap<String, Box<dyn SharedObject>> = BTreeMap::new();
+        for i in 0..ACCOUNTS {
+            initial.insert(format!("a{i}"), Box::new(Account::with_balance(INITIAL)));
+        }
+        let records = recorder.take();
+        assert_eq!(records.len(), 4 * 15, "{}: a transfer went unrecorded", kind.label());
+        let replayed = replay_final(initial, &records)
+            .unwrap_or_else(|e| panic!("{}: {e}", kind.label()));
+        for (name, obj) in &replayed {
+            let live_oid = fw_registry(&fw, name);
+            let live = fw.with_object(live_oid, |o| {
+                o.as_any().downcast_ref::<Account>().unwrap().balance()
+            });
+            let want = obj.as_any().downcast_ref::<Account>().unwrap().balance();
+            assert_eq!(
+                live, want,
+                "{}: {name} diverged from serial replay of the committed history",
+                kind.label()
+            );
+        }
         fw.shutdown();
     }
 }

@@ -209,6 +209,30 @@ fn main() {
         },
     );
 
+    // 6c. Tracing-off overhead: the identical transaction with the (now
+    // ubiquitous) trace instrumentation compiled in but no session open.
+    // Every instrumentation point costs one relaxed atomic gate load, so
+    // this must track optsva_txn_1obj_call within noise — the "zero cost
+    // when off" guarantee of docs/OBSERVABILITY.md, held by the gate.
+    assert!(!atomic_rmi2::trace::enabled(), "no trace session during benches");
+    bench(
+        &mut report,
+        "trace_overhead",
+        "trace: 1-object txn, tracing off",
+        20,
+        200,
+        || {
+            let mut tx = sys.tx(NodeId(0));
+            let h = tx.accesses("A", Suprema::updates(1));
+            let _ = tx
+                .run(|t| {
+                    t.call(h, ops::deposit(1))?;
+                    Ok(())
+                })
+                .unwrap();
+        },
+    );
+
     // 7. Kernel call: spin reference vs AOT XLA artifact.
     let spin = SpinBackend::new(64, 4);
     let state = vec![0.1f32; 64];

@@ -463,6 +463,11 @@ fn run_with_chooser(
 ) -> RunOutcome {
     let nodes = scenario.nodes();
     let cluster = Arc::new(Cluster::new_virtual(nodes, NetworkModel::instant()));
+    // A recording trace session stamps events with this run's virtual
+    // clock, so the exported timeline is in simulated time.
+    if crate::trace::enabled() {
+        crate::trace::set_session_clock(Arc::clone(cluster.clock()));
+    }
     let sys = AtomicRmi2::for_analysis(
         cluster,
         OptsvaConfig { wait_timeout: Some(Duration::from_secs(30)), asynchrony: true },

@@ -27,6 +27,7 @@ pub mod registry;
 pub use registry::{NameId, Registry};
 
 use crate::clock::{Clock, RealClock};
+use crate::trace::{self, EventKind};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -193,6 +194,9 @@ impl Cluster {
             self.stats.local_calls.fetch_add(1, Ordering::Relaxed);
             return f().0;
         }
+        if trace::enabled() {
+            trace::emit(from.0, EventKind::MsgSend { from, to, bytes: req_bytes });
+        }
         let req_delay = self.net.delay(req_bytes);
         if !req_delay.is_zero() {
             self.clock.sleep(req_delay);
@@ -201,6 +205,10 @@ impl Cluster {
         let resp_delay = self.net.delay(resp_bytes);
         if !resp_delay.is_zero() {
             self.clock.sleep(resp_delay);
+        }
+        if trace::enabled() {
+            // The response leg, arriving back at the caller.
+            trace::emit(from.0, EventKind::MsgDeliver { from: to, to: from, bytes: resp_bytes });
         }
         self.stats.messages.fetch_add(2, Ordering::Relaxed);
         self.stats
@@ -227,6 +235,9 @@ impl Cluster {
         if arrival > now {
             self.clock.sleep(arrival - now);
         }
+        if trace::enabled() {
+            trace::emit(to.0, EventKind::MsgDeliver { from, to, bytes });
+        }
     }
 
     /// One-way message (no reply): fault-detection pings, invalidations.
@@ -234,6 +245,9 @@ impl Cluster {
         if from == to {
             self.stats.local_calls.fetch_add(1, Ordering::Relaxed);
             return;
+        }
+        if trace::enabled() {
+            trace::emit(from.0, EventKind::MsgSend { from, to, bytes });
         }
         let delay = self.net.delay(bytes);
         if !delay.is_zero() {

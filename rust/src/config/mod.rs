@@ -165,6 +165,9 @@ impl KvConfig {
         if let Some(v) = self.typed::<bool>("virtual_time")? {
             p.virtual_time = v;
         }
+        if let Some(v) = self.typed::<bool>("trace")? {
+            p.trace = v;
+        }
         if let Some(v) = self.typed::<u64>("seed")? {
             p.seed = v;
         }
@@ -249,7 +252,7 @@ mod tests {
     #[test]
     fn eigenbench_overlay_applies_fields() {
         let kv = KvConfig::parse(
-            "framework = hyflow2\nnodes = 8\nclients_per_node = 16\nread_pct = 10\nop_delay_us = 500\nirrevocable = true\npipeline_ops = true",
+            "framework = hyflow2\nnodes = 8\nclients_per_node = 16\nread_pct = 10\nop_delay_us = 500\nirrevocable = true\npipeline_ops = true\ntrace = true",
         )
         .unwrap();
         let p = kv.to_eigenbench().unwrap();
@@ -260,6 +263,7 @@ mod tests {
         assert_eq!(p.op_delay, Duration::from_micros(500));
         assert!(p.irrevocable);
         assert!(p.pipeline_ops);
+        assert!(p.trace);
         // untouched fields keep defaults
         assert_eq!(p.locality, 0.5);
     }

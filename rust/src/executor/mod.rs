@@ -13,7 +13,9 @@
 //! the executor re-scans its queue on every poke.
 
 use crate::clock::{wait_deadline, Clock};
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::cluster::NodeId;
+use crate::trace::{self, EventKind};
+use std::sync::atomic::{AtomicBool, AtomicU16, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -150,11 +152,18 @@ struct ExecutorState {
     shutdown: bool,
 }
 
+/// Sentinel for an executor that was never labeled with a node id.
+const UNLABELED: u16 = u16::MAX;
+
 /// One executor per (simulated) node.
 pub struct Executor {
     signal: Arc<Signal>,
     state: Mutex<ExecutorState>,
     thread: Mutex<Option<JoinHandle<()>>>,
+    /// Node this executor serves, for [`crate::trace`] task events
+    /// ([`UNLABELED`] until [`Executor::set_trace_label`] — unlabeled
+    /// executors stay silent).
+    trace_node: AtomicU16,
 }
 
 impl Executor {
@@ -164,6 +173,7 @@ impl Executor {
             signal: Arc::new(Signal::new()),
             state: Mutex::new(ExecutorState { queue: Vec::new(), shutdown: false }),
             thread: Mutex::new(None),
+            trace_node: AtomicU16::new(UNLABELED),
         });
         let loop_exec = Arc::clone(&exec);
         let handle = std::thread::Builder::new()
@@ -187,7 +197,26 @@ impl Executor {
             signal: Arc::new(Signal::new()),
             state: Mutex::new(ExecutorState { queue: Vec::new(), shutdown: false }),
             thread: Mutex::new(None),
+            trace_node: AtomicU16::new(UNLABELED),
         })
+    }
+
+    /// Label this executor with the node it serves so queued/ran tasks can
+    /// be attributed in trace sessions ([`crate::trace`]).
+    pub(crate) fn set_trace_label(&self, node: NodeId) {
+        self.trace_node.store(node.0, Ordering::Relaxed);
+    }
+
+    /// Emit a task trace event for this executor's node, if tracing is on
+    /// and the executor was labeled. The gate check comes first: a
+    /// disabled recorder costs one relaxed atomic load.
+    fn t_emit(&self, kind: impl FnOnce(u16) -> EventKind) {
+        if trace::enabled() {
+            let node = self.trace_node.load(Ordering::Relaxed);
+            if node != UNLABELED {
+                trace::emit(node, kind(node));
+            }
+        }
     }
 
     /// The signal that `ObjectCc::watch` should be given for every object
@@ -227,6 +256,7 @@ impl Executor {
                 handle,
             });
         }
+        self.t_emit(|node| EventKind::TaskQueue { node });
         self.signal.poke(); // check immediately-runnable tasks
     }
 
@@ -266,6 +296,7 @@ impl Executor {
         };
         match picked {
             Some((action, handle)) => {
+                self.t_emit(|node| EventKind::TaskRun { node });
                 action();
                 handle.complete();
                 true
@@ -297,6 +328,7 @@ impl Executor {
             }
             let ran_any = !runnable.is_empty();
             for (action, handle) in runnable {
+                self.t_emit(|node| EventKind::TaskRun { node });
                 action();
                 handle.complete();
             }

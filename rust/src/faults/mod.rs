@@ -88,6 +88,11 @@ impl Detector {
                 evicted += 1;
             }
         }
+        if crate::trace::enabled() {
+            // Node 0 stands in for the detector itself (it scans the whole
+            // system, not one node).
+            crate::trace::emit(0, crate::trace::EventKind::FaultScan { evicted });
+        }
         evicted
     }
 

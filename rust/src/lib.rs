@@ -35,6 +35,10 @@
 //! * [`analysis`] — deterministic schedule exploration, last-use-opacity
 //!   checking over explored histories, and the declaration lint behind
 //!   `atomic-rmi2 check` (see `docs/ANALYSIS.md`);
+//! * [`trace`] — virtual-time structured tracing: lifecycle/wait/early-release
+//!   events from every layer, wait-at-version histograms, and the
+//!   Perfetto trace exporter behind `atomic-rmi2 trace` (see
+//!   `docs/OBSERVABILITY.md`);
 //! * [`runtime`] — PJRT/XLA loader executing the AOT-compiled Pallas
 //!   kernel used by `object::ComputeObject` (CF compute delegation).
 //!
@@ -60,6 +64,7 @@ pub mod optsva;
 pub mod runtime;
 pub mod sva;
 pub mod tfa;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod versioning;

@@ -23,6 +23,7 @@ use atomic_rmi2::config::{CliArgs, KvConfig};
 use atomic_rmi2::metrics::fmt_throughput;
 use atomic_rmi2::object::{Account, AccountRef};
 use atomic_rmi2::optsva::ProtocolMutation;
+use atomic_rmi2::trace::{self, perfetto, TraceSession};
 use atomic_rmi2::workload::sweeps::{self, Scale};
 use atomic_rmi2::workload::{run_eigenbench, FrameworkKind, ALL_FRAMEWORKS};
 use atomic_rmi2::{AtomicRmi2, Cluster, NetworkModel, NodeId, Suprema, TxCtx};
@@ -40,7 +41,8 @@ USAGE:
   atomic-rmi2 check [--scenario NAME] [--seeds N] [--flip-depth D]
               [--flip-bases B] [--min-distinct K]
               [--mutation none|premature-release|skip-invalidation]
-              [--schedule SID] [--expect-violation]
+              [--schedule SID] [--expect-violation] [--timeline]
+  atomic-rmi2 trace SCENARIO [--seed N] [--out FILE] [--timeline]
   atomic-rmi2 bench-gate FRESH.json BASELINE.json [--tolerance 0.20]
   atomic-rmi2 demo
   atomic-rmi2 list-frameworks
@@ -55,6 +57,7 @@ fn main() {
         Some("eigenbench") => eigenbench(&args),
         Some("sweep") => sweep(&args),
         Some("check") => check(&args),
+        Some("trace") => trace_cmd(&args),
         Some("bench-gate") => bench_gate(&args),
         Some("demo") => demo(),
         Some("list-frameworks") => {
@@ -225,7 +228,14 @@ fn check(args: &CliArgs) {
             eprintln!("check: --schedule needs an explicit --scenario");
             std::process::exit(2);
         }
+        // `--timeline`: record the replay in a trace session and dump the
+        // human-readable event timeline of the offending interleaving.
+        let session = args.flag("timeline").then(TraceSession::start);
         let out = analysis::run_schedule(&scenarios[0], &id, mutation);
+        if let Some(session) = session {
+            let events = trace::normalize(&session.finish());
+            print!("{}", trace::render_timeline(&events));
+        }
         print!("{}", out.history);
         match &out.violation {
             Some(v) => {
@@ -317,6 +327,86 @@ fn check(args: &CliArgs) {
         std::process::exit(1);
     }
     println!("check: all scenarios clean");
+}
+
+/// `atomic-rmi2 trace SCENARIO`: run one checker scenario under
+/// VirtualClock with tracing on, print the aggregate wait/access summary,
+/// and write a Perfetto-loadable trace JSON (plus a `BENCH_trace.json`
+/// report entry under `target/bench-results/`).
+fn trace_cmd(args: &CliArgs) {
+    let Some(name) = args.positional.get(1) else {
+        eprintln!("usage: atomic-rmi2 trace SCENARIO [--seed N] [--out FILE] [--timeline]");
+        std::process::exit(2);
+    };
+    let Some(scenario) = analysis::scenarios::by_name(name) else {
+        let names: Vec<&str> = analysis::scenarios::builtin().iter().map(|s| s.name).collect();
+        eprintln!("trace: unknown scenario {name:?}; one of: {}", names.join(", "));
+        std::process::exit(2);
+    };
+    let seed: u64 = parse_num(args, "seed", 0);
+
+    let session = TraceSession::start();
+    let out = analysis::run_schedule(&scenario, &ScheduleId::seed(seed), ProtocolMutation::None);
+    let events = session.finish();
+    let dropped = trace::dropped_events();
+
+    let summary = trace::aggregate::summarize(&events);
+    println!("{}", summary.table(format!("trace {name} (schedule {})", out.schedule)).render());
+    println!(
+        "txns               : {} committed, {} aborted, {} retries",
+        summary.commits, summary.aborts, summary.retries
+    );
+    println!(
+        "early releases     : {} (release_shrinkage {:.3})",
+        summary.early_releases, summary.release_shrinkage
+    );
+    println!(
+        "events             : {} ({} messages, {} tasks run)",
+        summary.events, summary.messages, summary.tasks_run
+    );
+    if dropped > 0 {
+        eprintln!("trace: WARNING — {dropped} event(s) dropped (ring buffer full)");
+    }
+    if let Some(v) = &out.violation {
+        eprintln!("trace: note — checker flagged this schedule: {v}");
+    }
+
+    if args.flag("timeline") {
+        print!("{}", trace::render_timeline(&trace::normalize(&events)));
+    }
+
+    // Perfetto export: render, self-validate with the crate's own parser
+    // (the same check CI applies to the artifact), then write.
+    let doc = perfetto::export(&events);
+    let text = doc.render();
+    if let Err(e) = atomic_rmi2::bench::Json::parse(&text) {
+        eprintln!("trace: exported document failed to re-parse: {e}");
+        std::process::exit(1);
+    }
+    let out_path = match args.option("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::PathBuf::from("target/trace").join(format!("{name}.json")),
+    };
+    if let Some(dir) = out_path.parent() {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("trace: cannot create {}: {e}", dir.display());
+            std::process::exit(1);
+        }
+    }
+    if let Err(e) = std::fs::write(&out_path, &text) {
+        eprintln!("trace: cannot write {}: {e}", out_path.display());
+        std::process::exit(1);
+    }
+    println!("perfetto trace     : {} (load at ui.perfetto.dev)", out_path.display());
+
+    let mut report = BenchReport::new("trace")
+        .config("scenario", name)
+        .config("schedule", &out.schedule);
+    report.push(summary.bench_entry(name.as_str()));
+    match report.write_to(&atomic_rmi2::bench::default_output_dir()) {
+        Ok(path) => println!("report             : {}", path.display()),
+        Err(e) => eprintln!("trace: report write failed: {e}"),
+    }
 }
 
 fn load_report(path: &str) -> BenchReport {

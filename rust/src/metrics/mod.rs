@@ -69,12 +69,17 @@ impl Table {
         out
     }
 
-    /// Render as CSV (headers + rows).
+    /// Render as CSV (headers + rows), RFC 4180-escaped: cells containing
+    /// a comma, a double quote, or a line break are quoted, with internal
+    /// quotes doubled. Plain cells are emitted verbatim.
     pub fn to_csv(&self) -> String {
+        let csv_line = |cells: &[String]| -> String {
+            cells.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(",")
+        };
         let mut out = String::new();
-        let _ = writeln!(out, "{}", self.headers.join(","));
+        let _ = writeln!(out, "{}", csv_line(&self.headers));
         for row in &self.rows {
-            let _ = writeln!(out, "{}", row.join(","));
+            let _ = writeln!(out, "{}", csv_line(row));
         }
         out
     }
@@ -85,6 +90,16 @@ impl Table {
             std::fs::create_dir_all(dir)?;
         }
         std::fs::write(path, self.to_csv())
+    }
+}
+
+/// RFC 4180 cell escaping: quote only when the cell contains a comma, a
+/// double quote, or a CR/LF, doubling any internal quotes.
+fn csv_escape(cell: &str) -> String {
+    if cell.contains(['"', ',', '\n', '\r']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
     }
 }
 
@@ -122,6 +137,23 @@ mod tests {
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.starts_with("fw,tput"));
         assert_eq!(t.row_count(), 2);
+    }
+
+    #[test]
+    fn csv_escapes_commas_quotes_and_newlines() {
+        let mut t = Table::new("esc", &["label", "note"]);
+        t.add_row(vec!["a,b".into(), "plain".into()]);
+        t.add_row(vec!["say \"hi\"".into(), "line1\nline2".into()]);
+        let csv = t.to_csv();
+        let mut lines = csv.lines();
+        assert_eq!(lines.next(), Some("label,note"), "plain headers stay unquoted");
+        assert_eq!(lines.next(), Some("\"a,b\",plain"));
+        // The embedded newline keeps the quoted cell open across physical
+        // lines — exactly RFC 4180 field folding.
+        assert_eq!(lines.next(), Some("\"say \"\"hi\"\"\",\"line1"));
+        assert_eq!(lines.next(), Some("line2\""));
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("cr\rcell"), "\"cr\rcell\"");
     }
 
     #[test]

@@ -179,9 +179,10 @@ impl AtomicRmi2 {
     pub fn with_config(cluster: Arc<Cluster>, config: OptsvaConfig) -> Arc<Self> {
         let nodes = cluster
             .node_ids()
-            .map(|_| NodeState {
-                slots: RwLock::new(Vec::new()),
-                executor: Executor::spawn(),
+            .map(|node| {
+                let executor = Executor::spawn();
+                executor.set_trace_label(node);
+                NodeState { slots: RwLock::new(Vec::new()), executor }
             })
             .collect();
         Arc::new(AtomicRmi2 {
@@ -204,9 +205,10 @@ impl AtomicRmi2 {
     ) -> Arc<Self> {
         let nodes = cluster
             .node_ids()
-            .map(|_| NodeState {
-                slots: RwLock::new(Vec::new()),
-                executor: Executor::manual(),
+            .map(|node| {
+                let executor = Executor::manual();
+                executor.set_trace_label(node);
+                NodeState { slots: RwLock::new(Vec::new()), executor }
             })
             .collect();
         Arc::new(AtomicRmi2 {
@@ -334,7 +336,14 @@ impl Dtm for Arc<AtomicRmi2> {
                 }
                 tx.run(&mut *body).map(|((), ops)| ops)
             },
-            |_, _| {},
+            |attempt, _err| {
+                if crate::trace::enabled() {
+                    crate::trace::emit(
+                        client.0,
+                        crate::trace::EventKind::TxRetry { client, attempt },
+                    );
+                }
+            },
         )
     }
 

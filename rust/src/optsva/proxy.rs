@@ -28,6 +28,7 @@ use crate::clock::Clock;
 use crate::cluster::Oid;
 use crate::executor::{Executor, TaskHandle};
 use crate::object::{Mode, OpCall, Value};
+use crate::trace::{self, EventKind};
 use crate::versioning::ObjectCc;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -52,6 +53,10 @@ pub struct ProxyConfig {
     /// [`super::ProtocolMutation::None`] everywhere outside
     /// [`super::AtomicRmi2::for_analysis`] runs.
     pub(crate) mutation: super::ProtocolMutation,
+    /// Trace identity of the owning transaction ([`crate::trace`]); `0`
+    /// when tracing was off at `begin`, so proxies never emit events for
+    /// transactions whose lifecycle the session did not capture.
+    pub(crate) trace_tx: u64,
 }
 
 impl ProxyConfig {
@@ -177,9 +182,27 @@ impl Proxy {
         &self.slot.cc
     }
 
+    /// Emit a trace event at this object's home node, tagged with the
+    /// owning transaction. The gate check comes first so a disabled
+    /// recorder costs one relaxed atomic load and no event construction;
+    /// `trace_tx == 0` (tracing was off at `begin`) keeps proxies of
+    /// untraced transactions silent even if a session starts mid-flight.
+    fn t_emit(&self, kind: impl FnOnce(u64, Oid) -> EventKind) {
+        if trace::enabled() && self.config.trace_tx != 0 {
+            trace::emit(self.oid.node.0, kind(self.config.trace_tx, self.oid));
+        }
+    }
+
     /// Access-condition wait — or termination-condition wait for
     /// irrevocable transactions (§2.4).
     fn wait_access(&self) -> Result<(), TxError> {
+        self.t_emit(|tx, oid| EventKind::WaitStart { tx, oid });
+        let r = self.wait_access_inner();
+        self.t_emit(|tx, oid| EventKind::WaitEnd { tx, oid });
+        r
+    }
+
+    fn wait_access_inner(&self) -> Result<(), TxError> {
         let deadline = self.config.deadline();
         if self.config.irrevocable {
             self.cc().wait_commit_cond(self.pv, deadline)?;
@@ -315,6 +338,7 @@ impl Proxy {
         if self.sup.read_only() {
             self.join_task()?;
             self.check_doomed()?;
+            self.t_emit(|tx, oid| EventKind::BufferRead { tx, oid });
             let mut s = self.inner.lock().unwrap();
             let buf = s.buf.as_mut().expect("read-only buffering task sets buf");
             return Ok(buf.invoke(call)?);
@@ -325,6 +349,7 @@ impl Proxy {
         if self.released_or_pending() {
             self.join_task()?;
             self.check_doomed()?;
+            self.t_emit(|tx, oid| EventKind::BufferRead { tx, oid });
             let mut s = self.inner.lock().unwrap();
             let buf = s
                 .buf
@@ -388,6 +413,7 @@ impl Proxy {
         if s.wc == self.sup.writes && updates_done {
             if s.rc < self.sup.reads {
                 s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+                self.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             }
             drop(obj);
             self.release_now();
@@ -434,6 +460,7 @@ impl Proxy {
         if s.wc == self.sup.writes && s.uc == self.sup.updates {
             if s.rc < self.sup.reads {
                 s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+                self.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             }
             drop(obj);
             // Done inline, not in a separate thread: "the transaction
@@ -483,6 +510,10 @@ impl Proxy {
         if !self.released.swap(true, Ordering::AcqRel) {
             self.cc().release(self.pv);
             self.stats.early_releases.fetch_add(1, Ordering::Relaxed);
+            // The headline span boundary: the object is now available to
+            // successors while this transaction keeps running.
+            let pv = self.pv;
+            self.t_emit(|tx, oid| EventKind::EarlyRelease { tx, oid, pv });
         }
     }
 
@@ -529,6 +560,7 @@ impl Proxy {
             // lock) either sees our grant or restores before our snapshot.
             me.cc().note_granted(me.pv);
             s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+            me.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             drop(obj);
             drop(s);
             me.release_now();
@@ -573,6 +605,7 @@ impl Proxy {
             // counter.
             if me.sup.reads > 0 {
                 s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+                me.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             }
             drop(obj);
             drop(s);
@@ -679,6 +712,7 @@ impl Proxy {
             if std::env::var_os("ARMI2_TRACE").is_some() {
                 eprintln!("[trace] rollback {} pv={} restore={}", self.oid, self.pv, should_restore);
             }
+            self.t_emit(|tx, oid| EventKind::Rollback { tx, oid, restored: should_restore });
             if should_restore {
                 if let Some(st) = &s.st {
                     st.restore_into(obj.as_mut());
@@ -704,6 +738,9 @@ impl Proxy {
     /// itself". Only legal when the commit condition holds (the detector
     /// checks), so `terminate` keeps the versioning order intact.
     pub(crate) fn evict(&self) {
+        if trace::enabled() {
+            trace::emit(self.oid.node.0, EventKind::Evict { oid: self.oid });
+        }
         self.evicted.store(true, Ordering::Release);
         self.rollback();
         self.terminate();

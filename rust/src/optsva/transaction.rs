@@ -33,6 +33,7 @@ use crate::clock::Clock;
 use crate::cluster::{Cluster, NodeId};
 use crate::executor::TaskHandle;
 use crate::object::{OpCall, Value};
+use crate::trace::{self, EventKind};
 use crate::versioning::{acquire_start_locks, WaitTimeout};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -159,6 +160,9 @@ pub struct Transaction {
     /// and abort drains.
     submitted: Vec<Arc<SubmittedOp>>,
     phase: Phase,
+    /// Trace identity ([`crate::trace`]): allocated at `begin` when a
+    /// trace session is recording, `0` otherwise (no events emitted).
+    trace_tx: u64,
 }
 
 impl Transaction {
@@ -177,6 +181,16 @@ impl Transaction {
             chain: Vec::new(),
             submitted: Vec::new(),
             phase: Phase::Preamble,
+            trace_tx: 0,
+        }
+    }
+
+    /// Emit a lifecycle trace event on the client's node. No event is
+    /// constructed unless this transaction was assigned a trace identity
+    /// at `begin` (i.e. a trace session was recording).
+    fn t_emit(&self, kind: impl FnOnce(u64, NodeId) -> EventKind) {
+        if self.trace_tx != 0 {
+            trace::emit(self.client.0, kind(self.trace_tx, self.client));
         }
     }
 
@@ -302,13 +316,18 @@ impl Transaction {
             cluster.rpc(client, oid.node, 24, || ((), 16));
         });
 
-        // Create proxies back in declaration order.
+        // Create proxies back in declaration order. The trace identity is
+        // allocated (and TxBegin emitted) first: a read-only proxy's
+        // buffering task may start emitting the moment it is created.
+        self.trace_tx = if trace::enabled() { trace::next_tx_id() } else { 0 };
+        self.t_emit(|tx, client| EventKind::TxBegin { tx, client });
         let config = ProxyConfig {
             wait_timeout: self.wait_timeout,
             irrevocable: self.irrevocable,
             asynchrony: self.asynchrony,
             clock: Arc::clone(cluster.clock()),
             mutation: self.sys.mutation,
+            trace_tx: self.trace_tx,
         };
         let mut proxies: Vec<Option<Arc<Proxy>>> = vec![None; resolved.len()];
         for (pos, &i) in order.iter().enumerate() {
@@ -496,9 +515,12 @@ impl Transaction {
             }
             self.phase = Phase::Done;
             self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
-            return Err(TxError::ForcedAbort(
+            let e = TxError::ForcedAbort(
                 "object rolled itself back (client suspected crashed)".into(),
-            ));
+            );
+            let cause = e.to_string();
+            self.t_emit(|tx, client| EventKind::TxAbort { tx, client, cause });
+            return Err(e);
         }
         for p in &self.proxies {
             // One commit-protocol message per object.
@@ -527,16 +549,20 @@ impl Transaction {
             }
             self.phase = Phase::Done;
             self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
-            return Err(match finalize_err {
+            let e = match finalize_err {
                 Some(e) => e,
                 None => TxError::ForcedAbort("invalidated at commit".into()),
-            });
+            };
+            let cause = e.to_string();
+            self.t_emit(|tx, client| EventKind::TxAbort { tx, client, cause });
+            return Err(e);
         }
         for p in &self.proxies {
             p.terminate();
         }
         self.phase = Phase::Done;
         self.sys.stats.commits.fetch_add(1, Ordering::Relaxed);
+        self.t_emit(|tx, client| EventKind::TxCommit { tx, client });
         Ok(())
     }
 
@@ -588,6 +614,8 @@ impl Transaction {
                 self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
             }
         }
+        let cause_text = cause.to_string();
+        self.t_emit(|tx, client| EventKind::TxAbort { tx, client, cause: cause_text });
         if timed_out {
             return Err(TxError::Timeout(crate::versioning::WaitTimeout {
                 what: "abort commit-condition wait",
@@ -607,6 +635,11 @@ impl Transaction {
         }
         self.phase = Phase::Done;
         self.sys.stats.forced_aborts.fetch_add(1, Ordering::Relaxed);
+        self.t_emit(|tx, client| EventKind::TxAbort {
+            tx,
+            client,
+            cause: "commit-condition wait timed out (§3.4 emergency finalize)".into(),
+        });
     }
 }
 

@@ -1,0 +1,276 @@
+//! Aggregation over a trace: wait-at-version and exclusive-access-interval
+//! histograms, and the `release_shrinkage` metric.
+//!
+//! `release_shrinkage` quantifies the paper's parallelism mechanism
+//! directly: per committed transaction, the fraction of the transaction's
+//! lifetime each object was actually held before its early release
+//! (`(last early-release − begin) / (commit − begin)`; 1.0 when nothing
+//! was released early). A mean shrinkage well below 1.0 is *why* OptSVA-CF
+//! outperforms SVA — objects become available to successors while their
+//! last user is still running.
+
+use super::{normalize, EventKind, TraceEvent};
+use crate::bench::BenchEntry;
+use crate::cluster::Oid;
+use crate::metrics::Table;
+use crate::util::hist::Histogram;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Aggregated view of one trace session.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    /// Wait-at-version durations (µs) per object, [`Oid`]-ordered.
+    pub wait_per_object: Vec<(Oid, Histogram)>,
+    /// Exclusive-access intervals (µs) per object, [`Oid`]-ordered: first
+    /// touch by a transaction until its early release (or transaction end).
+    pub access_per_object: Vec<(Oid, Histogram)>,
+    /// All wait durations merged across objects.
+    pub wait_all: Histogram,
+    /// All exclusive-access intervals merged across objects.
+    pub access_all: Histogram,
+    /// Mean over committed transactions of
+    /// `(last early-release − begin) / (commit − begin)`; 1.0 when no
+    /// transaction released anything early (or nothing committed).
+    pub release_shrinkage: f64,
+    /// Committed transactions in the trace.
+    pub commits: u64,
+    /// Aborted transactions (manual, forced, and evictions alike).
+    pub aborts: u64,
+    /// Retry-driver re-runs.
+    pub retries: u64,
+    /// Early releases (§2.8 last-use releases, not commit-time ones).
+    pub early_releases: u64,
+    /// Cross-node messages (sends and deliveries).
+    pub messages: u64,
+    /// Executor tasks that ran.
+    pub tasks_run: u64,
+    /// Total events aggregated.
+    pub events: u64,
+}
+
+/// Build the [`TraceSummary`] of an event stream. Consumes
+/// [`normalize`]d timestamps, so interval *ordering* is meaningful even
+/// when the traced run's virtual clock never advanced.
+pub fn summarize(events: &[TraceEvent]) -> TraceSummary {
+    let events = normalize(events);
+    let mut s = TraceSummary { events: events.len() as u64, ..TraceSummary::default() };
+
+    let mut waits: BTreeMap<Oid, Histogram> = BTreeMap::new();
+    let mut access: BTreeMap<Oid, Histogram> = BTreeMap::new();
+    let mut open_wait: BTreeMap<(u64, Oid), Duration> = BTreeMap::new();
+    let mut access_open: BTreeMap<u64, BTreeMap<Oid, Duration>> = BTreeMap::new();
+    // tx → (begin ts, last early-release ts).
+    let mut tx_begin: BTreeMap<u64, Duration> = BTreeMap::new();
+    let mut tx_release: BTreeMap<u64, Duration> = BTreeMap::new();
+    let mut shrinkages: Vec<f64> = Vec::new();
+
+    let mut record_interval = |map: &mut BTreeMap<Oid, Histogram>, oid: Oid, d: Duration| {
+        map.entry(oid).or_default().record_duration(d);
+    };
+
+    for e in &events {
+        if let (Some(tx), Some(oid)) = (e.kind.tx_id(), e.kind.oid()) {
+            if !matches!(e.kind, EventKind::Rollback { .. }) {
+                access_open.entry(tx).or_default().entry(oid).or_insert(e.ts);
+            }
+        }
+        match &e.kind {
+            EventKind::TxBegin { tx, .. } => {
+                tx_begin.insert(*tx, e.ts);
+            }
+            EventKind::TxCommit { tx, .. } | EventKind::TxAbort { tx, .. } => {
+                for (oid, start) in access_open.remove(tx).unwrap_or_default() {
+                    record_interval(&mut access, oid, e.ts.saturating_sub(start));
+                }
+                match &e.kind {
+                    EventKind::TxCommit { .. } => {
+                        s.commits += 1;
+                        if let Some(begin) = tx_begin.remove(tx) {
+                            let full = e.ts.saturating_sub(begin).as_micros() as f64;
+                            let held = tx_release
+                                .remove(tx)
+                                .map(|r| r.saturating_sub(begin).as_micros() as f64);
+                            shrinkages.push(match held {
+                                Some(h) if full > 0.0 => (h / full).min(1.0),
+                                _ => 1.0,
+                            });
+                        }
+                    }
+                    _ => {
+                        s.aborts += 1;
+                        tx_begin.remove(tx);
+                        tx_release.remove(tx);
+                    }
+                }
+            }
+            EventKind::TxRetry { .. } => s.retries += 1,
+            EventKind::WaitStart { tx, oid } => {
+                open_wait.insert((*tx, *oid), e.ts);
+            }
+            EventKind::WaitEnd { tx, oid } => {
+                if let Some(start) = open_wait.remove(&(*tx, *oid)) {
+                    record_interval(&mut waits, *oid, e.ts.saturating_sub(start));
+                }
+            }
+            EventKind::EarlyRelease { tx, oid, .. } => {
+                s.early_releases += 1;
+                tx_release.insert(*tx, e.ts);
+                if let Some(start) = access_open.get_mut(tx).and_then(|m| m.remove(oid)) {
+                    record_interval(&mut access, *oid, e.ts.saturating_sub(start));
+                }
+            }
+            EventKind::MsgSend { .. } | EventKind::MsgDeliver { .. } => s.messages += 1,
+            EventKind::TaskRun { .. } => s.tasks_run += 1,
+            _ => {}
+        }
+    }
+
+    for h in waits.values() {
+        s.wait_all.merge(h);
+    }
+    for h in access.values() {
+        s.access_all.merge(h);
+    }
+    s.wait_per_object = waits.into_iter().collect();
+    s.access_per_object = access.into_iter().collect();
+    s.release_shrinkage = if shrinkages.is_empty() {
+        1.0
+    } else {
+        shrinkages.iter().sum::<f64>() / shrinkages.len() as f64
+    };
+    s
+}
+
+impl TraceSummary {
+    /// Per-object wait/access quantile table for console output.
+    pub fn table(&self, title: impl Into<String>) -> Table {
+        let mut t = Table::new(
+            title,
+            &["object", "waits", "wait_p50_us", "wait_p99_us", "access_p50_us", "access_p99_us"],
+        );
+        let empty = Histogram::new();
+        let oids: Vec<Oid> = self
+            .wait_per_object
+            .iter()
+            .map(|(o, _)| *o)
+            .chain(self.access_per_object.iter().map(|(o, _)| *o))
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .collect();
+        for oid in oids {
+            let w = self
+                .wait_per_object
+                .iter()
+                .find(|(o, _)| *o == oid)
+                .map_or(&empty, |(_, h)| h);
+            let a = self
+                .access_per_object
+                .iter()
+                .find(|(o, _)| *o == oid)
+                .map_or(&empty, |(_, h)| h);
+            t.add_row(vec![
+                oid.to_string(),
+                w.count().to_string(),
+                w.quantile(0.5).to_string(),
+                w.quantile(0.99).to_string(),
+                a.quantile(0.5).to_string(),
+                a.quantile(0.99).to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// The summary as a [`BenchEntry`] in the `bench::report` schema, for
+    /// `BENCH_trace.json` emission by the `trace` CLI.
+    pub fn bench_entry(&self, name: impl Into<String>) -> BenchEntry {
+        BenchEntry::new(name)
+            .metric("release_shrinkage", self.release_shrinkage)
+            .metric("wait_p50_us", self.wait_all.quantile(0.5) as f64)
+            .metric("wait_p99_us", self.wait_all.quantile(0.99) as f64)
+            .metric("access_p50_us", self.access_all.quantile(0.5) as f64)
+            .metric("access_p99_us", self.access_all.quantile(0.99) as f64)
+            .metric("commits", self.commits as f64)
+            .metric("aborts", self.aborts as f64)
+            .metric("retries", self.retries as f64)
+            .metric("early_releases", self.early_releases as f64)
+            .metric("messages", self.messages as f64)
+            .metric("tasks_run", self.tasks_run as f64)
+            .metric("events", self.events as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NodeId;
+
+    fn ev(seq: u64, us: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent { seq, ts: Duration::from_micros(us), node: 0, kind }
+    }
+
+    #[test]
+    fn wait_and_access_histograms_and_shrinkage() {
+        let oid = Oid::new(NodeId(0), 0);
+        let events = vec![
+            ev(0, 0, EventKind::TxBegin { tx: 1, client: NodeId(0) }),
+            ev(1, 10, EventKind::WaitStart { tx: 1, oid }),
+            ev(2, 110, EventKind::WaitEnd { tx: 1, oid }),
+            ev(3, 150, EventKind::EarlyRelease { tx: 1, oid, pv: 1 }),
+            ev(4, 400, EventKind::TxCommit { tx: 1, client: NodeId(0) }),
+        ];
+        let s = summarize(&events);
+        assert_eq!(s.commits, 1);
+        assert_eq!(s.early_releases, 1);
+        assert_eq!(s.wait_all.count(), 1);
+        assert!(s.wait_all.max() >= 96, "wait ≈ 100 µs, got {}", s.wait_all.max());
+        assert_eq!(s.access_all.count(), 1);
+        // Held 150 µs of a 400 µs transaction.
+        assert!((s.release_shrinkage - 0.375).abs() < 0.01, "{}", s.release_shrinkage);
+        assert!(s.release_shrinkage < 1.0);
+        let entry = s.bench_entry("probe");
+        assert_eq!(entry.get("commits"), Some(1.0));
+        assert_eq!(entry.get("release_shrinkage"), Some(s.release_shrinkage));
+    }
+
+    #[test]
+    fn no_early_release_means_shrinkage_one() {
+        let oid = Oid::new(NodeId(0), 0);
+        let events = vec![
+            ev(0, 0, EventKind::TxBegin { tx: 1, client: NodeId(0) }),
+            ev(1, 5, EventKind::BufferCapture { tx: 1, oid }),
+            ev(2, 50, EventKind::TxCommit { tx: 1, client: NodeId(0) }),
+        ];
+        let s = summarize(&events);
+        assert_eq!(s.release_shrinkage, 1.0);
+        assert_eq!(s.access_all.count(), 1, "access interval closed at commit");
+    }
+
+    #[test]
+    fn aborted_transactions_do_not_skew_shrinkage() {
+        let oid = Oid::new(NodeId(0), 0);
+        let events = vec![
+            ev(0, 0, EventKind::TxBegin { tx: 1, client: NodeId(0) }),
+            ev(1, 1, EventKind::EarlyRelease { tx: 1, oid, pv: 1 }),
+            ev(2, 2, EventKind::TxAbort { tx: 1, client: NodeId(0), cause: "manual".into() }),
+        ];
+        let s = summarize(&events);
+        assert_eq!(s.aborts, 1);
+        assert_eq!(s.release_shrinkage, 1.0, "only committed txs contribute");
+        assert!(!s.table("t").is_empty());
+    }
+
+    #[test]
+    fn zero_duration_trace_still_summarizes() {
+        // All-zero virtual timestamps: normalize gives seq-order ticks, so
+        // shrinkage is still strictly < 1.0 when an early release exists.
+        let oid = Oid::new(NodeId(0), 0);
+        let events = vec![
+            ev(0, 0, EventKind::TxBegin { tx: 1, client: NodeId(0) }),
+            ev(1, 0, EventKind::EarlyRelease { tx: 1, oid, pv: 1 }),
+            ev(2, 0, EventKind::TxCommit { tx: 1, client: NodeId(0) }),
+        ];
+        let s = summarize(&events);
+        assert!(s.release_shrinkage < 1.0, "{}", s.release_shrinkage);
+    }
+}

@@ -184,6 +184,25 @@ mod tests {
     }
 
     #[test]
+    fn all_equal_samples_collapse_to_one_bucket() {
+        let mut h = Histogram::new();
+        for _ in 0..500 {
+            h.record(777);
+        }
+        assert_eq!(h.count(), 500);
+        assert_eq!(h.min(), 777);
+        assert_eq!(h.max(), 777);
+        assert_eq!(h.mean(), 777.0);
+        // Every quantile lands in the same bucket, so p0 = p50 = p99 = p100
+        // (all at that bucket's floor, within resolution below 777).
+        let p0 = h.quantile(0.0);
+        assert_eq!(p0, h.quantile(0.5));
+        assert_eq!(p0, h.quantile(0.99));
+        assert_eq!(p0, h.quantile(1.0));
+        assert!((753..=777).contains(&p0), "p0={p0}");
+    }
+
+    #[test]
     fn merge_equals_combined_recording() {
         let mut a = Histogram::new();
         let mut b = Histogram::new();

@@ -63,6 +63,11 @@ pub struct EigenbenchParams {
     /// and throughput is reported against simulated elapsed time. The
     /// default; set `false` to measure wall-clock blocking for real.
     pub virtual_time: bool,
+    /// Record a [`crate::trace`] session over the run and fill
+    /// [`EigenbenchResult::wait`] with the wait-at-version distribution.
+    /// Off by default: the run then pays only one relaxed atomic load per
+    /// would-be event.
+    pub trace: bool,
     /// PRNG seed; every client derives its stream by splitting this.
     pub seed: u64,
 }
@@ -86,6 +91,7 @@ impl Default for EigenbenchParams {
             irrevocable: false,
             pipeline_ops: false,
             virtual_time: true,
+            trace: false,
             seed: 0xE16E_5EED,
         }
     }
@@ -129,13 +135,18 @@ pub struct EigenbenchResult {
     pub sim: Duration,
     /// Per-transaction latency distribution (µs, simulated time).
     pub latency: Histogram,
+    /// Wait-at-version distribution (µs spent blocked in access/commit
+    /// conditions), from the run's [`crate::trace`] session. Empty unless
+    /// [`EigenbenchParams::trace`] was set.
+    pub wait: Histogram,
 }
 
 impl EigenbenchResult {
-    /// One CSV row: `framework,clients,nodes,ratio,throughput,aborts,...`.
+    /// One CSV row: `framework,clients,nodes,ratio,throughput,aborts,...`,
+    /// ending with the wait-at-version p50/p99 (µs; 0 when untraced).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{:.1},{},{},{},{:.3},{},{}",
+            "{},{},{:.1},{},{},{},{:.3},{},{},{},{}",
             self.framework,
             self.params_label,
             self.throughput,
@@ -145,6 +156,8 @@ impl EigenbenchResult {
             self.abort_rate,
             self.wall.as_millis(),
             self.sim.as_millis(),
+            self.wait.quantile(0.5),
+            self.wait.quantile(0.99),
         )
     }
 
@@ -165,6 +178,8 @@ impl EigenbenchResult {
             .metric("sim_ms", self.sim.as_secs_f64() * 1e3)
             .metric("latency_p50_us", self.latency.quantile(0.5) as f64)
             .metric("latency_p99_us", self.latency.quantile(0.99) as f64)
+            .metric("wait_p50_us", self.wait.quantile(0.5) as f64)
+            .metric("wait_p99_us", self.wait.quantile(0.99) as f64)
     }
 }
 
@@ -239,6 +254,14 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
         Cluster::new(params.nodes, params.net)
     });
     let clock = Arc::clone(cluster.clock());
+    // The session (one per process at a time) must open before the
+    // framework is built so node executors label themselves while tracing
+    // is already on; it stamps events with this run's clock.
+    let session = params.trace.then(|| {
+        let s = crate::trace::TraceSession::start();
+        crate::trace::set_session_clock(Arc::clone(&clock));
+        s
+    });
     let fw = Arc::new(params.kind.build(Arc::clone(&cluster)));
 
     // Hot arrays: `arrays_per_node` objects on every node, shared by all.
@@ -370,6 +393,10 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
     let wall = t0.elapsed();
     let sim = clock.now().saturating_sub(sim0);
     fw.shutdown();
+    let wait = match session {
+        Some(s) => crate::trace::aggregate::summarize(&s.finish()).wait_all,
+        None => Histogram::new(),
+    };
 
     let txns = committed_txns.load(Ordering::Relaxed);
     let ops = committed_ops.load(Ordering::Relaxed);
@@ -398,6 +425,7 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
         wall,
         sim,
         latency: Arc::try_unwrap(latency).map(|m| m.into_inner().unwrap()).unwrap_or_default(),
+        wait,
     }
 }
 
@@ -546,6 +574,29 @@ mod tests {
             assert_eq!(pipelined.committed_ops, blocking.committed_ops, "{}", kind.label());
             assert!(pipelined.params_label.ends_with("/pipe"));
         }
+    }
+
+    #[test]
+    fn traced_run_fills_wait_histogram_and_csv_columns() {
+        let r = run_eigenbench(&EigenbenchParams {
+            kind: FrameworkKind::Optsva,
+            nodes: 2,
+            clients_per_node: 2,
+            arrays_per_node: 2,
+            txns_per_client: 2,
+            hot_ops: 4,
+            read_pct: 10,
+            op_delay: Duration::from_millis(2),
+            net: NetworkModel::instant(),
+            trace: true,
+            ..Default::default()
+        });
+        assert_eq!(r.committed_txns, 2 * 2 * 2);
+        // 11 columns: the base 9 plus wait_p50_us / wait_p99_us.
+        assert_eq!(r.csv_row().matches(',').count(), 10);
+        // An untraced run reports an empty wait distribution.
+        let quiet = quick(FrameworkKind::Optsva, 50);
+        assert_eq!(quiet.wait.count(), 0);
     }
 
     #[test]

@@ -218,7 +218,7 @@ pub fn write_results_csv(name: &str, results: &[EigenbenchResult]) -> std::io::R
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
     let mut out = String::from(
-        "framework,label,throughput_ops_s,committed_txns,committed_ops,aborts,abort_rate,wall_ms,sim_ms\n",
+        "framework,label,throughput_ops_s,committed_txns,committed_ops,aborts,abort_rate,wall_ms,sim_ms,wait_p50_us,wait_p99_us\n",
     );
     for r in results {
         out.push_str(&r.csv_row());

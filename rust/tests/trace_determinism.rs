@@ -1,0 +1,78 @@
+//! Trace subsystem acceptance:
+//!
+//!  * same seed ⇒ byte-identical exported Perfetto JSON (the CI
+//!    regression runs the same comparison on the built binary);
+//!  * tracing must not perturb what the protocol does — a traced replay
+//!    and an untraced replay of the same [`ScheduleId`] agree on
+//!    fingerprint, history, and commit/abort counts;
+//!  * the headline observability claim: on `async_buffering` the last
+//!    early release lands strictly inside the transaction interval, so
+//!    `release_shrinkage < 1`.
+
+use atomic_rmi2::analysis::{run_schedule, scenarios, ScheduleId};
+use atomic_rmi2::bench::Json;
+use atomic_rmi2::optsva::ProtocolMutation;
+use atomic_rmi2::trace::{aggregate, perfetto, TraceEvent, TraceSession};
+use std::sync::{Mutex, MutexGuard};
+
+/// The trace recorder is process-global: a session opened by one test
+/// would capture another test's (intentionally untraced) runs. Serialize
+/// every test in this binary through one lock.
+static EXCLUSIVE: Mutex<()> = Mutex::new(());
+
+fn exclusive() -> MutexGuard<'static, ()> {
+    EXCLUSIVE.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn traced_export(name: &str, seed: u64) -> (String, Vec<TraceEvent>) {
+    let scenario = scenarios::by_name(name).unwrap();
+    let session = TraceSession::start();
+    let out = run_schedule(&scenario, &ScheduleId::seed(seed), ProtocolMutation::None);
+    let events = session.finish();
+    assert!(out.violation.is_none(), "{name}: clean protocol must replay clean");
+    (perfetto::export(&events).render(), events)
+}
+
+#[test]
+fn same_seed_exports_byte_identical_perfetto_json() {
+    let _g = exclusive();
+    let (a, events) = traced_export("cascade", 3);
+    let (b, _) = traced_export("cascade", 3);
+    assert!(!events.is_empty(), "a traced cascade replay must record events");
+    assert_eq!(a, b, "same seed must export byte-identical JSON");
+    // The export is valid JSON — the same self-check the CLI applies
+    // before writing the file.
+    Json::parse(&a).expect("exported trace must parse");
+}
+
+#[test]
+fn tracing_does_not_perturb_schedule_outcomes() {
+    let _g = exclusive();
+    for name in ["transfers", "cascade", "async_buffering"] {
+        let scenario = scenarios::by_name(name).unwrap();
+        let id = ScheduleId::seed(11);
+        let plain = run_schedule(&scenario, &id, ProtocolMutation::None);
+        let session = TraceSession::start();
+        let traced = run_schedule(&scenario, &id, ProtocolMutation::None);
+        let events = session.finish();
+        assert!(!events.is_empty(), "{name}");
+        assert_eq!(traced.fingerprint, plain.fingerprint, "{name}");
+        assert_eq!(traced.history, plain.history, "{name}");
+        assert_eq!(traced.committed, plain.committed, "{name}");
+        assert_eq!(traced.aborted, plain.aborted, "{name}");
+    }
+}
+
+#[test]
+fn async_buffering_trace_shows_early_release_shrinkage() {
+    let _g = exclusive();
+    let (_, events) = traced_export("async_buffering", 0);
+    let s = aggregate::summarize(&events);
+    assert!(s.commits > 0);
+    assert!(s.early_releases > 0, "async_buffering must early-release");
+    assert!(
+        s.release_shrinkage < 1.0,
+        "early release must shrink the effective hold interval, got {}",
+        s.release_shrinkage
+    );
+}

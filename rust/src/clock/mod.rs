@@ -36,7 +36,7 @@
 //! quiescent (crashed) system.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 /// The time source every latency injection, timeout, and failure-detector
@@ -47,6 +47,19 @@ pub trait Clock: Send + Sync + std::fmt::Debug {
 
     /// Let `d` of clock time pass on behalf of the calling thread.
     fn sleep(&self, d: Duration);
+
+    /// Block until the clock reaches the absolute `deadline`; a deadline
+    /// already passed returns immediately. The default maps to
+    /// [`Clock::sleep`]; [`VirtualClock`] overrides it to register the
+    /// deadline atomically with reading `now`, so concurrent sleepers
+    /// targeting the same arrival instant (batched message delivery)
+    /// always land in the same coalesced advance.
+    fn sleep_until(&self, deadline: Duration) {
+        let now = self.now();
+        if deadline > now {
+            self.sleep(deadline - now);
+        }
+    }
 
     /// Does this clock simulate time (no real sleeping)?
     fn is_virtual(&self) -> bool {
@@ -147,15 +160,43 @@ impl VirtualClock {
         Arc::new(Self::new())
     }
 
+    /// Poison-tolerant state lock: the clock must stay usable on the
+    /// shutdown/join path even after some task thread panicked while
+    /// holding it (`VcState` is counters and a Vec — always structurally
+    /// valid between mutations).
+    fn lock_state(&self) -> MutexGuard<'_, VcState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// `sleep`, returning the simulated wake-up time (read atomically with
     /// the wake itself, so concurrent waiters can prove their ordering).
     pub fn sleep_tracked(&self, d: Duration) -> Duration {
-        let mut s = self.state.lock().unwrap();
+        let s = self.lock_state();
         if d.is_zero() {
             return s.now;
         }
-        s.activity += 1;
         let deadline = s.now + d;
+        self.sleep_registered(s, deadline)
+    }
+
+    /// [`Clock::sleep_until`] with the wake-up time returned: registers
+    /// the *absolute* deadline under the state lock, so the decision
+    /// "already passed vs. must wait" is atomic with reading `now` and
+    /// equal arrival deadlines from concurrent senders coalesce into a
+    /// single advance.
+    pub fn sleep_until_tracked(&self, deadline: Duration) -> Duration {
+        let s = self.lock_state();
+        if deadline <= s.now {
+            return s.now;
+        }
+        self.sleep_registered(s, deadline)
+    }
+
+    /// Register `(deadline, seq)` and block until simulated time reaches
+    /// it. The earliest registered sleeper advances the clock after a
+    /// short real-time grace window; everyone else is woken by advances.
+    fn sleep_registered(&self, mut s: MutexGuard<'_, VcState>, deadline: Duration) -> Duration {
+        s.activity += 1;
         let seq = s.next_seq;
         s.next_seq += 1;
         s.sleepers.push((deadline, seq));
@@ -173,7 +214,10 @@ impl VirtualClock {
                     // sleepers must get a chance to register so parallel
                     // latencies coalesce instead of stacking serially.
                     // Bounded real wait, then re-evaluate.
-                    let (g, _) = self.cond.wait_timeout(s, ADVANCE_GRACE).unwrap();
+                    let (g, _) = self
+                        .cond
+                        .wait_timeout(s, ADVANCE_GRACE)
+                        .unwrap_or_else(PoisonError::into_inner);
                     s = g;
                     grace_served = true;
                     continue;
@@ -188,19 +232,19 @@ impl VirtualClock {
                 return s.now;
             }
             grace_served = false;
-            s = self.cond.wait(s).unwrap();
+            s = self.cond.wait(s).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Freeze time: sleepers queue up but none advances until [`Self::release`].
     /// Used by tests to register concurrent sleepers deterministically.
     pub fn hold(&self) {
-        self.state.lock().unwrap().holds += 1;
+        self.lock_state().holds += 1;
     }
 
     /// Undo one [`Self::hold`].
     pub fn release(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         assert!(s.holds > 0, "release without hold");
         s.holds -= 1;
         self.cond.notify_all();
@@ -208,17 +252,21 @@ impl VirtualClock {
 
     /// Number of threads currently blocked in `sleep`.
     pub fn sleeper_count(&self) -> usize {
-        self.state.lock().unwrap().sleepers.len()
+        self.lock_state().sleepers.len()
     }
 }
 
 impl Clock for VirtualClock {
     fn now(&self) -> Duration {
-        self.state.lock().unwrap().now
+        self.lock_state().now
     }
 
     fn sleep(&self, d: Duration) {
         self.sleep_tracked(d);
+    }
+
+    fn sleep_until(&self, deadline: Duration) {
+        self.sleep_until_tracked(deadline);
     }
 
     fn is_virtual(&self) -> bool {
@@ -226,11 +274,11 @@ impl Clock for VirtualClock {
     }
 
     fn activity(&self) -> u64 {
-        self.state.lock().unwrap().activity
+        self.lock_state().activity
     }
 
     fn advance_if_stalled(&self, seen: u64, target: Duration) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.lock_state();
         if s.holds == 0 && s.activity == seen && s.sleepers.is_empty() && s.now < target {
             s.now = target;
             s.activity += 1;
@@ -262,6 +310,11 @@ const STALL_CONFIRM_SLICES: u32 = 40;
 /// `clock` time) passes. Returns the reacquired guard and whether the
 /// deadline has passed. Callers loop: re-check their condition first and
 /// treat the expired flag as a timeout only if the condition still fails.
+///
+/// Poison-tolerant: a panicking task elsewhere must not turn every
+/// subsequent join/versioning wait on the same mutex into a second
+/// panic (and thence a wedged shutdown) — the protected state is only
+/// ever mutated under invariant-preserving single assignments.
 pub fn wait_deadline<'a, T>(
     clock: &dyn Clock,
     cond: &Condvar,
@@ -269,21 +322,23 @@ pub fn wait_deadline<'a, T>(
     deadline: Option<Duration>,
 ) -> (MutexGuard<'a, T>, bool) {
     let Some(d) = deadline else {
-        return (cond.wait(guard).unwrap(), false);
+        return (cond.wait(guard).unwrap_or_else(PoisonError::into_inner), false);
     };
     let now = clock.now();
     if now >= d {
         return (guard, true);
     }
     if !clock.is_virtual() {
-        let (g, _) = cond.wait_timeout(guard, d - now).unwrap();
+        let (g, _) = cond.wait_timeout(guard, d - now).unwrap_or_else(PoisonError::into_inner);
         return (g, clock.now() >= d);
     }
     let seen = clock.activity();
     let mut g = guard;
     let mut stalled_slices = 0u32;
     loop {
-        let (g2, to) = cond.wait_timeout(g, VIRTUAL_WAIT_SLICE).unwrap();
+        let (g2, to) = cond
+            .wait_timeout(g, VIRTUAL_WAIT_SLICE)
+            .unwrap_or_else(PoisonError::into_inner);
         g = g2;
         if !to.timed_out() {
             // Notified: hand back so the caller re-checks its condition.
@@ -340,6 +395,38 @@ mod tests {
         let c = VirtualClock::new();
         c.sleep(Duration::ZERO);
         assert_eq!(c.now(), Duration::ZERO);
+    }
+
+    #[test]
+    fn sleep_until_targets_absolute_deadlines() {
+        let c = VirtualClock::new();
+        c.sleep_until(Duration::from_millis(40));
+        assert_eq!(c.now(), Duration::from_millis(40));
+        // A deadline already passed returns immediately without advancing.
+        c.sleep_until(Duration::from_millis(10));
+        assert_eq!(c.now(), Duration::from_millis(40));
+        assert_eq!(c.sleep_until_tracked(Duration::from_millis(40)), Duration::from_millis(40));
+    }
+
+    /// Concurrent sleepers targeting the *same* absolute deadline — the
+    /// batched-delivery wake-up pattern — coalesce into one advance.
+    #[test]
+    fn equal_sleep_until_deadlines_coalesce() {
+        let c = VirtualClock::arc();
+        c.hold();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = Arc::clone(&c);
+            handles.push(thread::spawn(move || c.sleep_until_tracked(Duration::from_millis(8))));
+        }
+        while c.sleeper_count() < 4 {
+            thread::yield_now();
+        }
+        c.release();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), Duration::from_millis(8));
+        }
+        assert_eq!(c.now(), Duration::from_millis(8), "one coalesced advance");
     }
 
     /// The satellite regression: two waiters sleeping different durations

@@ -21,9 +21,20 @@
 //! sleeps; under a [`VirtualClock`](crate::clock::VirtualClock) the delay
 //! is accounted in simulated time and costs no wall time (see
 //! [`Cluster::new_virtual`]).
+//!
+//! Message *transport* is sharded ([`inbox::ShardedInboxes`]): every
+//! cross-node message is posted into the destination node's lock-striped
+//! inbox with an absolute arrival deadline (FIFO per sender–receiver
+//! pair), the sending thread sleeps to that deadline on the cluster
+//! clock (equal deadlines coalesce into one virtual advance), and
+//! whichever thread reaches a node's deadline first drains the whole due
+//! batch in one lock acquisition, emitting one callee-side
+//! `msg-deliver` trace event per message.
 
+pub mod inbox;
 pub mod registry;
 
+pub use inbox::{Envelope, ShardedInboxes};
 pub use registry::{NameId, Registry};
 
 use crate::clock::{Clock, RealClock};
@@ -132,6 +143,7 @@ pub struct Cluster {
     pub registry: Registry,
     /// Message/byte accounting for the simulated interconnect.
     pub stats: NetStats,
+    inboxes: ShardedInboxes,
 }
 
 impl Cluster {
@@ -155,6 +167,7 @@ impl Cluster {
             clock,
             registry: Registry::new(),
             stats: NetStats::default(),
+            inboxes: ShardedInboxes::new(nodes),
         }
     }
 
@@ -178,11 +191,58 @@ impl Cluster {
         self.net
     }
 
+    /// The sharded per-node inboxes every cross-node message flows
+    /// through. Exposed for transport tests and delivery-batching metrics
+    /// ([`ShardedInboxes::delivery_stats`]).
+    pub fn inboxes(&self) -> &ShardedInboxes {
+        &self.inboxes
+    }
+
+    /// Account one message leg at *send time* (mid-run snapshots must see
+    /// in-flight traffic) and emit the sender-side `msg-send` event.
+    fn account_send(&self, from: NodeId, to: NodeId, bytes: usize) {
+        self.stats.messages.fetch_add(1, Ordering::Relaxed);
+        self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        if trace::enabled() {
+            trace::emit(from.0, EventKind::MsgSend { from, to, bytes });
+        }
+    }
+
+    /// Post one message leg into `to`'s inbox and ride along with it:
+    /// sleep (in cluster-clock time) until its effective arrival
+    /// deadline, then drain and deliver `to`'s whole due batch. The
+    /// shared transmission path of [`Cluster::rpc`], [`Cluster::send`]
+    /// and [`Cluster::deliver`].
+    fn transmit(&self, from: NodeId, to: NodeId, bytes: usize, sent_at: Duration) {
+        let arrival = self.inboxes.post(from, to, bytes, sent_at, self.net.delay(bytes), 0);
+        self.clock.sleep_until(arrival);
+        self.deliver_due(to);
+    }
+
+    /// Drain every due envelope at `to` in one inbox-lock acquisition,
+    /// emitting a callee-side `msg-deliver` trace event per message.
+    pub fn deliver_due(&self, to: NodeId) {
+        let due = self.inboxes.drain_due(to, self.clock.now());
+        if trace::enabled() {
+            for env in &due {
+                trace::emit(
+                    env.to.0,
+                    EventKind::MsgDeliver { from: env.from, to: env.to, bytes: env.bytes },
+                );
+            }
+        }
+    }
+
     /// Perform a remote procedure call from `from` to `to`.
     ///
     /// The handler `f` runs at the callee (it must only touch `to`-local
     /// state); the calling thread pays one-way latency for the request of
-    /// `req_bytes` and for the response of the size `f` reports.
+    /// `req_bytes` and for the response of the size `f` reports. Each leg
+    /// is accounted and trace-stamped symmetrically: `msg-send` at the
+    /// sending node when the leg starts, `msg-deliver` at the receiving
+    /// node when its envelope is drained — so a traced round trip is four
+    /// events (two per leg), and stats snapshots taken inside `f` already
+    /// see the request leg.
     pub fn rpc<R>(
         &self,
         from: NodeId,
@@ -194,26 +254,11 @@ impl Cluster {
             self.stats.local_calls.fetch_add(1, Ordering::Relaxed);
             return f().0;
         }
-        if trace::enabled() {
-            trace::emit(from.0, EventKind::MsgSend { from, to, bytes: req_bytes });
-        }
-        let req_delay = self.net.delay(req_bytes);
-        if !req_delay.is_zero() {
-            self.clock.sleep(req_delay);
-        }
+        self.account_send(from, to, req_bytes);
+        self.transmit(from, to, req_bytes, self.clock.now());
         let (result, resp_bytes) = f();
-        let resp_delay = self.net.delay(resp_bytes);
-        if !resp_delay.is_zero() {
-            self.clock.sleep(resp_delay);
-        }
-        if trace::enabled() {
-            // The response leg, arriving back at the caller.
-            trace::emit(from.0, EventKind::MsgDeliver { from: to, to: from, bytes: resp_bytes });
-        }
-        self.stats.messages.fetch_add(2, Ordering::Relaxed);
-        self.stats
-            .bytes
-            .fetch_add((req_bytes + resp_bytes) as u64, Ordering::Relaxed);
+        self.account_send(to, from, resp_bytes);
+        self.transmit(to, from, resp_bytes, self.clock.now());
         result
     }
 
@@ -222,22 +267,15 @@ impl Cluster {
     /// the pipelined-delivery counterpart of [`Cluster::send`], used for
     /// asynchronous operation responses: the transmission overlaps with
     /// whatever the caller did since `sent_at`, so a caller that waits
-    /// late pays nothing.
+    /// late pays nothing (unless an earlier same-pair message is still in
+    /// flight — FIFO delivery never lets a later send overtake it).
     pub fn deliver(&self, from: NodeId, to: NodeId, bytes: usize, sent_at: Duration) {
         if from == to {
             self.stats.local_calls.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        self.stats.messages.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-        let arrival = sent_at + self.net.delay(bytes);
-        let now = self.clock.now();
-        if arrival > now {
-            self.clock.sleep(arrival - now);
-        }
-        if trace::enabled() {
-            trace::emit(to.0, EventKind::MsgDeliver { from, to, bytes });
-        }
+        self.account_send(from, to, bytes);
+        self.transmit(from, to, bytes, sent_at);
     }
 
     /// One-way message (no reply): fault-detection pings, invalidations.
@@ -246,15 +284,8 @@ impl Cluster {
             self.stats.local_calls.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        if trace::enabled() {
-            trace::emit(from.0, EventKind::MsgSend { from, to, bytes });
-        }
-        let delay = self.net.delay(bytes);
-        if !delay.is_zero() {
-            self.clock.sleep(delay);
-        }
-        self.stats.messages.fetch_add(1, Ordering::Relaxed);
-        self.stats.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.account_send(from, to, bytes);
+        self.transmit(from, to, bytes, self.clock.now());
     }
 }
 
@@ -366,5 +397,48 @@ mod tests {
         });
         c.send(NodeId(0), NodeId(1), 24);
         assert_eq!(c.clock().now(), Duration::from_millis(500));
+    }
+
+    /// The per-leg accounting bugfix: a stats snapshot taken *inside* the
+    /// RPC handler — mid-flight, after the request leg but before the
+    /// response leg — must already see the request message. The old code
+    /// incremented both legs once after both latency sleeps, so mid-run
+    /// snapshots undercounted in-flight traffic.
+    #[test]
+    fn rpc_accounts_each_leg_at_send_time() {
+        let net = NetworkModel { one_way: Duration::from_millis(5), per_kib: Duration::ZERO };
+        let c = Cluster::new_virtual(2, net);
+        let v = c.rpc(NodeId(0), NodeId(1), 70, || {
+            let (msgs, bytes, _) = c.stats.snapshot();
+            assert_eq!(msgs, 1, "request leg visible mid-flight");
+            assert_eq!(bytes, 70, "request bytes visible mid-flight");
+            (9, 30)
+        });
+        assert_eq!(v, 9);
+        let (msgs, bytes, _) = c.stats.snapshot();
+        assert_eq!(msgs, 2);
+        assert_eq!(bytes, 100);
+    }
+
+    /// FIFO per sender–receiver pair through the cluster transport: a
+    /// pipelined delivery posted behind an earlier, slower same-pair
+    /// message is clamped to the earlier message's arrival.
+    #[test]
+    fn pipelined_delivery_never_overtakes_an_earlier_same_pair_message() {
+        let net = NetworkModel {
+            one_way: Duration::from_millis(1),
+            per_kib: Duration::from_millis(10),
+        };
+        let c = Cluster::new_virtual(2, net);
+        // A bulky response sent at t=0 arrives at ~1 ms + 10 ms/KiB * 4 KiB.
+        let slow_arrival = c.network().delay(4096);
+        c.inboxes().post(NodeId(1), NodeId(0), 4096, Duration::ZERO, slow_arrival, 0);
+        // A small response sent later on the same pair would nominally
+        // arrive much earlier; FIFO clamps it behind the bulky one.
+        c.deliver(NodeId(1), NodeId(0), 16, Duration::ZERO);
+        assert_eq!(c.clock().now(), slow_arrival, "clamped to the in-flight message");
+        assert_eq!(c.inboxes().pending(NodeId(0)), 0, "both delivered in one batch");
+        let (delivered, drains) = c.inboxes().delivery_stats();
+        assert_eq!((delivered, drains), (2, 1), "batched delivery: two messages, one drain");
     }
 }

@@ -12,13 +12,30 @@
 //! `ObjectCc` pokes the node's [`Signal`] whenever `lv`/`ltv` change;
 //! the executor re-scans its queue on every poke.
 
+pub mod pool;
+
+pub use pool::ExecutorPool;
+
 use crate::clock::{wait_deadline, Clock};
 use crate::cluster::NodeId;
 use crate::trace::{self, EventKind};
-use std::sync::atomic::{AtomicBool, AtomicU16, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU16, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Poison-tolerant lock acquisition for the executor's internal mutexes.
+///
+/// A task action that panics unwinds through the executor loop; with
+/// plain `lock().unwrap()` that poisons the queue/signal mutexes, every
+/// later `submit`/`join`/`shutdown` panics in turn, and `TaskHandle::join`
+/// deadlocks across the whole node shard. Every state protected this way
+/// is structurally valid between mutations (counters, a task Vec, a done
+/// flag), so recovering the guard is always safe.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Generation-counting wakeup signal shared between version counters and
 /// the executor loop.
@@ -41,26 +58,29 @@ impl Signal {
 
     /// Wake anyone waiting on the signal.
     pub fn poke(&self) {
-        let mut g = self.gen.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gen);
         *g += 1;
         self.cond.notify_all();
     }
 
     /// Current generation (monotonically advanced by [`Signal::poke`]).
     pub fn generation(&self) -> u64 {
-        *self.gen.lock().unwrap()
+        *lock_unpoisoned(&self.gen)
     }
 
     /// Wait until the generation advances past `seen` (or the timeout).
     pub fn wait_past(&self, seen: u64, timeout: Duration) -> u64 {
-        let mut g = self.gen.lock().unwrap();
+        let mut g = lock_unpoisoned(&self.gen);
         let deadline = Instant::now() + timeout;
         while *g <= seen {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let (guard, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = self
+                .cond
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             g = guard;
         }
         *g
@@ -109,7 +129,7 @@ impl TaskHandle {
     }
 
     fn complete(&self) {
-        let mut d = self.inner.done.lock().unwrap();
+        let mut d = lock_unpoisoned(&self.inner.done);
         *d = true;
         // Publish under the mutex, before notify: a joiner that saw
         // `flag == false` is either inside the condvar wait (woken below)
@@ -124,9 +144,10 @@ impl TaskHandle {
     }
 
     /// Block until the task has run. `deadline` is absolute in `clock`
-    /// time; `None` ⇒ wait forever.
+    /// time; `None` ⇒ wait forever. Poison-tolerant: a panic inside a
+    /// *different* joiner cannot wedge this join.
     pub fn join(&self, clock: &dyn Clock, deadline: Option<Duration>) -> Result<(), ()> {
-        let mut d = self.inner.done.lock().unwrap();
+        let mut d = lock_unpoisoned(&self.inner.done);
         while !*d {
             let (g, expired) = wait_deadline(clock, &self.inner.cond, d, deadline);
             d = g;
@@ -164,23 +185,31 @@ pub struct Executor {
     /// ([`UNLABELED`] until [`Executor::set_trace_label`] — unlabeled
     /// executors stay silent).
     trace_node: AtomicU16,
+    /// Actions that panicked (contained by [`catch_unwind`]; their
+    /// handles still completed).
+    panics: AtomicU64,
 }
 
 impl Executor {
-    /// Spawn the executor thread.
-    pub fn spawn() -> Arc<Executor> {
-        let exec = Arc::new(Executor {
-            signal: Arc::new(Signal::new()),
+    fn with_parts(signal: Arc<Signal>) -> Executor {
+        Executor {
+            signal,
             state: Mutex::new(ExecutorState { queue: Vec::new(), shutdown: false }),
             thread: Mutex::new(None),
             trace_node: AtomicU16::new(UNLABELED),
-        });
+            panics: AtomicU64::new(0),
+        }
+    }
+
+    /// Spawn the executor thread.
+    pub fn spawn() -> Arc<Executor> {
+        let exec = Arc::new(Executor::with_parts(Arc::new(Signal::new())));
         let loop_exec = Arc::clone(&exec);
         let handle = std::thread::Builder::new()
             .name("executor".into())
             .spawn(move || loop_exec.run_loop())
             .expect("spawn executor");
-        *exec.thread.lock().unwrap() = Some(handle);
+        *lock_unpoisoned(&exec.thread) = Some(handle);
         exec
     }
 
@@ -193,12 +222,16 @@ impl Executor {
     /// of something the OS thread scheduler fires at an arbitrary moment.
     /// [`Executor::shutdown`] works unchanged (there is no thread to join).
     pub fn manual() -> Arc<Executor> {
-        Arc::new(Executor {
-            signal: Arc::new(Signal::new()),
-            state: Mutex::new(ExecutorState { queue: Vec::new(), shutdown: false }),
-            thread: Mutex::new(None),
-            trace_node: AtomicU16::new(UNLABELED),
-        })
+        Arc::new(Executor::with_parts(Arc::new(Signal::new())))
+    }
+
+    /// A threadless executor driven by an [`ExecutorPool`]: like
+    /// [`Executor::manual`] there is no dedicated loop thread, but the
+    /// queue is drained by the pool's work-stealing workers, all waiting
+    /// on the one `signal` shared across the pool — a version-counter
+    /// poke (`ObjectCc::watch`) or a submit on *any* shard wakes them.
+    pub(crate) fn with_signal(signal: Arc<Signal>) -> Arc<Executor> {
+        Arc::new(Executor::with_parts(signal))
     }
 
     /// Label this executor with the node it serves so queued/ran tasks can
@@ -248,7 +281,7 @@ impl Executor {
         action: impl FnOnce() + Send + 'static,
     ) {
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             assert!(!st.shutdown, "submit after shutdown");
             st.queue.push(Task {
                 cond: Box::new(cond),
@@ -262,14 +295,41 @@ impl Executor {
 
     /// Number of queued (not yet run) tasks.
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        lock_unpoisoned(&self.state).queue.len()
+    }
+
+    /// Number of actions that panicked inside this executor. The panics
+    /// are contained ([`catch_unwind`]): the default panic hook still
+    /// reports them, their handles complete so joiners never deadlock,
+    /// and the executor keeps draining its queue.
+    pub fn panicked_tasks(&self) -> u64 {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Evaluate a task's condition, containing panics: a condition that
+    /// panics is treated as *ready*, so the broken task leaves the queue
+    /// through the (also contained) action path instead of poisoning the
+    /// queue lock and wedging the shard.
+    fn cond_holds(t: &Task) -> bool {
+        catch_unwind(AssertUnwindSafe(|| (t.cond)())).unwrap_or(true)
+    }
+
+    /// Run one collected action with panic containment: the handle
+    /// completes whether or not the action panicked, so `TaskHandle::join`
+    /// never deadlocks on a crashed task.
+    fn run_action(&self, action: Action, handle: &TaskHandle) {
+        self.t_emit(|node| EventKind::TaskRun { node });
+        if catch_unwind(AssertUnwindSafe(action)).is_err() {
+            self.panics.fetch_add(1, Ordering::Relaxed);
+        }
+        handle.complete();
     }
 
     /// Number of queued tasks whose condition currently holds (manual
     /// mode: how many executor actions the explorer may schedule now).
     pub fn ready_count(&self) -> usize {
-        let st = self.state.lock().unwrap();
-        st.queue.iter().filter(|t| (t.cond)()).count()
+        let st = lock_unpoisoned(&self.state);
+        st.queue.iter().filter(|t| Self::cond_holds(t)).count()
     }
 
     /// Run the `n`-th currently-ready task (0-based, in submission order
@@ -278,10 +338,10 @@ impl Executor {
     /// the action runs on the calling thread, outside the queue lock.
     pub fn run_ready(&self, n: usize) -> bool {
         let picked = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             let mut ready_seen = 0usize;
             let pos = st.queue.iter().position(|t| {
-                if (t.cond)() {
+                if Self::cond_holds(t) {
                     let hit = ready_seen == n;
                     ready_seen += 1;
                     hit
@@ -296,43 +356,55 @@ impl Executor {
         };
         match picked {
             Some((action, handle)) => {
-                self.t_emit(|node| EventKind::TaskRun { node });
-                action();
-                handle.complete();
+                self.run_action(action, &handle);
                 true
             }
             None => false,
         }
     }
 
+    /// Remove every currently-runnable task from the queue in one lock
+    /// pass — the batched collect shared by the spawned loop and the
+    /// pool's work-stealing workers.
+    fn take_runnable(&self) -> Vec<(Action, TaskHandle)> {
+        let mut st = lock_unpoisoned(&self.state);
+        let mut runnable: Vec<(Action, TaskHandle)> = Vec::new();
+        let mut i = 0;
+        while i < st.queue.len() {
+            if Self::cond_holds(&st.queue[i]) {
+                let mut t = st.queue.remove(i);
+                runnable.push((t.action.take().unwrap(), t.handle.clone()));
+            } else {
+                i += 1;
+            }
+        }
+        runnable
+    }
+
+    /// Collect and run every currently-ready task (actions run outside
+    /// the queue lock, on the calling thread). Returns how many ran. The
+    /// per-shard drain step of [`ExecutorPool`] workers.
+    pub fn run_all_ready(&self) -> usize {
+        let runnable = self.take_runnable();
+        let n = runnable.len();
+        for (action, handle) in runnable {
+            self.run_action(action, &handle);
+        }
+        n
+    }
+
     fn run_loop(&self) {
         let mut seen_gen = 0u64;
         loop {
-            // Collect runnable tasks under the lock, run them outside it
-            // (actions may take object locks / run kernels).
-            let mut runnable: Vec<(Action, TaskHandle)> = Vec::new();
             {
-                let mut st = self.state.lock().unwrap();
+                let st = lock_unpoisoned(&self.state);
                 if st.shutdown && st.queue.is_empty() {
                     return;
                 }
-                let mut i = 0;
-                while i < st.queue.len() {
-                    if (st.queue[i].cond)() {
-                        let mut t = st.queue.remove(i);
-                        runnable.push((t.action.take().unwrap(), t.handle.clone()));
-                    } else {
-                        i += 1;
-                    }
-                }
             }
-            let ran_any = !runnable.is_empty();
-            for (action, handle) in runnable {
-                self.t_emit(|node| EventKind::TaskRun { node });
-                action();
-                handle.complete();
-            }
-            if ran_any {
+            // Collect runnable tasks under the lock, run them outside it
+            // (actions may take object locks / run kernels).
+            if self.run_all_ready() > 0 {
                 // A completed task may be exactly what a queued task's
                 // condition was gated on (submitted operations chain per
                 // object): rescan immediately instead of waiting for a
@@ -347,9 +419,9 @@ impl Executor {
 
     /// Stop the executor once its queue drains.
     pub fn shutdown(&self) {
-        self.state.lock().unwrap().shutdown = true;
+        lock_unpoisoned(&self.state).shutdown = true;
         self.signal.poke();
-        if let Some(h) = self.thread.lock().unwrap().take() {
+        if let Some(h) = lock_unpoisoned(&self.thread).take() {
             let _ = h.join();
         }
     }
@@ -359,7 +431,7 @@ impl Drop for Executor {
     fn drop(&mut self) {
         // Best-effort: if the owner forgot to call shutdown, stop the
         // thread without joining (we may be on the executor thread itself).
-        self.state.lock().unwrap().shutdown = true;
+        lock_unpoisoned(&self.state).shutdown = true;
         self.signal.poke();
     }
 }
@@ -435,6 +507,38 @@ mod tests {
         // non-empty is fine — run_loop exits only when queue empties, so
         // poke a trivially-true replacement path: directly clear via drop.
         ex.state.lock().unwrap().queue.clear();
+        ex.shutdown();
+    }
+
+    /// The poison-tolerance satellite: a panicking action must not wedge
+    /// `TaskHandle::join`, poison the queue, or stop later tasks from
+    /// running on the same executor.
+    #[test]
+    fn panicking_task_completes_its_handle_and_spares_the_shard() {
+        let ex = Executor::spawn();
+        let h_bad = ex.submit(|| true, || panic!("task blew up"));
+        join_within_5s(&h_bad);
+        assert!(h_bad.is_done(), "panicked task still completes (contained)");
+        // The executor keeps draining: a later task runs normally.
+        let ran = Arc::new(AtomicBool::new(false));
+        let r = Arc::clone(&ran);
+        let h_ok = ex.submit(|| true, move || r.store(true, Ordering::SeqCst));
+        join_within_5s(&h_ok);
+        assert!(ran.load(Ordering::SeqCst));
+        assert_eq!(ex.panicked_tasks(), 1);
+        ex.shutdown();
+    }
+
+    /// A panicking *condition* must not poison the queue either: the task
+    /// is treated as ready, drained through the contained action path,
+    /// and the shard stays live.
+    #[test]
+    fn panicking_condition_drains_instead_of_poisoning() {
+        let ex = Executor::spawn();
+        let h = ex.submit(|| panic!("condition blew up"), || {});
+        join_within_5s(&h);
+        assert!(h.is_done());
+        assert_eq!(ex.pending(), 0, "broken task left the queue");
         ex.shutdown();
     }
 

@@ -14,20 +14,24 @@
 //!   [`VirtualClock`] (discrete-event simulated time; latency injection,
 //!   timeouts and fault detection with zero real sleeping);
 //! * [`cluster`] — simulated distributed substrate (nodes, latency-injected
-//!   RPC, name registry);
+//!   RPC through sharded per-node inboxes with FIFO-per-pair batched
+//!   delivery, name registry);
 //! * [`object`] — the complex shared-object model (§2.5): black-box objects
 //!   with READ/WRITE/UPDATE-annotated methods;
 //! * [`buffers`] — copy & log buffers (§2.6);
 //! * [`versioning`] — `pv`/`lv`/`ltv` counters, access & commit conditions,
 //!   invalidation marks (§2.1–§2.3);
-//! * [`executor`] — per-node (condition, code) task executor (§3.3);
+//! * [`executor`] — per-node (condition, code) task executor (§3.3), plus
+//!   the work-stealing [`executor::ExecutorPool`] that drains hundreds of
+//!   node shards with a bounded worker set;
 //! * [`optsva`] — **the paper's contribution**: OptSVA-CF / Atomic RMI 2
 //!   (§2.8, §3);
 //! * [`sva`] — Atomic RMI 1 baseline (operation-agnostic SVA);
 //! * [`tfa`] — HyFlow2 stand-in (optimistic Transaction Forwarding, DF);
 //! * [`locks`] — distributed lock baselines (Mutex/R-W × S2PL/2PL, GLock);
 //! * [`api`] — the framework-polymorphic `Transaction`/`Dtm` API (Fig 8);
-//! * [`workload`] — distributed Eigenbench (§4.2);
+//! * [`workload`] — distributed Eigenbench (§4.2) and the megascale
+//!   discrete-event extension of fig 11 (`workload::megascale`);
 //! * [`metrics`], [`config`], [`checker`], [`faults`] — measurement,
 //!   scenario configuration, safety checking, fault injection;
 //! * [`bench`] — machine-readable `BENCH_*.json` reports and the CI

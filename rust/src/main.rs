@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! atomic-rmi2 eigenbench [--config FILE] [--framework F] [--nodes N] …
-//! atomic-rmi2 sweep fig10|fig11|fig12|fig13 [--quick] [--csv]
+//! atomic-rmi2 sweep fig10|fig11|fig11ext|fig12|fig13 [--quick] [--csv]
 //! atomic-rmi2 check [--scenario NAME] [--mutation M] [--schedule SID] …
 //! atomic-rmi2 demo
 //! atomic-rmi2 list-frameworks
@@ -37,7 +37,9 @@ USAGE:
               [--clients_per_node C] [--arrays_per_node A] [--read_pct P]
               [--hot_ops H] [--mild_ops M] [--txns_per_client T]
               [--op_delay_us U] [--irrevocable true] [--seed S]
-  atomic-rmi2 sweep fig10|fig11|fig12|fig13|all [--quick]
+  atomic-rmi2 sweep fig10|fig11|fig11ext|fig12|fig13|all [--quick]
+              (fig11ext: megascale node-count sweep on the discrete-event
+               engine; not part of `all` — run it explicitly)
   atomic-rmi2 check [--scenario NAME] [--seeds N] [--flip-depth D]
               [--flip-bases B] [--min-distinct K]
               [--mutation none|premature-release|skip-invalidation]
@@ -131,6 +133,20 @@ fn sweep(args: &CliArgs) {
                 }
                 report_results("fig11", scale, &results);
             }
+            "fig11ext" => {
+                let (table, results) = sweeps::fig11_extended(scale);
+                println!("{}", table.render());
+                let (flat_nodes, peak) = sweeps::flattening_point(&results);
+                println!(
+                    "flattening point: {} nodes (peak {} ops/s)",
+                    flat_nodes,
+                    fmt_throughput(peak)
+                );
+                match sweeps::write_megascale_json("fig11ext", scale, &results) {
+                    Ok(path) => eprintln!("report: {path}"),
+                    Err(e) => eprintln!("json write failed: {e}"),
+                }
+            }
             "fig12" => {
                 let (tables, results) = sweeps::fig12(scale);
                 for t in &tables {
@@ -144,7 +160,7 @@ fn sweep(args: &CliArgs) {
                 report_results("fig13", scale, &results);
             }
             other => {
-                eprintln!("unknown figure {other:?}; use fig10|fig11|fig12|fig13|all");
+                eprintln!("unknown figure {other:?}; use fig10|fig11|fig11ext|fig12|fig13|all");
                 std::process::exit(2);
             }
         };

@@ -22,7 +22,7 @@ pub use transaction::Transaction;
 
 use crate::api::{run_with_retries, Dtm, TxCtx, TxError, TxSpec, TxStats};
 use crate::cluster::{Cluster, NodeId, Oid, Registry};
-use crate::executor::Executor;
+use crate::executor::{Executor, ExecutorPool};
 use crate::object::SharedObject;
 use crate::versioning::ObjectCc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -161,6 +161,9 @@ impl Default for OptsvaConfig {
 pub struct AtomicRmi2 {
     cluster: Arc<Cluster>,
     nodes: Vec<NodeState>,
+    /// Work-stealing pool backing the node executors (`None` in the
+    /// explorer's manual mode, where tasks are scheduling decisions).
+    pool: Option<Arc<ExecutorPool>>,
     /// System-wide commit/abort/release counters.
     pub stats: Arc<SysStats>,
     config: OptsvaConfig,
@@ -176,11 +179,17 @@ impl AtomicRmi2 {
     }
 
     /// Stand up the system on `cluster` with explicit tuning knobs.
+    ///
+    /// Node executors are shards of one work-stealing [`ExecutorPool`]
+    /// (one queue per node, at most `MAX_POOL_WORKERS` worker threads),
+    /// so a single process can instantiate 10²–10³ simulated nodes
+    /// without a thread per node.
     pub fn with_config(cluster: Arc<Cluster>, config: OptsvaConfig) -> Arc<Self> {
+        let pool = ExecutorPool::start(cluster.node_count() as usize);
         let nodes = cluster
             .node_ids()
             .map(|node| {
-                let executor = Executor::spawn();
+                let executor = pool.executor(node.0 as usize);
                 executor.set_trace_label(node);
                 NodeState { slots: RwLock::new(Vec::new()), executor }
             })
@@ -188,6 +197,7 @@ impl AtomicRmi2 {
         Arc::new(AtomicRmi2 {
             cluster,
             nodes,
+            pool: Some(pool),
             stats: Arc::new(SysStats::default()),
             config,
             mutation: ProtocolMutation::None,
@@ -214,6 +224,7 @@ impl AtomicRmi2 {
         Arc::new(AtomicRmi2 {
             cluster,
             nodes,
+            pool: None,
             stats: Arc::new(SysStats::default()),
             config,
             mutation,
@@ -285,10 +296,17 @@ impl AtomicRmi2 {
             .collect()
     }
 
-    /// Shut down all node executors (drains queues).
+    /// Shut down all node executors (drains queues). With a pool this
+    /// marks every shard shut down and joins the workers; in manual mode
+    /// it falls back to per-executor shutdown.
     pub fn shutdown(&self) {
-        for n in &self.nodes {
-            n.executor.shutdown();
+        match &self.pool {
+            Some(pool) => pool.shutdown(),
+            None => {
+                for n in &self.nodes {
+                    n.executor.shutdown();
+                }
+            }
         }
     }
 

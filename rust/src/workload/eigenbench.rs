@@ -329,7 +329,16 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
             let total_attempts = Arc::clone(&total_attempts);
             let mut rng = Prng::seeded(params.seed).split(client_id as u64);
             client_id += 1;
-            handles.push(std::thread::spawn(move || {
+            // Named threads with a small fixed stack: client bodies are
+            // shallow (no recursion), and the default 2 MiB per thread is
+            // what caps how many clients fit in one process. The truly
+            // huge client counts run on the megascale engine instead
+            // ([`super::megascale`]), but this keeps the faithful
+            // thread-per-client harness usable well past paper scale.
+            let builder = std::thread::Builder::new()
+                .name(format!("eigen-client-{}", client_id - 1))
+                .stack_size(256 * 1024);
+            let builder_handle = builder.spawn(move || {
                 let mut history: Vec<String> = Vec::new();
                 // Cold array: client-local, non-transactional.
                 let mut cold: Vec<i64> = vec![0; params.arrays_per_node as usize];
@@ -384,7 +393,8 @@ pub fn run_eigenbench(params: &EigenbenchParams) -> EigenbenchResult {
                     }
                 }
                 latency.lock().unwrap().merge(&local_hist);
-            }));
+            });
+            handles.push(builder_handle.expect("spawn eigenbench client thread"));
         }
     }
     for h in handles {

@@ -18,8 +18,10 @@
 
 pub mod eigenbench;
 pub mod frameworks;
+pub mod megascale;
 pub mod sweeps;
 
 pub use eigenbench::{run_eigenbench, EigenbenchParams, EigenbenchResult};
 pub use frameworks::{Framework, FrameworkKind, ALL_FRAMEWORKS};
+pub use megascale::{run_megascale, MegascaleParams, MegascaleResult};
 pub use sweeps::Scale;

@@ -16,7 +16,8 @@
 
 use super::eigenbench::{run_eigenbench, EigenbenchParams, EigenbenchResult};
 use super::frameworks::FrameworkKind;
-use crate::bench::BenchReport;
+use super::megascale::{run_megascale, MegascaleParams, MegascaleResult};
+use crate::bench::{BenchEntry, BenchReport};
 use crate::metrics::{fmt_throughput, Table};
 use crate::NetworkModel;
 use std::time::Duration;
@@ -212,6 +213,92 @@ pub fn fig13(scale: Scale) -> (Table, Vec<EigenbenchResult>) {
     (t, all)
 }
 
+/// Fig 11 extended: throughput vs node count pushed 10–100× past the
+/// paper's 16 nodes (10⁵–10⁶ simulated clients at 1000 clients/node),
+/// run on the megascale discrete-event engine
+/// ([`crate::workload::megascale`]) over the same sharded transport the
+/// blocking frameworks use. The global hot set is a *fixed* size as
+/// nodes scale, so aggregate throughput rises with node count until the
+/// hot objects' service capacity saturates and the curve flattens —
+/// [`flattening_point`] records where.
+pub fn fig11_extended(scale: Scale) -> (Table, Vec<MegascaleResult>) {
+    let (nodes, txns): (&[u16], u32) = match scale {
+        // Quick already crosses the acceptance floor: 200 nodes ×
+        // 1000 clients/node = 2×10⁵ simulated clients.
+        Scale::Quick => (&[25, 50, 100, 200], 1),
+        Scale::Full => (&[25, 50, 100, 250, 500, 1000], 2),
+    };
+    let mut t = Table::new(
+        "Fig 11 ext: megascale throughput [ops/s] vs nodes, 1000 clients/node",
+        &["nodes", "clients", "ops/s", "sim_ms", "wall_ms", "msgs", "batch"],
+    );
+    let mut all = Vec::new();
+    for &n in nodes {
+        let r = run_megascale(&MegascaleParams {
+            nodes: n,
+            txns_per_client: txns,
+            ..Default::default()
+        });
+        t.add_row(vec![
+            format!("{n}"),
+            format!("{}", r.clients),
+            fmt_throughput(r.throughput),
+            format!("{}", r.sim.as_millis()),
+            format!("{}", r.wall.as_millis()),
+            format!("{}", r.messages),
+            format!("{:.1}", r.batch_factor),
+        ]);
+        all.push(r);
+    }
+    (t, all)
+}
+
+/// Where the megascale curve flattens: the first node count whose
+/// throughput gain over the previous point is below 10 %, and the peak
+/// throughput of the sweep. Falls back to the last point when the curve
+/// is still climbing at the end of the range.
+pub fn flattening_point(results: &[MegascaleResult]) -> (u16, f64) {
+    let peak = results.iter().map(|r| r.throughput).fold(0.0f64, f64::max);
+    for w in results.windows(2) {
+        if w[1].throughput < w[0].throughput * 1.10 {
+            return (w[1].nodes, peak);
+        }
+    }
+    (results.last().map(|r| r.nodes).unwrap_or(0), peak)
+}
+
+/// Write a megascale sweep as `target/bench-results/BENCH_<name>.json`:
+/// one entry per node count plus a `flattening` entry recording the
+/// [`flattening_point`]. Returns the written path.
+pub fn write_megascale_json(
+    name: &str,
+    scale: Scale,
+    results: &[MegascaleResult],
+) -> std::io::Result<String> {
+    let mut report = BenchReport::new(name).config("scale", format!("{scale:?}"));
+    for r in results {
+        report.push(
+            BenchEntry::new(format!("megascale/{}n", r.nodes))
+                .metric("throughput_ops_s", r.throughput)
+                .metric("clients", r.clients as f64)
+                .metric("committed_txns", r.committed_txns as f64)
+                .metric("committed_ops", r.committed_ops as f64)
+                .metric("sim_ms", r.sim.as_secs_f64() * 1e3)
+                .metric("wall_ms", r.wall.as_secs_f64() * 1e3)
+                .metric("messages", r.messages as f64)
+                .metric("batch_factor", r.batch_factor),
+        );
+    }
+    let (flat_nodes, peak) = flattening_point(results);
+    report.push(
+        BenchEntry::new("flattening")
+            .metric("flatten_nodes", flat_nodes as f64)
+            .metric("peak_ops_s", peak),
+    );
+    let path = report.write_to(&crate::bench::default_output_dir())?;
+    Ok(path.display().to_string())
+}
+
 /// Append raw results to a CSV file under `target/bench-results/`.
 pub fn write_results_csv(name: &str, results: &[EigenbenchResult]) -> std::io::Result<String> {
     let dir = std::path::Path::new("target/bench-results");
@@ -266,6 +353,44 @@ mod tests {
         let path = write_results_csv("test_fig13", &results).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.lines().count() > 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    fn mega(nodes: u16, throughput: f64) -> MegascaleResult {
+        MegascaleResult {
+            nodes,
+            clients: nodes as u64 * 1000,
+            committed_txns: 1,
+            committed_ops: 4,
+            sim: Duration::from_secs(1),
+            wall: Duration::from_millis(5),
+            throughput,
+            messages: 8,
+            batch_factor: 1.5,
+        }
+    }
+
+    #[test]
+    fn flattening_point_finds_first_sub_10pct_gain() {
+        let rising = [mega(25, 100.0), mega(50, 200.0), mega(100, 400.0)];
+        assert_eq!(flattening_point(&rising), (100, 400.0), "still climbing: last point");
+        let flat = [mega(25, 100.0), mega(50, 200.0), mega(100, 210.0), mega(200, 215.0)];
+        assert_eq!(flattening_point(&flat).0, 100, "first <10% marginal gain");
+        assert_eq!(flattening_point(&flat).1, 215.0, "peak is the max, not the knee");
+    }
+
+    #[test]
+    fn megascale_json_records_flattening_entry() {
+        let results = [mega(25, 100.0), mega(50, 105.0)];
+        let path = write_megascale_json("test_fig11ext", Scale::Quick, &results).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let report = BenchReport::parse(&text).unwrap();
+        assert_eq!(report.entries.len(), 3, "one per node count + flattening");
+        let flat = report.entries.iter().find(|e| e.name == "flattening").unwrap();
+        assert_eq!(flat.get("flatten_nodes"), Some(50.0));
+        assert_eq!(flat.get("peak_ops_s"), Some(105.0));
+        let first = report.entries.iter().find(|e| e.name == "megascale/25n").unwrap();
+        assert_eq!(first.get("clients"), Some(25_000.0));
         let _ = std::fs::remove_file(path);
     }
 

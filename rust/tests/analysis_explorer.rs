@@ -40,6 +40,28 @@ fn same_schedule_id_is_byte_identical() {
     }
 }
 
+/// Transport-refactor regression: replaying a schedule after *other*
+/// scenarios have run (each constructing its own sharded inboxes and
+/// draining batches) must not perturb the history — the explorer's
+/// determinism depends on per-cluster transport state only, never on
+/// process-global sequencing.
+#[test]
+fn fingerprints_are_stable_across_interleaved_scenarios() {
+    let id = ScheduleId::seed(11);
+    let mut first = Vec::new();
+    for name in ["transfers", "cascade", "async_buffering"] {
+        let s = scenarios::by_name(name).unwrap();
+        first.push(run_schedule(&s, &id, ProtocolMutation::None));
+    }
+    // Re-run in reverse order, with the other scenarios' runs in between.
+    for (i, name) in ["transfers", "cascade", "async_buffering"].iter().enumerate().rev() {
+        let s = scenarios::by_name(name).unwrap();
+        let again = run_schedule(&s, &id, ProtocolMutation::None);
+        assert_eq!(again.history, first[i].history, "{name}: history changed on re-run");
+        assert_eq!(again.fingerprint, first[i].fingerprint, "{name}");
+    }
+}
+
 /// Different seeds must actually explore: the schedule space of every
 /// scenario is large, so a modest seed budget yields many distinct runs.
 #[test]

@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Arm the CI bench gate: promote measured BENCH_micro/BENCH_ablation
+# reports from a green CI run's `bench-reports` artifact to committed
+# root baselines (see docs/BENCHMARKS.md, "Refreshing a baseline").
+#
+# Usage:
+#   gh run download <RUN_ID> --name bench-reports --dir /tmp/bench-reports
+#   scripts/arm_bench_gate.sh /tmp/bench-reports
+#
+# The script:
+#   * copies BENCH_micro.json and BENCH_ablation.json to the repo root;
+#   * drops the `kernel_xla_mix` entry from the micro baseline (only
+#     emitted when PJRT artifacts are built, so gating it would fail
+#     every standard runner);
+#   * forces `"provisional": false` so the gate compares for real;
+#   * leaves the diff staged for you to review and commit.
+set -euo pipefail
+
+if [ $# -ne 1 ] || [ ! -d "$1" ]; then
+    echo "usage: $0 <downloaded-bench-reports-dir>" >&2
+    exit 2
+fi
+src=$1
+root=$(cd "$(dirname "$0")/.." && pwd)
+
+for name in BENCH_micro.json BENCH_ablation.json; do
+    if [ ! -f "$src/$name" ]; then
+        echo "arm_bench_gate: $src/$name not found — is this a bench-reports artifact?" >&2
+        exit 1
+    fi
+done
+
+python3 - "$src" "$root" <<'EOF'
+import json, sys
+src, root = sys.argv[1], sys.argv[2]
+for name, drop in (("BENCH_micro.json", {"kernel_xla_mix"}), ("BENCH_ablation.json", set())):
+    with open(f"{src}/{name}") as f:
+        doc = json.load(f)
+    doc["provisional"] = False
+    before = len(doc["entries"])
+    doc["entries"] = [e for e in doc["entries"] if e["name"] not in drop]
+    with open(f"{root}/{name}", "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"armed {name}: {len(doc['entries'])} entries"
+          + (f" (dropped {before - len(doc['entries'])})" if before != len(doc["entries"]) else ""))
+EOF
+
+cd "$root"
+git add BENCH_micro.json BENCH_ablation.json
+git --no-pager diff --cached --stat
+echo "arm_bench_gate: staged. Review with 'git diff --cached', then commit."

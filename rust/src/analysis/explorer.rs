@@ -39,7 +39,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::lint::{lint_declarations, DeclUsage, LintDiagnostic};
+use super::lint::{lint_declarations, lint_interface, DeclUsage, LintDiagnostic};
 use super::scenarios::{Scenario, TxEnd, TxScript};
 
 /// Explorer tuning. The defaults satisfy the acceptance bar (≥ 200
@@ -708,6 +708,9 @@ pub fn explore(scenario: &Scenario, cfg: &ExploreConfig) -> ExploreReport {
 
     report.distinct_schedules = seen.len();
     report.lint = lint_declarations(&usages);
+    // Static interface pass: all scenarios host Accounts, so check its
+    // commutativity declarations once per exploration.
+    report.lint.extend(lint_interface("Account", Account::with_balance(0).interface()));
     report
 }
 
@@ -736,6 +739,52 @@ mod tests {
         assert!(out.violation.is_none(), "{:?}\n{}", out.violation, out.history);
         assert_eq!(out.committed + out.aborted, 3);
         assert!(out.history.contains("final:"));
+    }
+
+    #[test]
+    fn commute_group_orders_agree_across_schedules() {
+        // Property: across ≥ 200 distinct schedules of the `commute`
+        // scenario, every intra-group order of the commuting deposits
+        // yields the same final balance (100+100+20+10+1 = 231), all
+        // three transactions commit, and the opacity verdict is clean.
+        let s = scenarios::by_name("commute").unwrap();
+        let mut seen = BTreeSet::new();
+        let mut seed = 0u64;
+        while seen.len() < 200 && seed < 600 {
+            let out = run_schedule(&s, &ScheduleId::seed(seed), ProtocolMutation::None);
+            assert!(out.violation.is_none(), "S{seed}: {:?}\n{}", out.violation, out.history);
+            assert_eq!(out.committed, 3, "S{seed}: not all committed\n{}", out.history);
+            assert!(
+                out.history.contains("final: hot=231"),
+                "S{seed}: schedule-dependent final balance\n{}",
+                out.history
+            );
+            seen.insert(out.fingerprint);
+            seed += 1;
+        }
+        assert!(seen.len() >= 200, "only {} distinct schedules in 600 seeds", seen.len());
+    }
+
+    #[test]
+    fn bogus_commute_mutation_is_caught_on_commute_scenario() {
+        // Trusting the commutativity class alone routes t2's deposit
+        // through the group despite its read declaration; its live
+        // balance read then observes co-members' unserialized state in
+        // at least some schedules.
+        let s = scenarios::by_name("commute").unwrap();
+        let cfg = ExploreConfig {
+            seeds: 96,
+            min_distinct: 64,
+            mutation: ProtocolMutation::BogusCommute,
+            ..ExploreConfig::default()
+        };
+        let report = explore(&s, &cfg);
+        assert!(
+            report.violations_total > 0,
+            "bogus-commute went undetected over {} runs ({} distinct)",
+            report.runs,
+            report.distinct_schedules
+        );
     }
 
     #[test]

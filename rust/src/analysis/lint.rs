@@ -25,6 +25,7 @@
 //! proves nothing about the declaration).
 
 use crate::api::Suprema;
+use crate::object::{Commutes, MethodSpec, Mode};
 use std::collections::BTreeMap;
 
 /// Observed per-mode usage of one declaration in one run.
@@ -57,6 +58,13 @@ pub enum LintKind {
     UnusedDeclaration,
     /// Declared with no bound (`Suprema::unknown()`): early release off.
     UnboundedSupremum,
+    /// A commuting-declared method whose mode is `Read`: its return value
+    /// observes state, so concurrent group members would see unserialized
+    /// intermediate states. Observers cannot commute.
+    CommutingObserver,
+    /// A `Commutes::Class` method with no inverse: the group path cannot
+    /// undo it on abort, so the runtime ignores the declaration.
+    CommutingNoInverse,
 }
 
 impl LintKind {
@@ -67,6 +75,8 @@ impl LintKind {
             LintKind::OverDeclared => "over-declared",
             LintKind::UnusedDeclaration => "unused-declaration",
             LintKind::UnboundedSupremum => "unbounded-supremum",
+            LintKind::CommutingObserver => "commuting-observer",
+            LintKind::CommutingNoInverse => "commuting-no-inverse",
         }
     }
 }
@@ -76,9 +86,9 @@ impl LintKind {
 pub struct LintDiagnostic {
     /// Which lint fired.
     pub kind: LintKind,
-    /// Transaction tag.
+    /// Transaction tag (interface lints put the *method name* here).
     pub tag: String,
-    /// Object name.
+    /// Object name (interface lints put the *type name* here).
     pub object: String,
     /// The mode concerned (`"read"`/`"write"`/`"update"`; `"*"` for
     /// whole-declaration lints).
@@ -116,6 +126,20 @@ impl std::fmt::Display for LintDiagnostic {
                 "[unbounded-supremum] tx {} on {}: no {} bound declared — early release is \
                  disabled for this object",
                 self.tag, self.object, self.mode
+            ),
+            LintKind::CommutingObserver => write!(
+                f,
+                "[commuting-observer] {}::{} declares a commutativity class but its mode is \
+                 {} — an observer's return value depends on chain position, so group members \
+                 would see unserialized intermediate state",
+                self.object, self.tag, self.mode
+            ),
+            LintKind::CommutingNoInverse => write!(
+                f,
+                "[commuting-no-inverse] {}::{} declares Commutes::Class but names no inverse \
+                 — aborts cannot be undone by inverse, so the group path ignores the \
+                 declaration and the method serializes on the version chain",
+                self.object, self.tag
             ),
         }
     }
@@ -208,6 +232,49 @@ pub fn lint_declarations(usages: &[DeclUsage]) -> Vec<LintDiagnostic> {
     out
 }
 
+/// Static pass over one object type's interface: check the commutativity
+/// declaration rules of [`crate::object::Commutes`].
+///
+///   * a commuting method must be *blind* — `Mode::Read` methods return
+///     state, so their results depend on chain position and cannot
+///     commute ([`LintKind::CommutingObserver`]);
+///   * a `Commutes::Class` method must name an inverse, or the runtime
+///     cannot undo it on abort and ignores the declaration
+///     ([`LintKind::CommutingNoInverse`]). `WithSelf` without an inverse
+///     is allowed: it is documentation-only and never routed through a
+///     group grant.
+pub fn lint_interface(type_name: &str, interface: &[MethodSpec]) -> Vec<LintDiagnostic> {
+    let mut out = Vec::new();
+    for m in interface {
+        let mode = match m.mode {
+            Mode::Read => "read",
+            Mode::Write => "write",
+            Mode::Update => "update",
+        };
+        if !matches!(m.commutes, Commutes::Never) && m.mode == Mode::Read {
+            out.push(LintDiagnostic {
+                kind: LintKind::CommutingObserver,
+                tag: m.name.to_string(),
+                object: type_name.to_string(),
+                mode,
+                declared: 0,
+                used: 0,
+            });
+        }
+        if matches!(m.commutes, Commutes::Class(_)) && m.inverse.is_none() {
+            out.push(LintDiagnostic {
+                kind: LintKind::CommutingNoInverse,
+                tag: m.name.to_string(),
+                object: type_name.to_string(),
+                mode,
+                declared: 0,
+                used: 0,
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +349,61 @@ mod tests {
         assert!(kinds.contains(&LintKind::UnboundedSupremum), "{diags:?}");
         // Unbounded modes must not additionally read as over-declared.
         assert!(!kinds.contains(&LintKind::OverDeclared));
+    }
+
+    #[test]
+    fn commuting_observer_is_flagged() {
+        // A read-mode method declared commuting: the tempting `inc`-style
+        // mis-declaration the built-in Counter deliberately avoids.
+        let iface: &[MethodSpec] = &[
+            MethodSpec::new("get", Mode::Read),
+            MethodSpec {
+                name: "count",
+                mode: Mode::Read,
+                commutes: Commutes::Class(0),
+                inverse: Some("uncount"),
+            },
+            MethodSpec::commuting("add", Mode::Update, 0, "sub"),
+        ];
+        let diags = lint_interface("BadCounter", iface);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].kind, LintKind::CommutingObserver);
+        assert_eq!(diags[0].tag, "count");
+        assert_eq!(diags[0].object, "BadCounter");
+        assert!(diags[0].to_string().contains("commuting-observer"));
+    }
+
+    #[test]
+    fn commuting_class_without_inverse_is_flagged() {
+        let iface: &[MethodSpec] = &[MethodSpec {
+            name: "add",
+            mode: Mode::Update,
+            commutes: Commutes::Class(1),
+            inverse: None,
+        }];
+        let diags = lint_interface("T", iface);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].kind, LintKind::CommutingNoInverse);
+        // `WithSelf` without an inverse is documentation-only: clean.
+        let with_self: &[MethodSpec] = &[MethodSpec {
+            name: "push",
+            mode: Mode::Write,
+            commutes: Commutes::WithSelf,
+            inverse: None,
+        }];
+        assert!(lint_interface("Q", with_self).is_empty());
+    }
+
+    #[test]
+    fn builtin_interfaces_are_clean() {
+        use crate::object::SharedObject;
+        for (name, iface) in [
+            ("Account", crate::object::Account::with_balance(0).interface()),
+            ("Counter", crate::object::Counter::new().interface()),
+            ("Queue", crate::object::QueueObject::new().interface()),
+        ] {
+            assert!(lint_interface(name, iface).is_empty(), "{name}");
+        }
     }
 
     #[test]

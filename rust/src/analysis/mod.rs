@@ -25,5 +25,5 @@ pub mod scenarios;
 pub use explorer::{
     explore, run_schedule, ExploreConfig, ExploreReport, RunOutcome, ScheduleId, Violation,
 };
-pub use lint::{lint_declarations, DeclUsage, LintDiagnostic, LintKind};
+pub use lint::{lint_declarations, lint_interface, DeclUsage, LintDiagnostic, LintKind};
 pub use scenarios::{ObjectSpec, Scenario, TxEnd, TxScript};

@@ -222,9 +222,47 @@ fn lint_demo() -> Scenario {
     }
 }
 
+/// Commuting deposits on one hot account: the group-grant path. `t0`
+/// (two deposits) and `t1` are update-only commuting transactions; while
+/// `t0` is still active between its deposits, `t1` can join its group
+/// grant and both hold access concurrently, in either order. `t2`
+/// deposits too but also *reads* the balance (declared `reads: 1`),
+/// which makes its declaration non-blind — it takes the exclusive chain
+/// path. This is the scenario that catches the `bogus-commute` mutation:
+/// trusting the method's commutativity class alone routes `t2`'s deposit
+/// through the group as well, and its subsequent live read observes
+/// co-members' unserialized intermediate state.
+fn commute() -> Scenario {
+    Scenario {
+        name: "commute",
+        description: "commuting deposits share a group grant on a hot account",
+        objects: vec![ObjectSpec { name: "hot", node: 0, initial: 100 }],
+        txs: vec![
+            TxScript {
+                tag: "t0",
+                decls: vec![("hot", Suprema::updates(2))],
+                steps: vec![(0, ops::deposit(100)), (0, ops::deposit(20))],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t1",
+                decls: vec![("hot", Suprema::updates(1))],
+                steps: vec![(0, ops::deposit(10))],
+                end: TxEnd::Commit,
+            },
+            TxScript {
+                tag: "t2",
+                decls: vec![("hot", Suprema::new(1, 0, 1))],
+                steps: vec![(0, ops::deposit(1)), (0, ops::balance())],
+                end: TxEnd::Commit,
+            },
+        ],
+    }
+}
+
 /// Every built-in scenario, in a stable order.
 pub fn builtin() -> Vec<Scenario> {
-    vec![transfers(), cascade(), async_buffering(), lint_demo()]
+    vec![transfers(), cascade(), async_buffering(), lint_demo(), commute()]
 }
 
 /// Look up a built-in scenario by name.
@@ -239,7 +277,7 @@ mod tests {
     #[test]
     fn builtin_scenarios_are_well_formed() {
         let all = builtin();
-        assert_eq!(all.len(), 4);
+        assert_eq!(all.len(), 5);
         for s in &all {
             assert!(s.nodes() >= 1);
             assert!(!s.txs.is_empty());

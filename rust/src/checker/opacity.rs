@@ -18,6 +18,19 @@
 //! Both checks run against the same replay, so a single pass over a
 //! history decides last-use opacity for the observable behaviours the
 //! recorded operations and final-state probes can distinguish.
+//!
+//! **Group grants.** Commuting operations admitted through a group grant
+//! (`versioning::ObjectCc`, docs/COMMUTATIVITY.md) execute without a
+//! fixed chain position, so commit-completion order may interleave group
+//! members arbitrarily. No special casing is needed here: a valid
+//! commuting declaration is *blind* (the result is independent of object
+//! state — enforced by the `commuting-observer` lint), so replaying
+//! group members in any serial order yields identical results and an
+//! identical final state. Every intra-group order is therefore accepted
+//! by construction, and a mis-declared "commuting" observer (the
+//! `bogus-commute` mutation) still surfaces as [`OpacityViolation::
+//! InconsistentRead`] because its recorded result *does* depend on the
+//! order it ran in.
 
 use crate::object::{OpCall, SharedObject, Value};
 use std::collections::BTreeMap;
@@ -329,6 +342,38 @@ mod tests {
         init.insert("a".to_string(), acct(100));
         let err = check_last_use_opacity(init, &history, &probes).unwrap_err();
         assert!(matches!(err, OpacityViolation::AbortedWriteLeak { .. }), "{err}");
+    }
+
+    #[test]
+    fn any_intra_group_commit_order_passes() {
+        // Two commuting deposits that shared a group grant: both blind,
+        // both committed. Whichever commit-completion order the run
+        // produced, the replay explains it — the checker accepts every
+        // intra-group order.
+        for (seq0, seq1) in [(0, 1), (1, 0)] {
+            let history = vec![
+                HistoryTx {
+                    tag: "t0".into(),
+                    ops: vec![rec("a", ops::deposit(100), Value::Unit)],
+                    outcome: TxOutcome::Committed { seq: seq0 },
+                },
+                HistoryTx {
+                    tag: "t1".into(),
+                    ops: vec![rec("a", ops::deposit(10), Value::Unit)],
+                    outcome: TxOutcome::Committed { seq: seq1 },
+                },
+            ];
+            let probes = vec![FinalProbe {
+                object: "a".into(),
+                call: ops::balance(),
+                live: Value::Int(210),
+            }];
+            let mut init = BTreeMap::new();
+            init.insert("a".to_string(), acct(100));
+            let stats = check_last_use_opacity(init, &history, &probes).unwrap();
+            assert_eq!(stats.committed, 2);
+            assert_eq!(stats.probes_verified, 1);
+        }
     }
 
     #[test]

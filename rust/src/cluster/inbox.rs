@@ -28,7 +28,7 @@ use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 /// One message in flight between two nodes.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct Envelope {
     /// Sending node.
     pub from: NodeId,
@@ -48,6 +48,11 @@ pub struct Envelope {
     pub tag: u64,
 }
 
+/// Batch buffers kept per node for reuse. Two is enough for the blocking
+/// transport (one drain in flight per node at a time); a little headroom
+/// covers racing drainers without hoarding memory.
+const FREE_LIST_CAP: usize = 4;
+
 /// One node's inbox: pending envelopes sorted by `(arrives_at, seq)`,
 /// plus the per-sender FIFO clamp state.
 #[derive(Debug, Default)]
@@ -59,6 +64,15 @@ struct NodeInbox {
     delivered: u64,
     /// Non-empty drains, for the batching-factor metric.
     drains: u64,
+    /// Free list of drained batch buffers ([`ShardedInboxes::recycle`]):
+    /// the RPC hot path drains one batch per message leg, so without
+    /// reuse every leg allocates (and soon frees) a `Vec`. Capped at
+    /// [`FREE_LIST_CAP`] buffers.
+    free: Vec<Vec<Envelope>>,
+    /// Drains served from the free list vs. fresh allocations, for the
+    /// pooling micro-bench (`BENCH_micro.json` → `inbox_pool`).
+    pool_hits: u64,
+    pool_allocs: u64,
 }
 
 /// Lock-striped per-node inboxes: one [`Mutex`] per destination node, so
@@ -115,18 +129,60 @@ impl ShardedInboxes {
 
     /// Remove and return every envelope at `to` whose arrival deadline is
     /// `<= now`, in `(arrives_at, seq)` order — the whole due batch under
-    /// a single lock acquisition.
+    /// a single lock acquisition. The returned buffer comes from the
+    /// node's free list when one is available; hand it back with
+    /// [`ShardedInboxes::recycle`] after processing to keep the hot path
+    /// allocation-free.
     pub fn drain_due(&self, to: NodeId, now: Duration) -> Vec<Envelope> {
         let mut inbox = lock_shard(&self.shards[to.0 as usize]);
         let cut = inbox.pending.partition_point(|e| e.arrives_at <= now);
         if cut == 0 {
             return Vec::new();
         }
-        let rest = inbox.pending.split_off(cut);
-        let due = std::mem::replace(&mut inbox.pending, rest);
+        let mut due = match inbox.free.pop() {
+            Some(buf) => {
+                inbox.pool_hits += 1;
+                buf
+            }
+            None => {
+                inbox.pool_allocs += 1;
+                Vec::with_capacity(cut)
+            }
+        };
+        due.extend_from_slice(&inbox.pending[..cut]);
+        // In-place shift of the not-yet-due tail: no allocation, unlike
+        // the old `split_off`, which manufactured a fresh `Vec` per drain.
+        inbox.pending.drain(..cut);
         inbox.delivered += due.len() as u64;
         inbox.drains += 1;
         due
+    }
+
+    /// Return a drained batch buffer to `to`'s free list for reuse by a
+    /// later [`ShardedInboxes::drain_due`]. Buffers beyond
+    /// [`FREE_LIST_CAP`] (or with no backing allocation) are dropped.
+    pub fn recycle(&self, to: NodeId, mut batch: Vec<Envelope>) {
+        if batch.capacity() == 0 {
+            return;
+        }
+        batch.clear();
+        let mut inbox = lock_shard(&self.shards[to.0 as usize]);
+        if inbox.free.len() < FREE_LIST_CAP {
+            inbox.free.push(batch);
+        }
+    }
+
+    /// `(free-list hits, fresh allocations)` summed over all inboxes —
+    /// the pooling effectiveness metric (`BENCH_micro.json` → `inbox_pool`).
+    pub fn pool_stats(&self) -> (u64, u64) {
+        let mut hits = 0;
+        let mut allocs = 0;
+        for shard in &self.shards {
+            let inbox = lock_shard(shard);
+            hits += inbox.pool_hits;
+            allocs += inbox.pool_allocs;
+        }
+        (hits, allocs)
     }
 
     /// Earliest pending arrival deadline at `to`, if any — the wake-up
@@ -204,6 +260,23 @@ mod tests {
         assert_eq!(ib.pending(NodeId(0)), 1, "the 99 ms envelope is not yet due");
         let (delivered, drains) = ib.delivery_stats();
         assert_eq!((delivered, drains), (3, 1), "three messages in one batched drain");
+    }
+
+    #[test]
+    fn recycled_batch_buffers_are_reused() {
+        let ib = ShardedInboxes::new(1);
+        for round in 0..5u64 {
+            ib.post(NodeId(0), NodeId(0), 8, Duration::ZERO, MS, round);
+            let due = ib.drain_due(NodeId(0), MS);
+            assert_eq!(due.len(), 1);
+            ib.recycle(NodeId(0), due);
+        }
+        let (hits, allocs) = ib.pool_stats();
+        assert_eq!(allocs, 1, "only the first drain allocates");
+        assert_eq!(hits, 4, "every later drain reuses the recycled buffer");
+        // Recycling a zero-capacity batch (the empty-drain fast path) is a
+        // no-op rather than a free-list entry.
+        ib.recycle(NodeId(0), Vec::new());
     }
 
     #[test]

@@ -231,6 +231,9 @@ impl Cluster {
                 );
             }
         }
+        // Hand the batch buffer back so the next drain at this node reuses
+        // the allocation (one drain per message leg on the RPC hot path).
+        self.inboxes.recycle(to, due);
     }
 
     /// Perform a remote procedure call from `from` to `to`.

@@ -29,6 +29,7 @@
 //! preambles never hash a string after interning.
 
 use super::{NodeId, Oid};
+use crate::object::{MethodSpec, OpCall, NO_METHOD_IDX};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
@@ -199,6 +200,55 @@ impl Registry {
     }
 }
 
+/// Per-type method-dispatch table: method name → position in the type's
+/// interface slice, built once when an object type is hosted.
+///
+/// The dispatch hot path (`Proxy::spec_of`, the `ready_for` executor gate)
+/// resolves a call's [`MethodSpec`] by its [`OpCall::midx`] in O(1); this
+/// table is where that index comes from for calls that were not stamped by
+/// a typed `ops::` constructor — e.g. hand-built calls from scenario
+/// scripts or the CLI. [`MethodTable::stamp`] runs once per operation at
+/// submit time, replacing the per-scheduler-pass linear interface scan the
+/// gate used to pay.
+pub struct MethodTable {
+    /// `(name, index)` pairs sorted by name. Interfaces are tiny (≤ a
+    /// dozen methods), so a sorted slice + binary search beats a `HashMap`
+    /// on both footprint and lookup cost, and needs no hashing.
+    by_name: Vec<(&'static str, u16)>,
+}
+
+impl MethodTable {
+    /// Build the table for one interface slice.
+    pub fn new(interface: &'static [MethodSpec]) -> Self {
+        let mut by_name: Vec<(&'static str, u16)> = interface
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.name, u16::try_from(i).expect("interface too large")))
+            .collect();
+        by_name.sort_unstable_by_key(|&(n, _)| n);
+        MethodTable { by_name }
+    }
+
+    /// Interface position of `method`, if it exists.
+    pub fn index_of(&self, method: &str) -> Option<u16> {
+        self.by_name
+            .binary_search_by(|&(n, _)| n.cmp(method))
+            .ok()
+            .map(|i| self.by_name[i].1)
+    }
+
+    /// Stamp an unindexed call with its interface position. Already-stamped
+    /// calls (typed constructors) and unknown methods (surfaced as
+    /// `NoSuchMethod` at dispatch) pass through untouched.
+    pub fn stamp(&self, call: &mut OpCall) {
+        if call.midx == NO_METHOD_IDX {
+            if let Some(idx) = self.index_of(call.method) {
+                call.midx = idx;
+            }
+        }
+    }
+}
+
 /// The pre-interning registry — one coarse `RwLock<HashMap<String, Oid>>`
 /// around everything — retained verbatim as the micro-benchmark comparison
 /// baseline. `benches/micro.rs` measures `CoarseRegistry::locate` against
@@ -308,6 +358,28 @@ mod tests {
             assert_eq!(r.locate(name), Some(*oid), "{name}");
             assert_eq!(coarse.locate(name), Some(*oid), "{name}");
         }
+    }
+
+    #[test]
+    fn method_table_stamps_unindexed_calls() {
+        use crate::object::{account::ops, OpCall, SharedObject, Value, NO_METHOD_IDX};
+        let acc = crate::object::Account::with_balance(0);
+        let table = MethodTable::new(acc.interface());
+        // Every interface method resolves to its own position.
+        for (i, m) in acc.interface().iter().enumerate() {
+            assert_eq!(table.index_of(m.name), Some(i as u16), "{}", m.name);
+        }
+        assert_eq!(table.index_of("nope"), None);
+        // A hand-built call gets stamped; dispatch and the typed
+        // constructor agree on the index.
+        let mut call = OpCall::new("deposit", vec![Value::from(5i64)]);
+        assert_eq!(call.midx, NO_METHOD_IDX);
+        table.stamp(&mut call);
+        assert_eq!(call.midx, ops::deposit(5).midx);
+        // Unknown methods stay unstamped (NoSuchMethod at dispatch).
+        let mut bogus = OpCall::new("nope", Vec::<Value>::new());
+        table.stamp(&mut bogus);
+        assert_eq!(bogus.midx, NO_METHOD_IDX);
     }
 
     #[test]

@@ -25,7 +25,8 @@
 //!   the work-stealing [`executor::ExecutorPool`] that drains hundreds of
 //!   node shards with a bounded worker set;
 //! * [`optsva`] — **the paper's contribution**: OptSVA-CF / Atomic RMI 2
-//!   (§2.8, §3);
+//!   (§2.8, §3), extended with commutativity-aware group grants (see
+//!   `docs/COMMUTATIVITY.md`);
 //! * [`sva`] — Atomic RMI 1 baseline (operation-agnostic SVA);
 //! * [`tfa`] — HyFlow2 stand-in (optimistic Transaction Forwarding, DF);
 //! * [`locks`] — distributed lock baselines (Mutex/R-W × S2PL/2PL, GLock);

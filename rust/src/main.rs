@@ -42,7 +42,7 @@ USAGE:
                engine; not part of `all` — run it explicitly)
   atomic-rmi2 check [--scenario NAME] [--seeds N] [--flip-depth D]
               [--flip-bases B] [--min-distinct K]
-              [--mutation none|premature-release|skip-invalidation]
+              [--mutation none|premature-release|skip-invalidation|bogus-commute]
               [--schedule SID] [--expect-violation] [--timeline]
   atomic-rmi2 trace SCENARIO [--seed N] [--out FILE] [--timeline]
   atomic-rmi2 bench-gate FRESH.json BASELINE.json [--tolerance 0.20]
@@ -205,7 +205,8 @@ fn check(args: &CliArgs) {
             Some(m) => m,
             None => {
                 eprintln!(
-                    "check: unknown --mutation {m:?}; use none|premature-release|skip-invalidation"
+                    "check: unknown --mutation {m:?}; use \
+                     none|premature-release|skip-invalidation|bogus-commute"
                 );
                 std::process::exit(2);
             }

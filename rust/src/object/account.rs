@@ -17,11 +17,17 @@ pub struct Account {
     balance: i64,
 }
 
+/// Commutativity class of the additive balance updates: `deposit` and
+/// `withdraw` are blind `±` on the balance, so they commute with each
+/// other in any interleaving, and each inverts the other with the same
+/// argument (abort-by-inverse; see docs/COMMUTATIVITY.md).
+pub const ADDITIVE: u8 = 0;
+
 const INTERFACE: &[MethodSpec] = &[
-    MethodSpec { name: "balance", mode: Mode::Read },
-    MethodSpec { name: "deposit", mode: Mode::Update },
-    MethodSpec { name: "withdraw", mode: Mode::Update },
-    MethodSpec { name: "reset", mode: Mode::Write },
+    MethodSpec::new("balance", Mode::Read),
+    MethodSpec::commuting("deposit", Mode::Update, ADDITIVE, "withdraw"),
+    MethodSpec::commuting("withdraw", Mode::Update, ADDITIVE, "deposit"),
+    MethodSpec::new("reset", Mode::Write),
 ];
 
 impl Account {
@@ -102,19 +108,19 @@ pub mod ops {
 
     /// `balance()` — read.
     pub fn balance() -> OpCall {
-        OpCall::nullary("balance")
+        OpCall::nullary("balance").with_idx(0)
     }
-    /// `deposit(amount)` — update.
+    /// `deposit(amount)` — commuting update (additive class).
     pub fn deposit(amount: i64) -> OpCall {
-        OpCall::unary("deposit", amount)
+        OpCall::unary("deposit", amount).with_idx(1)
     }
-    /// `withdraw(amount)` — update.
+    /// `withdraw(amount)` — commuting update (additive class).
     pub fn withdraw(amount: i64) -> OpCall {
-        OpCall::unary("withdraw", amount)
+        OpCall::unary("withdraw", amount).with_idx(2)
     }
     /// `reset()` — pure write (log-buffer executable).
     pub fn reset() -> OpCall {
-        OpCall::nullary("reset")
+        OpCall::nullary("reset").with_idx(3)
     }
 }
 

@@ -92,10 +92,11 @@ pub struct ComputeObject {
 }
 
 const INTERFACE: &[MethodSpec] = &[
-    MethodSpec { name: "digest", mode: Mode::Read },
-    MethodSpec { name: "dim", mode: Mode::Read },
-    MethodSpec { name: "load", mode: Mode::Write },
-    MethodSpec { name: "mix", mode: Mode::Update },
+    MethodSpec::new("digest", Mode::Read),
+    MethodSpec::new("dim", Mode::Read),
+    MethodSpec::new("load", Mode::Write),
+    // matrix mixing rounds do not commute (tanh is non-linear).
+    MethodSpec::new("mix", Mode::Update),
 ];
 
 impl ComputeObject {

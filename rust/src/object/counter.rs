@@ -9,9 +9,14 @@ pub struct Counter {
 }
 
 const INTERFACE: &[MethodSpec] = &[
-    MethodSpec { name: "get", mode: Mode::Read },
-    MethodSpec { name: "zero", mode: Mode::Write },
-    MethodSpec { name: "inc", mode: Mode::Update },
+    MethodSpec::new("get", Mode::Read),
+    MethodSpec::new("zero", Mode::Write),
+    // `inc` is additive and *would* commute — but it returns the new
+    // count, i.e. it observes state, so declaring it commuting would let
+    // concurrent group members see unserialized intermediate counts. It
+    // stays `Commutes::Never`; the `commuting-observer` lint exists to
+    // catch exactly the tempting mis-declaration we avoid here.
+    MethodSpec::new("inc", Mode::Update),
 ];
 
 impl Counter {

@@ -15,13 +15,19 @@ pub struct KvStore {
 }
 
 const INTERFACE: &[MethodSpec] = &[
-    MethodSpec { name: "get", mode: Mode::Read },
-    MethodSpec { name: "contains", mode: Mode::Read },
-    MethodSpec { name: "size", mode: Mode::Read },
-    MethodSpec { name: "put", mode: Mode::Write },
-    MethodSpec { name: "clear", mode: Mode::Write },
-    MethodSpec { name: "remove", mode: Mode::Update },
-    MethodSpec { name: "merge_add", mode: Mode::Update },
+    MethodSpec::new("get", Mode::Read),
+    MethodSpec::new("contains", Mode::Read),
+    MethodSpec::new("size", Mode::Read),
+    // `put` on *different* keys commutes, but same-key puts are
+    // last-writer-wins: the per-method declaration cannot express the
+    // key-granular condition, so it stays `Never` (see
+    // docs/COMMUTATIVITY.md on why declarations must be conservative).
+    MethodSpec::new("put", Mode::Write),
+    MethodSpec::new("clear", Mode::Write),
+    MethodSpec::new("remove", Mode::Update),
+    // `merge_add` is additive per key but returns the merged value — an
+    // observer, so never commuting (same reasoning as `Counter::inc`).
+    MethodSpec::new("merge_add", Mode::Update),
 ];
 
 impl KvStore {

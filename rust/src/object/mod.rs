@@ -57,6 +57,10 @@ impl fmt::Display for Mode {
     }
 }
 
+/// Sentinel for [`OpCall::midx`]: no interface index attached; dispatch
+/// falls back to a name lookup in the hosting type's method table.
+pub const NO_METHOD_IDX: u16 = u16::MAX;
+
 /// A method invocation: name + arguments. The mode is looked up from the
 /// object's interface (it is a property of the method, not of the call).
 #[derive(Debug, Clone)]
@@ -66,22 +70,38 @@ pub struct OpCall {
     /// Argument values — inline for arity ≤ 2, so cloning a call into a
     /// log buffer or message allocates nothing (see [`ArgList`]).
     pub args: ArgList,
+    /// Position of the method in the target type's interface slice, or
+    /// [`NO_METHOD_IDX`]. Typed `ops::` constructors and facades stamp it
+    /// at construction, so the hot dispatch path resolves the
+    /// [`MethodSpec`] with one bounds-checked slice access instead of a
+    /// linear interface scan (see `cluster::registry::MethodTable`). The
+    /// index is *advisory*: dispatch verifies `specs[midx].name` matches
+    /// (pointer-first) and falls back to lookup by name, so a stale or
+    /// hand-rolled call can never dispatch to the wrong method.
+    pub midx: u16,
 }
 
 impl OpCall {
     /// A call with an arbitrary argument list.
     pub fn new(method: &'static str, args: impl Into<ArgList>) -> Self {
-        OpCall { method, args: args.into() }
+        OpCall { method, args: args.into(), midx: NO_METHOD_IDX }
     }
 
     /// A call with no arguments.
     pub fn nullary(method: &'static str) -> Self {
-        OpCall { method, args: ArgList::new() }
+        OpCall { method, args: ArgList::new(), midx: NO_METHOD_IDX }
     }
 
     /// A call with one argument.
     pub fn unary(method: &'static str, arg: impl Into<Value>) -> Self {
-        OpCall { method, args: ArgList::one(arg.into()) }
+        OpCall { method, args: ArgList::one(arg.into()), midx: NO_METHOD_IDX }
+    }
+
+    /// Attach the method's interface index (typed constructors that know
+    /// the target interface statically).
+    pub fn with_idx(mut self, idx: u16) -> Self {
+        self.midx = idx;
+        self
     }
 
     /// Approximate serialized size (for network cost accounting).
@@ -134,6 +154,55 @@ impl fmt::Display for ObjectError {
 
 impl std::error::Error for ObjectError {}
 
+/// Commutativity class of a method (semantic concurrency control).
+///
+/// Two invocations commute when executing them in either order yields the
+/// same final state *and* the same return values. Declaring a class lets
+/// the concurrency-control layer admit same-class operations of different
+/// transactions concurrently through a *group grant* instead of
+/// serializing them behind the per-object version chain (see
+/// `versioning::ObjectCc` and docs/COMMUTATIVITY.md).
+///
+/// Declaration rules (checked by the `commuting-observer` lint):
+///   * only *blind* methods qualify — the return value must not depend on
+///     the object's state (`deposit` returns `Unit`; `inc` returns the new
+///     count and therefore must **not** be declared commuting);
+///   * the method must be invertible for abort handling: the declaring
+///     [`MethodSpec`] names an `inverse` method such that
+///     `m(args); inverse(args)` is a state no-op in any interleaving with
+///     other same-class operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Commutes {
+    /// No commutativity: the operation serializes on the version chain.
+    Never,
+    /// Commutes with invocations of the *same method* only.
+    WithSelf,
+    /// Commutes with every method of the same class on the same object
+    /// (e.g. `deposit`/`withdraw` are both class-0 additive updates).
+    Class(u8),
+}
+
+impl Commutes {
+    /// Do two declarations commute with each other?
+    pub fn joins(self, other: Commutes, same_method: bool) -> bool {
+        match (self, other) {
+            (Commutes::Class(a), Commutes::Class(b)) => a == b,
+            (Commutes::WithSelf, Commutes::WithSelf) => same_method,
+            _ => false,
+        }
+    }
+
+    /// The group-grant class key, if any: `Class(c)` maps to `c`,
+    /// `WithSelf` to a per-method synthetic class derived by the caller,
+    /// `Never` to none.
+    pub fn class(self) -> Option<u8> {
+        match self {
+            Commutes::Class(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
 /// A method descriptor in an object's interface.
 #[derive(Debug, Clone, Copy)]
 pub struct MethodSpec {
@@ -141,6 +210,30 @@ pub struct MethodSpec {
     pub name: &'static str,
     /// The method's declared access mode.
     pub mode: Mode,
+    /// Commutativity declaration ([`Commutes::Never`] by default).
+    pub commutes: Commutes,
+    /// Inverse method for abort-by-inverse (`deposit` ⇒ `withdraw`):
+    /// invoked with the *same arguments* to undo the operation. Required
+    /// (and only meaningful) for commuting declarations.
+    pub inverse: Option<&'static str>,
+}
+
+impl MethodSpec {
+    /// A non-commuting method (the default everywhere).
+    pub const fn new(name: &'static str, mode: Mode) -> Self {
+        MethodSpec { name, mode, commutes: Commutes::Never, inverse: None }
+    }
+
+    /// A commuting method of class `class`, undone by invoking `inverse`
+    /// with the same arguments.
+    pub const fn commuting(
+        name: &'static str,
+        mode: Mode,
+        class: u8,
+        inverse: &'static str,
+    ) -> Self {
+        MethodSpec { name, mode, commutes: Commutes::Class(class), inverse: Some(inverse) }
+    }
 }
 
 /// The shared-object trait: what a "remote object" must implement to be
@@ -173,10 +266,17 @@ pub trait SharedObject: Send {
 
 /// Look up the [`Mode`] of a method in an object's interface.
 pub fn mode_of(obj: &dyn SharedObject, method: &str) -> Result<Mode, ObjectError> {
-    obj.interface()
+    spec_of(obj.interface(), method).map(|m| m.mode)
+}
+
+/// Look up a method's full [`MethodSpec`] in an interface slice.
+pub fn spec_of<'a>(
+    interface: &'a [MethodSpec],
+    method: &str,
+) -> Result<&'a MethodSpec, ObjectError> {
+    interface
         .iter()
         .find(|m| m.name == method)
-        .map(|m| m.mode)
         .ok_or_else(|| ObjectError::NoSuchMethod(method.to_string()))
 }
 
@@ -201,7 +301,28 @@ mod tests {
         let c = OpCall::unary("deposit", 5i64);
         assert_eq!(c.method, "deposit");
         assert_eq!(c.args, vec![Value::Int(5)]);
-        assert!(c.wire_size() > OpCall::nullary("x").wire_size());
+        assert_eq!(c.midx, NO_METHOD_IDX);
+        assert_eq!(c.with_idx(1).midx, 1);
+        assert!(OpCall::unary("deposit", 5i64).wire_size() > OpCall::nullary("x").wire_size());
+    }
+
+    #[test]
+    fn commutativity_declarations() {
+        // deposit/withdraw share an additive class and invert each other.
+        let dep = spec_of(Account::with_balance(0).interface(), "deposit").unwrap();
+        let wdr = spec_of(Account::with_balance(0).interface(), "withdraw").unwrap();
+        assert!(dep.commutes.joins(wdr.commutes, false));
+        assert_eq!(dep.inverse, Some("withdraw"));
+        assert_eq!(wdr.inverse, Some("deposit"));
+        // balance observes state: never commutes.
+        let bal = spec_of(Account::with_balance(0).interface(), "balance").unwrap();
+        assert_eq!(bal.commutes, Commutes::Never);
+        assert!(!bal.commutes.joins(dep.commutes, false));
+        // WithSelf joins only the same method.
+        assert!(Commutes::WithSelf.joins(Commutes::WithSelf, true));
+        assert!(!Commutes::WithSelf.joins(Commutes::WithSelf, false));
+        assert_eq!(Commutes::Class(3).class(), Some(3));
+        assert_eq!(Commutes::Never.class(), None);
     }
 
     #[test]

@@ -23,10 +23,11 @@ pub struct RegisterObject {
 }
 
 const INTERFACE: &[MethodSpec] = &[
-    MethodSpec { name: "get", mode: Mode::Read },
-    MethodSpec { name: "set", mode: Mode::Write },
-    // read-modify-write, exercised by update-classified workload ops
-    MethodSpec { name: "add", mode: Mode::Update },
+    MethodSpec::new("get", Mode::Read),
+    MethodSpec::new("set", Mode::Write),
+    // read-modify-write, exercised by update-classified workload ops;
+    // returns the new value (an observer), so not declared commuting.
+    MethodSpec::new("add", Mode::Update),
 ];
 
 impl RegisterObject {

@@ -39,6 +39,11 @@ pub struct ObjectSlot {
     /// lookups never contend on the object lock (operation bodies can
     /// hold it for milliseconds).
     pub interface: &'static [crate::object::MethodSpec],
+    /// Name → interface-position table, built once at hosting time.
+    /// Submit paths stamp unindexed [`crate::object::OpCall`]s through it,
+    /// so the dispatch hot path resolves method specs in O(1) instead of
+    /// scanning the interface per operation.
+    pub methods: crate::cluster::registry::MethodTable,
     /// The live object. Locked for the duration of each method body.
     pub object: Mutex<Box<dyn SharedObject>>,
     /// Crash-stop flag (§3.4): once set, every access raises
@@ -55,10 +60,12 @@ impl ObjectSlot {
         object: Box<dyn SharedObject>,
         clock: Arc<dyn crate::clock::Clock>,
     ) -> Arc<Self> {
+        let interface = object.interface();
         Arc::new(ObjectSlot {
             oid,
             cc: ObjectCc::with_clock(clock),
-            interface: object.interface(),
+            interface,
+            methods: crate::cluster::registry::MethodTable::new(interface),
             object: Mutex::new(object),
             crashed: AtomicBool::new(false),
             active: Mutex::new(Vec::new()),
@@ -93,6 +100,16 @@ pub struct SysStats {
     pub early_releases: AtomicU64,
     /// Buffering / release tasks handed to node executors (§3.3).
     pub async_tasks: AtomicU64,
+    /// Checkpoint/buffer snapshots taken (`CopyBuffer::capture` on the
+    /// proxy paths). The `state_size`-aware capture skips (blind-write
+    /// finalization, commuting group grants) show up as this *not*
+    /// incrementing — regression-tested by `tests/fig12_captures.rs`.
+    pub captures: AtomicU64,
+    /// Total bytes snapshotted by those captures (`state_size` at capture
+    /// time).
+    pub capture_bytes: AtomicU64,
+    /// Commuting group grants issued (docs/COMMUTATIVITY.md).
+    pub group_grants: AtomicU64,
 }
 
 /// A deliberately seeded protocol defect, used to validate the schedule
@@ -115,6 +132,13 @@ pub enum ProtocolMutation {
     /// that consumed the aborted transaction's writes via early release
     /// are never cascade-aborted and commit dirty state.
     SkipInvalidation,
+    /// Trust commutativity declarations blindly (docs/COMMUTATIVITY.md
+    /// done wrong): a transaction invoking a commuting-class method joins
+    /// the pv-group regardless of its read/write suprema, and the group
+    /// grant is treated as exclusive direct access — so its *reads*
+    /// execute on the live object while other members are still mutating
+    /// it, an unserialized observation the opacity checker must flag.
+    BogusCommute,
 }
 
 impl ProtocolMutation {
@@ -125,6 +149,7 @@ impl ProtocolMutation {
             "none" => Some(ProtocolMutation::None),
             "premature-release" => Some(ProtocolMutation::PrematureRelease),
             "skip-invalidation" => Some(ProtocolMutation::SkipInvalidation),
+            "bogus-commute" => Some(ProtocolMutation::BogusCommute),
             _ => None,
         }
     }
@@ -135,6 +160,7 @@ impl ProtocolMutation {
             ProtocolMutation::None => "none",
             ProtocolMutation::PrematureRelease => "premature-release",
             ProtocolMutation::SkipInvalidation => "skip-invalidation",
+            ProtocolMutation::BogusCommute => "bogus-commute",
         }
     }
 }

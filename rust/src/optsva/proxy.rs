@@ -27,10 +27,10 @@ use crate::buffers::{CopyBuffer, LogBuffer};
 use crate::clock::Clock;
 use crate::cluster::Oid;
 use crate::executor::{Executor, TaskHandle};
-use crate::object::{Mode, OpCall, Value};
+use crate::object::{MethodSpec, Mode, OpCall, Value};
 use crate::trace::{self, EventKind};
 use crate::versioning::ObjectCc;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Duration;
 
@@ -76,8 +76,19 @@ struct ProxyState {
     modified: bool,
     /// Abort checkpoint `st_i(x)` — captured at first synchronized access.
     st: Option<CopyBuffer>,
-    /// Restore epoch at checkpoint time (valid-lineage discriminator).
-    st_epoch: u64,
+    /// Reversion sequence at checkpoint time (valid-lineage discriminator):
+    /// a *full* restore positioned below our pv since then means `st`
+    /// captured since-rewound state and must not be restored; a *surgical*
+    /// reversion below us since then is replayed on top of the restore.
+    st_seq: u64,
+    /// Reversion sequence at group-join time (commuting fast path): a
+    /// reversion positioned before the group since then already wiped our
+    /// contribution, so our inverses must not run at abort.
+    join_seq: u64,
+    /// Inverse operations recorded by the commuting fast path, one per
+    /// executed update, in execution order. Abort applies them in reverse
+    /// in place of a checkpoint restore (docs/COMMUTATIVITY.md).
+    inverses: Vec<OpCall>,
     /// Copy buffer `buf_i(x)` — serves local reads after release.
     buf: Option<CopyBuffer>,
     /// Log buffer `log_i(x)` — records pure writes before synchronization.
@@ -117,6 +128,17 @@ pub struct Proxy {
     /// `lv` was advanced on our behalf (early release or async release).
     /// True-only; same locking discipline as `accessed`.
     released: AtomicBool,
+    /// `ltv` was advanced on our behalf. The swap makes [`Proxy::terminate`]
+    /// at-most-once: eviction (§3.4) and the client's own commit/abort can
+    /// both reach it, and a group member must decrement the group's
+    /// `unterminated` count exactly once.
+    term_done: AtomicBool,
+    /// The pv-group this proxy joined on the commuting fast path: the
+    /// group's `first_pv`, or 0 when not a member. Set-once while holding
+    /// `inner`; read lock-free on the executor gate path and by the
+    /// commit/abort routing (group members release/terminate through the
+    /// group variants, never the exclusive-chain ones).
+    group_first_pv: AtomicU64,
     /// Handle of the async read-only-buffering or last-write-release task.
     /// Set at most once per proxy: the read-only constructor path and the
     /// final-pure-write path are mutually exclusive (`sup.read_only()`
@@ -149,6 +171,8 @@ impl Proxy {
             last_beat: Mutex::new(now),
             accessed: AtomicBool::new(false),
             released: AtomicBool::new(false),
+            term_done: AtomicBool::new(false),
+            group_first_pv: AtomicU64::new(0),
             task: OnceLock::new(),
             inner: Mutex::new(ProxyState {
                 rc: 0,
@@ -156,9 +180,11 @@ impl Proxy {
                 uc: 0,
                 modified: false,
                 st: None,
-                st_epoch: 0,
-                buf: None,
+                st_seq: 0,
+                join_seq: 0,
+                inverses: Vec::new(),
                 log: LogBuffer::new(),
+                buf: None,
                 rolled_back: false,
             }),
         });
@@ -237,16 +263,79 @@ impl Proxy {
         Ok(())
     }
 
+    /// Method spec of `call` from the cached interface. The call's method
+    /// index (stamped by the `ops::` constructors or resolved at submit
+    /// time from the registry's per-type table) makes this O(1); an
+    /// unstamped or mismatched index falls back to the linear scan, so a
+    /// hand-built `OpCall` still dispatches correctly.
+    pub(super) fn spec_of(&self, call: &OpCall) -> Result<&'static MethodSpec, crate::object::ObjectError> {
+        let iface = self.slot.interface;
+        if let Some(m) = iface.get(call.midx as usize) {
+            // &'static method names are interned per interface, so a
+            // pointer compare settles the common case without a strcmp.
+            if std::ptr::eq(m.name, call.method) || m.name == call.method {
+                return Ok(m);
+            }
+        }
+        crate::object::spec_of(iface, call.method)
+    }
+
     /// Mode of `call` from the cached interface. Client-side lookup is
     /// free: the stub ships the interface with the proxy, exactly as Java
     /// RMI ships the remote interface class.
     pub(super) fn mode_of(&self, call: &OpCall) -> Result<Mode, crate::object::ObjectError> {
-        self.slot
-            .interface
-            .iter()
-            .find(|m| m.name == call.method)
-            .map(|m| m.mode)
-            .ok_or_else(|| crate::object::ObjectError::NoSuchMethod(call.method.to_string()))
+        self.spec_of(call).map(|m| m.mode)
+    }
+
+    /// Stamp a hand-built call with its interface position (see
+    /// [`crate::cluster::registry::MethodTable::stamp`]); pre-stamped
+    /// calls pass through untouched.
+    pub(super) fn stamp(&self, call: &mut OpCall) {
+        self.slot.methods.stamp(call);
+    }
+
+    /// The commutativity class `call` may execute under on this proxy, or
+    /// `None` for the exclusive-chain path. `Some` requires the method to
+    /// declare `Commutes::Class` *with* an inverse, and the transaction's
+    /// declaration for this object to be update-only (`reads == 0 &&
+    /// writes == 0`) — the shape under which blind commuting execution
+    /// with inverse-based abort is sound (docs/COMMUTATIVITY.md). The
+    /// seeded `bogus-commute` defect trusts the method declaration alone.
+    pub(super) fn commute_class(&self, call: &OpCall) -> Option<u8> {
+        let spec = self.spec_of(call).ok()?;
+        let class = spec.commutes.class()?;
+        spec.inverse?;
+        if self.config.irrevocable {
+            // An irrevocable transaction must never be forced to abort,
+            // but a group member can be doomed by a co-member's abort —
+            // so irrevocable transactions always take the exclusive chain.
+            return None;
+        }
+        let shape_ok = self.sup.reads == 0 && self.sup.writes == 0;
+        if shape_ok || matches!(self.config.mutation, super::ProtocolMutation::BogusCommute) {
+            Some(class)
+        } else {
+            None
+        }
+    }
+
+    /// The group `first_pv` if this proxy joined a commuting pv-group.
+    fn group_first(&self) -> Option<u64> {
+        match self.group_first_pv.load(Ordering::Acquire) {
+            0 => None,
+            first => Some(first),
+        }
+    }
+
+    /// Snapshot `obj` into a [`CopyBuffer`], accounting the capture and
+    /// its `state_size` cost — the counters the capture-skip paths (blind
+    /// writes, commuting groups) are regression-tested against.
+    fn capture(&self, obj: &dyn crate::object::SharedObject) -> CopyBuffer {
+        self.stats.captures.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .capture_bytes
+            .fetch_add(obj.state_size() as u64, Ordering::Relaxed);
+        CopyBuffer::capture(obj)
     }
 
     /// Would [`Proxy::invoke`] for an operation of `mode` run to completion
@@ -262,7 +351,12 @@ impl Proxy {
     /// Lock-free apart from the versioning check: the executor evaluates
     /// this gate on every scheduler pass over every parked operation, so it
     /// must not contend on `inner` with operation bodies.
-    pub(super) fn ready_for(&self, mode: Mode) -> bool {
+    ///
+    /// `commutes` is [`Proxy::commute_class`] of the pending call: a
+    /// commuting update is also ready when it can join (or has joined) the
+    /// object's pv-group, even though the exclusive access condition does
+    /// not hold.
+    pub(super) fn ready_for(&self, mode: Mode, commutes: Option<u8>) -> bool {
         if let Some(t) = self.task.get() {
             if !t.is_done() {
                 return false; // invoke would join the buffering/release task
@@ -276,6 +370,11 @@ impl Proxy {
             // Read-only objects read the start-time buffer (task gated
             // above); released objects read their copy buffer.
             Mode::Read if self.sup.read_only() => true,
+            Mode::Update if commutes.is_some() && !self.accessed.load(Ordering::Acquire) => {
+                self.group_first().is_some()
+                    || self.released.load(Ordering::Acquire)
+                    || self.cc().group_joinable(self.pv, commutes.unwrap())
+            }
             _ => {
                 self.accessed.load(Ordering::Acquire)
                     || self.released.load(Ordering::Acquire)
@@ -392,6 +491,25 @@ impl Proxy {
             }
         }
 
+        // Commuting fast path (docs/COMMUTATIVITY.md): an update-only
+        // proxy whose method declares a commutativity class joins the
+        // object's pv-group instead of taking an exclusive chain position.
+        if !self.accessed.load(Ordering::Acquire) || self.group_first().is_some() {
+            if let Some(class) = self.commute_class(call) {
+                return self.update_in_group(call, class);
+            }
+            if self.group_first().is_some() {
+                // Already inside a group, now asked for a non-commuting
+                // update: the shared slot cannot be widened to exclusive
+                // access mid-flight, so the transaction must abort. (The
+                // declaration lint flags interfaces that invite this.)
+                return Err(TxError::ForcedAbort(format!(
+                    "non-commuting operation `{}` on {} after a group grant",
+                    call.method, self.oid
+                )));
+            }
+        }
+
         self.ensure_direct_access()?;
         self.check_doomed()?;
 
@@ -412,13 +530,85 @@ impl Proxy {
         };
         if s.wc == self.sup.writes && updates_done {
             if s.rc < self.sup.reads {
-                s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+                s.buf = Some(self.capture(obj.as_ref()));
                 self.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             }
             drop(obj);
             self.release_now();
         }
         Ok(v)
+    }
+
+    /// Commuting fast path (docs/COMMUTATIVITY.md): execute `call` inside
+    /// the object's pv-group, sharing the version slot with same-class
+    /// co-members instead of taking an exclusive chain position. No
+    /// checkpoint and no copy buffer are captured — abort is handled by
+    /// replaying the recorded per-op inverses.
+    fn update_in_group(self: &Arc<Self>, call: &OpCall, class: u8) -> Result<Value, TxError> {
+        let inverse = self
+            .spec_of(call)?
+            .inverse
+            .expect("commute_class admits only methods with an inverse");
+        if self.group_first().is_none() {
+            // First commuting update: join (or open) the pv-group. Blocks
+            // like an access-condition wait; never holds `inner`.
+            self.check_doomed()?;
+            self.t_emit(|tx, oid| EventKind::WaitStart { tx, oid });
+            let joined = self.cc().join_group(self.pv, class, self.config.deadline());
+            self.t_emit(|tx, oid| EventKind::WaitEnd { tx, oid });
+            let first = joined?;
+            self.group_first_pv.store(first, Ordering::Release);
+            self.stats.group_grants.fetch_add(1, Ordering::Relaxed);
+            let pv = self.pv;
+            self.t_emit(|tx, oid| EventKind::GroupGrant { tx, oid, pv, first_pv: first });
+            if matches!(self.config.mutation, super::ProtocolMutation::BogusCommute) {
+                // Seeded defect: treat the shared grant as exclusive direct
+                // access, so later reads run on the live object while
+                // co-members keep mutating it (an unserializable read the
+                // opacity checker must flag).
+                self.accessed.store(true, Ordering::Release);
+            }
+        }
+        let mut s = self.inner.lock().unwrap();
+        let mut obj = self.slot.object.lock().unwrap();
+        // Re-check under the object lock (see `read` for why).
+        self.check_doomed()?;
+        if s.inverses.is_empty() {
+            // Sample the reversion sequence under the object lock, right
+            // before our first mutation: reverts before this point never
+            // touched our (nonexistent) contribution, so they must stay
+            // invisible to our abort guard.
+            s.join_seq = self.cc().revert_seq();
+        }
+        let v = obj.invoke(call)?;
+        s.modified = true;
+        s.inverses.push(OpCall {
+            method: inverse,
+            args: call.args.clone(),
+            midx: crate::object::NO_METHOD_IDX,
+        });
+        let last = s.uc == self.sup.updates;
+        drop(obj);
+        drop(s);
+        // Last declared update: retire our group slot so successors (or
+        // the next group) can run while we await commit — unless the
+        // seeded bogus-commute defect holds the grant open for its
+        // unserialized reads.
+        if last && !matches!(self.config.mutation, super::ProtocolMutation::BogusCommute) {
+            self.release_in_group();
+        }
+        Ok(v)
+    }
+
+    /// Retire this proxy's slot in its pv-group (the group-grant analogue
+    /// of [`Proxy::release_now`]); at-most-once via the same swap.
+    fn release_in_group(&self) {
+        if !self.released.swap(true, Ordering::AcqRel) {
+            self.cc().release_group(self.pv);
+            self.stats.early_releases.fetch_add(1, Ordering::Relaxed);
+            let pv = self.pv;
+            self.t_emit(|tx, oid| EventKind::EarlyRelease { tx, oid, pv });
+        }
     }
 
     /// WRITE (§2.8.4).
@@ -459,7 +649,7 @@ impl Proxy {
         s.modified = true;
         if s.wc == self.sup.writes && s.uc == self.sup.updates {
             if s.rc < self.sup.reads {
-                s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+                s.buf = Some(self.capture(obj.as_ref()));
                 self.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             }
             drop(obj);
@@ -491,8 +681,8 @@ impl Proxy {
         // lineage (their abort will not restore, §2.8.6).
         self.check_doomed()?;
         if s.st.is_none() {
-            s.st_epoch = self.cc().epoch();
-            s.st = Some(CopyBuffer::capture(obj.as_ref()));
+            s.st_seq = self.cc().revert_seq();
+            s.st = Some(self.capture(obj.as_ref()));
         }
         if !s.log.is_empty() {
             let mut log = std::mem::take(&mut s.log);
@@ -559,7 +749,7 @@ impl Proxy {
             // lock, so an aborter's mark+restore (also under the object
             // lock) either sees our grant or restores before our snapshot.
             me.cc().note_granted(me.pv);
-            s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+            s.buf = Some(me.capture(obj.as_ref()));
             me.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             drop(obj);
             drop(s);
@@ -591,8 +781,8 @@ impl Proxy {
                 return;
             }
             if s.st.is_none() {
-                s.st_epoch = me.cc().epoch();
-                s.st = Some(CopyBuffer::capture(obj.as_ref()));
+                s.st_seq = me.cc().revert_seq();
+                s.st = Some(me.capture(obj.as_ref()));
             }
             let mut log = std::mem::take(&mut s.log);
             // Log replay of pure writes: errors are surfaced at commit by
@@ -604,7 +794,7 @@ impl Proxy {
             // the executor thread and must not race the main thread's read
             // counter.
             if me.sup.reads > 0 {
-                s.buf = Some(CopyBuffer::capture(obj.as_ref()));
+                s.buf = Some(me.capture(obj.as_ref()));
                 me.t_emit(|tx, oid| EventKind::BufferCapture { tx, oid });
             }
             drop(obj);
@@ -654,26 +844,49 @@ impl Proxy {
     // Commit / abort participation (driven by `Transaction`, §2.8.5–6).
     // ------------------------------------------------------------------
 
-    /// Wait for this object's commit (termination) condition.
+    /// Wait for this object's commit (termination) condition. Group
+    /// members wait only for the chain *before* the group — co-members
+    /// terminate in any order (their operations commute).
     pub(super) fn wait_commit(&self) -> Result<(), TxError> {
-        self.cc().wait_commit_cond(self.pv, self.config.deadline())?;
+        match self.group_first() {
+            Some(first) => self.cc().wait_commit_cond_group(first, self.config.deadline())?,
+            None => self.cc().wait_commit_cond(self.pv, self.config.deadline())?,
+        }
         Ok(())
     }
 
     /// Commit-time finalization (§2.8.5): apply a pending log (write-only
     /// object whose supremum was never reached), release if still held.
     pub(super) fn finalize_commit(&self) -> Result<(), TxError> {
+        if self.group_first().is_some() {
+            // A group member is update-only: no log to apply, nothing
+            // buffered. Just retire the slot if still held.
+            if !self.released.swap(true, Ordering::AcqRel) {
+                self.cc().release_group(self.pv);
+            }
+            return Ok(());
+        }
         let mut s = self.inner.lock().unwrap();
         if !s.log.is_empty() {
             let mut obj = self.slot.object.lock().unwrap();
             self.cc().note_granted(self.pv);
-            if s.st.is_none() {
-                s.st_epoch = self.cc().epoch();
-                s.st = Some(CopyBuffer::capture(obj.as_ref()));
+            // Capture-skip (docs/COMMUTATIVITY.md §capture-accounting): the
+            // commit condition holds here, so every predecessor has
+            // terminated and no future abort can doom us. A single-entry
+            // log applies atomically (methods validate arguments before
+            // mutating), so a failed apply leaves the object untouched and
+            // the checkpoint would never be restored. Multi-entry logs can
+            // fail partway through and keep the snapshot.
+            if s.st.is_none() && s.log.len() > 1 {
+                s.st_seq = self.cc().revert_seq();
+                s.st = Some(self.capture(obj.as_ref()));
             }
             let mut log = std::mem::take(&mut s.log);
-            log.apply(obj.as_mut())?;
+            // `modified` is flagged *before* the apply: a multi-entry log
+            // that fails partway has still mutated the object, and the
+            // rollback that follows the failed commit must restore.
             s.modified = true;
+            log.apply(obj.as_mut())?;
         }
         // Commit-time release is not an *early* release — skip the stat.
         if !self.released.swap(true, Ordering::AcqRel) {
@@ -687,15 +900,17 @@ impl Proxy {
         self.tx_doomed.load(Ordering::Acquire) || self.cc().doomed(self.pv)
     }
 
-    /// Abort-time rollback (§2.8.6): invalidate + restore (oldest aborter
-    /// wins), under the object lock to serialize against in-flight
-    /// buffering tasks of later transactions.
+    /// Abort-time rollback (§2.8.6): invalidate + restore (or, for a
+    /// commuting group member, apply the recorded inverses), under the
+    /// object lock to serialize against in-flight buffering tasks of later
+    /// transactions.
     pub(super) fn rollback(&self) {
         let mut s = self.inner.lock().unwrap();
         if s.rolled_back {
             return;
         }
         s.rolled_back = true;
+        let group = self.group_first();
         let mut obj = self.slot.object.lock().unwrap();
         if s.modified {
             // Invalidate everyone who observed our (now aborted) state.
@@ -705,18 +920,63 @@ impl Proxy {
                 super::ProtocolMutation::SkipInvalidation => {}
                 _ => self.cc().mark_invalid(self.pv),
             }
-            // Restore only a valid-lineage checkpoint: if another aborter
-            // restored since we checkpointed, our checkpoint captured
-            // since-invalidated state and the older restore stands.
-            let should_restore = s.st.is_some() && s.st_epoch == self.cc().epoch();
-            if std::env::var_os("ARMI2_TRACE").is_some() {
-                eprintln!("[trace] rollback {} pv={} restore={}", self.oid, self.pv, should_restore);
-            }
-            self.t_emit(|tx, oid| EventKind::Rollback { tx, oid, restored: should_restore });
-            if should_restore {
-                if let Some(st) = &s.st {
-                    st.restore_into(obj.as_mut());
-                    self.cc().note_restored();
+            if let Some(first) = group {
+                // Group member: undo our own contribution surgically by
+                // applying the recorded inverses in reverse order — unless
+                // a full restore positioned before the group already wiped
+                // it wholesale (checkpoints taken below the group predate
+                // every member's work).
+                let wiped = self.cc().wiped_since(s.join_seq, first);
+                let restored = !wiped && !s.inverses.is_empty();
+                if std::env::var_os("ARMI2_TRACE").is_some() {
+                    eprintln!(
+                        "[trace] rollback {} pv={} group@{} inverses={}",
+                        self.oid, self.pv, first, restored
+                    );
+                }
+                self.t_emit(|tx, oid| EventKind::Rollback { tx, oid, restored });
+                if restored {
+                    let mut applied = Vec::with_capacity(s.inverses.len());
+                    for inv in s.inverses.iter().rev() {
+                        // Inverses of executed commuting ops cannot fail on
+                        // any co-serializable state (`deposit(n)` always
+                        // leaves enough for `withdraw(n)`); a failure here
+                        // means a declaration bug, surfaced by the lint.
+                        if obj.invoke(inv).is_ok() {
+                            applied.push(inv.clone());
+                        }
+                    }
+                    self.cc().note_reverted(self.pv, applied);
+                }
+                s.inverses.clear();
+            } else {
+                // Exclusive chain: restore the checkpoint unless a full
+                // restore positioned below us already rewound our work
+                // (then the older restore stands — §2.8.6). After
+                // restoring, replay any surgical reverts our snapshot
+                // re-instated (a group member below us whose inverse ran
+                // after our capture).
+                let wiped = s
+                    .st
+                    .as_ref()
+                    .map(|_| self.cc().wiped_since(s.st_seq, self.pv))
+                    .unwrap_or(false);
+                let should_restore = s.st.is_some() && !wiped;
+                if std::env::var_os("ARMI2_TRACE").is_some() {
+                    eprintln!(
+                        "[trace] rollback {} pv={} restore={}",
+                        self.oid, self.pv, should_restore
+                    );
+                }
+                self.t_emit(|tx, oid| EventKind::Rollback { tx, oid, restored: should_restore });
+                if should_restore {
+                    if let Some(st) = &s.st {
+                        st.restore_into(obj.as_mut());
+                        for inv in self.cc().surgical_reverts_since(s.st_seq, self.pv) {
+                            let _ = obj.invoke(&inv);
+                        }
+                        self.cc().note_restored(self.pv);
+                    }
                 }
             }
         }
@@ -724,13 +984,31 @@ impl Proxy {
         s.log = LogBuffer::new();
         drop(obj);
         if !self.released.swap(true, Ordering::AcqRel) {
-            self.cc().release(self.pv);
+            match group {
+                Some(_) => {
+                    self.cc().release_group(self.pv);
+                }
+                None => self.cc().release(self.pv),
+            }
         }
     }
 
-    /// Advance `ltv` — the very last step of commit and abort.
+    /// Advance `ltv` — the very last step of commit and abort. A group
+    /// member retires through the group (the group's slot terminates when
+    /// its last member does, in any internal order).
     pub(super) fn terminate(&self) {
-        self.cc().terminate(self.pv);
+        if self.term_done.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        match self.group_first() {
+            Some(_) => {
+                if self.cc().terminate_group(self.pv) {
+                    let pv = self.pv;
+                    self.t_emit(|tx, oid| EventKind::GroupRetire { tx, oid, pv });
+                }
+            }
+            None => self.cc().terminate(self.pv),
+        }
     }
 
     /// §3.4 failure path, called by the failure detector: the object
@@ -769,7 +1047,10 @@ impl Proxy {
     /// the single-threaded harness may never take a blocking step.
     /// Crate-visible for the `analysis::` wait-graph builder.
     pub(crate) fn commit_cond_ready(&self) -> bool {
-        self.cc().commit_ready(self.pv)
+        match self.group_first() {
+            Some(first) => self.cc().commit_ready_group(first),
+            None => self.cc().commit_ready(self.pv),
+        }
     }
 
     /// Has the async buffering/release task finished? `true` when none
@@ -780,7 +1061,7 @@ impl Proxy {
 
     /// Would eviction preserve termination order right now?
     pub(crate) fn evictable(&self) -> bool {
-        !self.terminated() && self.cc().commit_ready(self.pv)
+        !self.terminated() && self.commit_cond_ready()
     }
 
     /// Counters snapshot (tests, diagnostics).

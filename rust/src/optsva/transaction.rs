@@ -379,7 +379,7 @@ impl Transaction {
             }
         }
         let mode = p.mode_of(call)?;
-        Ok(p.ready_for(mode))
+        Ok(p.ready_for(mode, p.commute_class(call)))
     }
 
     /// Explorer gate: would [`Transaction::commit`] /
@@ -658,6 +658,10 @@ impl TxCtx for Transaction {
                 .get(h.0)
                 .ok_or_else(|| TxError::NotDeclared(format!("handle #{}", h.0)))?,
         );
+        // Hand-built calls resolve their interface position once here; the
+        // typed `ops::` constructors arrive pre-stamped.
+        let mut call = call;
+        p.stamp(&mut call);
         let cluster = Arc::clone(self.sys.cluster());
         let clock = Arc::clone(cluster.clock());
         if !self.asynchrony {
@@ -692,6 +696,9 @@ impl TxCtx for Transaction {
         // it, and the executor action reuses it (`invoke_with_mode`), so
         // the interface is scanned exactly once per operation.
         let mode = p.mode_of(&call)?;
+        // A commuting call's class is likewise resolved once: the gate may
+        // run on every scheduler pass, and the class never changes.
+        let commutes = p.commute_class(&call);
         // The stub serializes and ships the request; the client pays only
         // the one-way cost and continues — §2.6's "the transaction can
         // proceed without waiting".
@@ -712,7 +719,7 @@ impl TxCtx for Transaction {
         let prev = self.chain[h.0].clone();
         let gate = Arc::clone(&p);
         let cond = move || {
-            prev.as_ref().map_or(true, TaskHandle::is_done) && gate.ready_for(mode)
+            prev.as_ref().map_or(true, TaskHandle::is_done) && gate.ready_for(mode, commutes)
         };
         let run_p = Arc::clone(&p);
         let run_op = Arc::clone(&op);
@@ -765,6 +772,10 @@ impl TxCtx for Transaction {
                 .get(h.0)
                 .ok_or_else(|| TxError::NotDeclared(format!("handle #{}", h.0)))?,
         );
+        // Hand-built calls resolve their interface position once here; the
+        // typed `ops::` constructors arrive pre-stamped.
+        let mut call = call;
+        p.stamp(&mut call);
         // Program order with previously *submitted* operations on the same
         // object: the blocking stub must not overtake them (§2.8's
         // per-object counters and release points assume program order).
@@ -869,6 +880,71 @@ mod tests {
         tx.call(ha, ops::withdraw(100)).unwrap();
         tx.abort().unwrap();
         assert_eq!(balance(&sys, a), 50);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn commuting_deposits_share_a_group_grant() {
+        use std::sync::atomic::Ordering;
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+
+        let mut t1 = sys.tx(NodeId(0));
+        let h1 = t1.updates("A", 2);
+        t1.begin().unwrap();
+        let mut t2 = sys.tx(NodeId(0));
+        let h2 = t2.updates("A", 1);
+        t2.begin().unwrap();
+
+        // t1 opens the group and stays active (1 of 2 updates); t2 joins
+        // it and deposits concurrently — no chain wait, no copy-buffer
+        // capture on either side.
+        t1.call(h1, ops::deposit(10)).unwrap();
+        t2.call(h2, ops::deposit(20)).unwrap();
+        t1.call(h1, ops::deposit(5)).unwrap();
+        assert_eq!(sys.stats.group_grants.load(Ordering::Relaxed), 2);
+        assert_eq!(sys.stats.captures.load(Ordering::Relaxed), 0);
+
+        // Intra-group commit order is free: the later member first.
+        t2.commit().unwrap();
+        t1.commit().unwrap();
+        assert_eq!(balance(&sys, a), 135);
+
+        // The group retired: an exclusive successor (it declares a read)
+        // proceeds through the ordinary chain and sees the total.
+        let mut t3 = sys.tx(NodeId(0));
+        let h3 = t3.accesses("A", Suprema::new(1, 0, 1));
+        t3.begin().unwrap();
+        t3.call(h3, ops::deposit(1)).unwrap();
+        assert_eq!(t3.call(h3, ops::balance()).unwrap().as_int(), 136);
+        t3.commit().unwrap();
+        assert_eq!(balance(&sys, a), 136);
+        sys.shutdown();
+    }
+
+    #[test]
+    fn group_member_abort_is_undone_by_inverse() {
+        let sys = sys_n(1);
+        let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(100)));
+
+        let mut t1 = sys.tx(NodeId(0));
+        let h1 = t1.updates("A", 2);
+        t1.begin().unwrap();
+        let mut t2 = sys.tx(NodeId(0));
+        let h2 = t2.updates("A", 1);
+        t2.begin().unwrap();
+
+        t1.call(h1, ops::deposit(10)).unwrap();
+        t2.call(h2, ops::deposit(20)).unwrap();
+        // t2 aborts mid-group: no checkpoint was taken, so its deposit is
+        // surgically reverted by the declared inverse (withdraw(20)) —
+        // the co-member's concurrent contribution survives untouched.
+        t2.abort().unwrap();
+        t1.call(h1, ops::deposit(5)).unwrap();
+        t1.commit().unwrap();
+
+        assert_eq!(balance(&sys, a), 115);
+        assert_eq!(sys.stats.commits.load(std::sync::atomic::Ordering::Relaxed), 1);
         sys.shutdown();
     }
 

@@ -333,7 +333,7 @@ impl SvaTransaction {
                 if should_restore {
                     if let Some(st) = &o.st {
                         st.restore_into(obj.as_mut());
-                        o.slot.cc.note_restored();
+                        o.slot.cc.note_restored(o.pv);
                     }
                 }
             }

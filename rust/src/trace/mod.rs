@@ -132,6 +132,29 @@ pub enum EventKind {
         /// The private version being released.
         pv: u64,
     },
+    /// A commuting transaction joined the object's pv-group: it holds the
+    /// object *concurrently* with the group's other members instead of at
+    /// an exclusive chain position (docs/COMMUTATIVITY.md).
+    GroupGrant {
+        /// Transaction id.
+        tx: u64,
+        /// Object.
+        oid: Oid,
+        /// The member's own private version.
+        pv: u64,
+        /// The group's chain position (first member's pv).
+        first_pv: u64,
+    },
+    /// The last member of a pv-group terminated: the group dissolved and
+    /// the version chain advanced past all of it in one step.
+    GroupRetire {
+        /// Transaction id of the dissolving member.
+        tx: u64,
+        /// Object.
+        oid: Oid,
+        /// The member's own private version.
+        pv: u64,
+    },
     /// A proxy rolled the object back during abort.
     Rollback {
         /// Transaction id.
@@ -195,6 +218,8 @@ impl EventKind {
             EventKind::BufferRead { .. } => "buffer-read",
             EventKind::BufferCapture { .. } => "buffer-capture",
             EventKind::EarlyRelease { .. } => "early-release",
+            EventKind::GroupGrant { .. } => "group-grant",
+            EventKind::GroupRetire { .. } => "group-retire",
             EventKind::Rollback { .. } => "rollback",
             EventKind::MsgSend { .. } => "msg-send",
             EventKind::MsgDeliver { .. } => "msg-deliver",
@@ -216,6 +241,8 @@ impl EventKind {
             | EventKind::BufferRead { tx, .. }
             | EventKind::BufferCapture { tx, .. }
             | EventKind::EarlyRelease { tx, .. }
+            | EventKind::GroupGrant { tx, .. }
+            | EventKind::GroupRetire { tx, .. }
             | EventKind::Rollback { tx, .. } => Some(*tx),
             _ => None,
         }
@@ -229,6 +256,8 @@ impl EventKind {
             | EventKind::BufferRead { oid, .. }
             | EventKind::BufferCapture { oid, .. }
             | EventKind::EarlyRelease { oid, .. }
+            | EventKind::GroupGrant { oid, .. }
+            | EventKind::GroupRetire { oid, .. }
             | EventKind::Rollback { oid, .. }
             | EventKind::Evict { oid } => Some(*oid),
             _ => None,
@@ -253,6 +282,12 @@ impl std::fmt::Display for EventKind {
             EventKind::BufferCapture { tx, oid } => write!(f, "tx{tx} buffer-capture {oid}"),
             EventKind::EarlyRelease { tx, oid, pv } => {
                 write!(f, "tx{tx} early-release {oid} pv={pv}")
+            }
+            EventKind::GroupGrant { tx, oid, pv, first_pv } => {
+                write!(f, "tx{tx} group-grant {oid} pv={pv} group@{first_pv}")
+            }
+            EventKind::GroupRetire { tx, oid, pv } => {
+                write!(f, "tx{tx} group-retire {oid} pv={pv}")
             }
             EventKind::Rollback { tx, oid, restored } => {
                 write!(f, "tx{tx} rollback {oid} restored={restored}")

@@ -171,6 +171,27 @@ pub fn export(events: &[TraceEvent]) -> Json {
                     vec![("pv".into(), Json::Num(*pv as f64))],
                 ));
             }
+            EventKind::GroupGrant { oid, pv, first_pv, .. } => {
+                out.push(instant(
+                    format!("group-grant {oid}"),
+                    "access",
+                    e,
+                    tid,
+                    vec![
+                        ("pv".into(), Json::Num(*pv as f64)),
+                        ("group".into(), Json::Num(*first_pv as f64)),
+                    ],
+                ));
+            }
+            EventKind::GroupRetire { oid, pv, .. } => {
+                out.push(instant(
+                    format!("group-retire {oid}"),
+                    "access",
+                    e,
+                    tid,
+                    vec![("pv".into(), Json::Num(*pv as f64))],
+                ));
+            }
             EventKind::BufferRead { oid, .. } | EventKind::BufferCapture { oid, .. } => {
                 out.push(instant(format!("{} {oid}", e.kind.label()), "buffer", e, tid, Vec::new()));
             }

@@ -64,6 +64,42 @@ pub struct InvalidMark {
     pub up_to: u64,
 }
 
+/// An open pv-group of commuting acquisitions (docs/COMMUTATIVITY.md):
+/// consecutive same-class transactions share one logical version slot —
+/// all members hold access concurrently, and the chain advances past the
+/// whole group (`lv = last_pv`) only when the last member releases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupState {
+    /// Commutativity class every member declared.
+    pub class: u8,
+    /// First member's pv — the group's position in the version chain.
+    pub first_pv: u64,
+    /// Last (highest) member pv admitted so far.
+    pub last_pv: u64,
+    /// Members granted access and not yet released.
+    pub active: u64,
+    /// Members not yet terminated (commit/abort complete).
+    pub unterminated: u64,
+}
+
+/// A positional record of a state reversion: a full checkpoint restore
+/// (`full`, `pv` = the restorer, state reverted to before `pv`'s
+/// operations) or a commuting-inverse application (`pv` = the aborting
+/// group member, only its own contribution surgically reverted; `ops` are
+/// the inverse calls as applied). The *position* is what matters: a full
+/// reversion at `pv` wipes the work of transactions later than `pv`, so
+/// their own rollbacks must stand down; a surgical reversion removes one
+/// transaction's contribution only, so a later transaction restoring its
+/// checkpoint (which re-instates that contribution) must replay the
+/// surgical `ops` on top (docs/COMMUTATIVITY.md §abort).
+#[derive(Debug, Clone)]
+struct RevertNote {
+    seq: u64,
+    pv: u64,
+    full: bool,
+    ops: Vec<crate::object::OpCall>,
+}
+
 #[derive(Debug, Default)]
 struct CcState {
     next_pv: u64,
@@ -76,6 +112,16 @@ struct CcState {
     /// state. A checkpoint taken at epoch `e` is from the valid lineage
     /// iff the epoch is still `e` when its owner aborts.
     epoch: u64,
+    /// The open commuting pv-group, if any. At most one at a time; a new
+    /// group can only open once the previous one fully terminates.
+    group: Option<GroupState>,
+    /// Monotone counter of reversion events ([`RevertNote`]).
+    revert_seq: u64,
+    /// Reversion log, newest last. Bounded by the run's abort count (one
+    /// entry per restore/inverse application); never pruned, because an
+    /// old note can still matter to any live transaction that sampled
+    /// [`ObjectCc::revert_seq`] before it.
+    reverts: Vec<RevertNote>,
 }
 
 /// Per-object concurrency-control block.
@@ -197,6 +243,171 @@ impl ObjectCc {
         Ok(())
     }
 
+    // ------------------------------------------------------------------
+    // Group grants: commuting acquisitions share one version slot.
+    // ------------------------------------------------------------------
+
+    /// Non-blocking [`ObjectCc::join_group`] admission check (explorer
+    /// gates need exactness; see `Proxy::ready_for`).
+    pub fn group_joinable(&self, pv: u64, class: u8) -> bool {
+        let s = self.state.lock().unwrap();
+        Self::group_admission(&s, pv, class)
+    }
+
+    fn group_admission(s: &CcState, pv: u64, class: u8) -> bool {
+        if let Some(g) = &s.group {
+            // Extend an open group: same class, consecutive pv, and at
+            // least one member still holds access (once all released, the
+            // chain has already advanced past the group).
+            return g.class == class && g.active > 0 && pv == g.last_pv + 1;
+        }
+        // Open a new group at the head of the chain. A fully-released but
+        // not fully-terminated group blocks this (handled above by the
+        // `group.is_some()` arm failing): group-to-group admission waits
+        // for the previous group's termination so `ltv` bookkeeping stays
+        // a single range.
+        s.lv == pv - 1
+    }
+
+    /// Block until `pv` can join (or open) a commuting pv-group of
+    /// `class`, then record the grant. Returns the group's `first_pv` —
+    /// the member's commit condition becomes `ltv == first_pv - 1`
+    /// ([`ObjectCc::wait_commit_cond_group`]). Admission is immediate for
+    /// consecutive same-class acquisitions even though `lv < pv - 1`:
+    /// that concurrency is the whole point (docs/COMMUTATIVITY.md).
+    pub fn join_group(
+        &self,
+        pv: u64,
+        class: u8,
+        deadline: Option<Duration>,
+    ) -> Result<u64, WaitTimeout> {
+        let started = self.clock.now();
+        let mut s = self.state.lock().unwrap();
+        while !Self::group_admission(&s, pv, class) {
+            let (g, expired) = wait_deadline(self.clock.as_ref(), &self.cond, s, deadline);
+            s = g;
+            if expired && !Self::group_admission(&s, pv, class) {
+                return Err(self.timeout(started, "group admission"));
+            }
+        }
+        let first_pv = match &mut s.group {
+            Some(g) => {
+                g.last_pv = pv;
+                g.active += 1;
+                g.unterminated += 1;
+                g.first_pv
+            }
+            None => {
+                s.group = Some(GroupState {
+                    class,
+                    first_pv: pv,
+                    last_pv: pv,
+                    active: 1,
+                    unterminated: 1,
+                });
+                pv
+            }
+        };
+        s.max_granted = s.max_granted.max(pv);
+        Ok(first_pv)
+    }
+
+    /// Release a group member's access. When the *last* active member
+    /// releases, the group retires: the chain advances past the whole
+    /// group (`lv = last_pv`) in one step. Returns whether this call
+    /// retired the group (trace: `GroupRetire`).
+    pub fn release_group(&self, pv: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let g = s
+            .group
+            .as_mut()
+            .expect("release_group: no open group (member released twice?)");
+        debug_assert!(
+            g.first_pv <= pv && pv <= g.last_pv,
+            "release_group: pv {pv} outside group [{}, {}]",
+            g.first_pv,
+            g.last_pv
+        );
+        debug_assert!(g.active > 0, "release_group: no active members");
+        g.active -= 1;
+        if g.active > 0 {
+            return false;
+        }
+        let last = g.last_pv;
+        if s.lv < last {
+            s.lv = last;
+            self.cond.notify_all();
+            drop(s);
+            self.poke_watchers();
+        }
+        true
+    }
+
+    /// Group-member commit (termination) condition: every transaction
+    /// *before the group* has terminated. Intra-group termination order
+    /// is free — the members commute.
+    pub fn wait_commit_cond_group(
+        &self,
+        first_pv: u64,
+        deadline: Option<Duration>,
+    ) -> Result<(), WaitTimeout> {
+        let started = self.clock.now();
+        let mut s = self.state.lock().unwrap();
+        while s.ltv + 1 < first_pv {
+            let (g, expired) = wait_deadline(self.clock.as_ref(), &self.cond, s, deadline);
+            s = g;
+            if expired && s.ltv + 1 < first_pv {
+                return Err(self.timeout(started, "group commit condition"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking group commit-condition check (explorer gate).
+    pub fn commit_ready_group(&self, first_pv: u64) -> bool {
+        self.state.lock().unwrap().ltv + 1 >= first_pv
+    }
+
+    /// Terminate a group member. When the *last* member terminates, the
+    /// group dissolves: `ltv` advances past the whole group and stale
+    /// invalidation marks are pruned. Waiters are notified so the next
+    /// group (or chain successor) can proceed.
+    pub fn terminate_group(&self, pv: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let g = s
+            .group
+            .as_mut()
+            .expect("terminate_group: no open group (member terminated twice?)");
+        debug_assert!(
+            g.first_pv <= pv && pv <= g.last_pv,
+            "terminate_group: pv {pv} outside group [{}, {}]",
+            g.first_pv,
+            g.last_pv
+        );
+        debug_assert!(g.unterminated > 0, "terminate_group: no unterminated members");
+        g.unterminated -= 1;
+        if g.unterminated > 0 {
+            return false;
+        }
+        debug_assert_eq!(g.active, 0, "all members release before the last terminates");
+        let last = g.last_pv;
+        s.group = None;
+        if s.ltv < last {
+            s.ltv = last;
+            let ltv = s.ltv;
+            s.marks.retain(|m| m.up_to > ltv);
+        }
+        self.cond.notify_all();
+        drop(s);
+        self.poke_watchers();
+        true
+    }
+
+    /// The open pv-group, if any (tests, diagnostics).
+    pub fn group(&self) -> Option<GroupState> {
+        self.state.lock().unwrap().group
+    }
+
     fn timeout(&self, started: Duration, what: &'static str) -> WaitTimeout {
         WaitTimeout {
             what,
@@ -270,9 +481,73 @@ impl ObjectCc {
         self.state.lock().unwrap().epoch
     }
 
-    /// Record that an aborter restored the object's state.
-    pub fn note_restored(&self) {
-        self.state.lock().unwrap().epoch += 1;
+    /// Record that an aborter at `pv` restored the object's state from its
+    /// checkpoint (a *full* reversion: everything at or after `pv` is
+    /// rewound).
+    pub fn note_restored(&self, pv: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.epoch += 1;
+        s.revert_seq += 1;
+        let seq = s.revert_seq;
+        s.reverts.push(RevertNote { seq, pv, full: true, ops: Vec::new() });
+    }
+
+    /// Current reversion sequence number. Sampled (under the object's
+    /// lock) alongside a checkpoint or a group join; compared via
+    /// [`ObjectCc::wiped_since`] / replayed via
+    /// [`ObjectCc::surgical_reverts_since`] at abort time.
+    pub fn revert_seq(&self) -> u64 {
+        self.state.lock().unwrap().revert_seq
+    }
+
+    /// Record a *surgical* positional reversion at `pv`: a commuting group
+    /// member applied its inverse `ops`, reverting its own contribution
+    /// only. Deliberately does not bump the restore epoch — the lineage is
+    /// intact, so earlier transactions' checkpoints stay valid.
+    pub fn note_reverted(&self, pv: u64, ops: Vec<crate::object::OpCall>) {
+        let mut s = self.state.lock().unwrap();
+        s.revert_seq += 1;
+        let seq = s.revert_seq;
+        s.reverts.push(RevertNote { seq, pv, full: false, ops });
+    }
+
+    /// Did a *full* restore positioned before `below_pv` happen after
+    /// sequence number `since`? If so, that restore already rewound the
+    /// asker's work wholesale: an exclusive-chain aborter must not restore
+    /// its (since-invalidated) checkpoint, and a group member whose group
+    /// sits above the restorer must not apply its inverses.
+    pub fn wiped_since(&self, since: u64, below_pv: u64) -> bool {
+        let s = self.state.lock().unwrap();
+        s.reverts
+            .iter()
+            .rev()
+            .take_while(|n| n.seq > since)
+            .any(|n| n.full && n.pv < below_pv)
+    }
+
+    /// Did any reversion (full or surgical) positioned before `below_pv`
+    /// happen after sequence number `since`? Diagnostics/tests.
+    pub fn reverted_since(&self, since: u64, below_pv: u64) -> bool {
+        let s = self.state.lock().unwrap();
+        s.reverts
+            .iter()
+            .rev()
+            .take_while(|n| n.seq > since)
+            .any(|n| n.pv < below_pv)
+    }
+
+    /// The inverse operations of surgical reversions positioned before
+    /// `below_pv` recorded after sequence number `since`, in application
+    /// order. An aborter that restores a checkpoint taken at `since`
+    /// re-instates those members' contributions (the snapshot predates
+    /// their reverts), so it must replay these on top of the restore.
+    pub fn surgical_reverts_since(&self, since: u64, below_pv: u64) -> Vec<crate::object::OpCall> {
+        let s = self.state.lock().unwrap();
+        s.reverts
+            .iter()
+            .filter(|n| n.seq > since && !n.full && n.pv < below_pv)
+            .flat_map(|n| n.ops.iter().cloned())
+            .collect()
     }
 
     /// Is the transaction holding `pv` doomed by an invalidation mark?
@@ -419,7 +694,7 @@ mod tests {
         let t2_epoch = cc.epoch();
         // T1 aborts: restores, bumping the epoch.
         cc.mark_invalid(pv1);
-        cc.note_restored();
+        cc.note_restored(pv1);
         // T2's checkpoint is from the invalidated lineage: must not restore.
         assert_ne!(t2_epoch, cc.epoch());
         // A fresh transaction checkpointing *after* the restore holds a
@@ -431,6 +706,147 @@ mod tests {
         assert_eq!(cc.epoch(), cc.epoch());
         let t3_epoch = cc.epoch();
         assert_eq!(t3_epoch, cc.epoch(), "no restore since T3's checkpoint");
+    }
+
+    #[test]
+    fn group_members_admitted_concurrently() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        let pv3 = cc.assign_pv();
+        // pv1 opens the group at the chain head; pv2/pv3 extend it without
+        // waiting for pv1 to release — the whole point of group grants.
+        assert_eq!(cc.join_group(pv1, 0, None).unwrap(), pv1);
+        assert_eq!(cc.join_group(pv2, 0, None).unwrap(), pv1);
+        assert_eq!(cc.join_group(pv3, 0, None).unwrap(), pv1);
+        let g = cc.group().unwrap();
+        assert_eq!((g.first_pv, g.last_pv, g.active, g.unterminated), (pv1, pv3, 3, 3));
+        // A plain (non-commuting) successor is NOT admitted: lv is still 0.
+        let pv4 = cc.assign_pv();
+        assert!(!cc.access_ready(pv4));
+    }
+
+    #[test]
+    fn group_rejects_other_class_and_gap() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        let pv3 = cc.assign_pv();
+        cc.join_group(pv1, 0, None).unwrap();
+        // Different class cannot extend the open group.
+        assert!(!cc.group_joinable(pv2, 1));
+        // Non-consecutive pv cannot extend it either (pv2 skipped).
+        assert!(!cc.group_joinable(pv3, 0));
+        assert!(cc.group_joinable(pv2, 0));
+    }
+
+    #[test]
+    fn group_retires_on_last_release_and_dissolves_on_last_terminate() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        let pv3 = cc.assign_pv(); // plain successor
+        cc.join_group(pv1, 0, None).unwrap();
+        cc.join_group(pv2, 0, None).unwrap();
+        // Releases in arbitrary intra-group order; chain advances only on
+        // the last one, straight to last_pv.
+        assert!(!cc.release_group(pv2));
+        assert_eq!(cc.versions().0, 0);
+        assert!(!cc.access_ready(pv3));
+        assert!(cc.release_group(pv1));
+        assert_eq!(cc.versions().0, pv2);
+        assert!(cc.access_ready(pv3), "successor admitted after group retire");
+        // Termination likewise: ltv jumps past the whole group at the end.
+        assert!(!cc.terminate_group(pv1));
+        assert!(!cc.commit_ready(pv3));
+        assert!(cc.terminate_group(pv2));
+        assert_eq!(cc.versions().1, pv2);
+        assert!(cc.commit_ready(pv3));
+        assert!(cc.group().is_none(), "group dissolved");
+    }
+
+    #[test]
+    fn group_commit_condition_ignores_intra_group_order() {
+        let cc = ObjectCc::new();
+        let pv0 = cc.assign_pv(); // plain predecessor
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        cc.wait_access(pv0, None).unwrap();
+        cc.release(pv0);
+        let first = cc.join_group(pv1, 0, None).unwrap();
+        assert_eq!(cc.join_group(pv2, 0, None).unwrap(), first);
+        // Neither member may commit until the predecessor terminates…
+        assert!(!cc.commit_ready_group(first));
+        cc.terminate(pv0);
+        // …after which BOTH are ready, regardless of intra-group order.
+        assert!(cc.commit_ready_group(first));
+        let deadline = cc.deadline_in(Some(Duration::from_secs(1)));
+        cc.wait_commit_cond_group(first, deadline).unwrap();
+    }
+
+    #[test]
+    fn new_group_waits_for_previous_group_termination() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        cc.join_group(pv1, 0, None).unwrap();
+        cc.release_group(pv1);
+        // Group released but not terminated: a new acquisition (even of the
+        // same class) must not open a second group yet.
+        let pv2 = cc.assign_pv();
+        assert!(!cc.group_joinable(pv2, 0));
+        cc.terminate_group(pv1);
+        assert!(cc.group_joinable(pv2, 0));
+        assert_eq!(cc.join_group(pv2, 0, None).unwrap(), pv2);
+    }
+
+    #[test]
+    fn group_members_doomed_by_member_abort_mark() {
+        let cc = ObjectCc::new();
+        let pv1 = cc.assign_pv();
+        let pv2 = cc.assign_pv();
+        cc.join_group(pv1, 0, None).unwrap();
+        cc.join_group(pv2, 0, None).unwrap();
+        // pv1 aborts: inverse applied by the proxy, then the usual mark.
+        // max_granted is pv2, so the co-member is doomed conservatively.
+        cc.mark_invalid(pv1);
+        assert!(cc.doomed(pv2));
+        cc.release_group(pv1);
+        cc.release_group(pv2);
+        cc.terminate_group(pv2);
+        cc.terminate_group(pv1);
+        assert!(cc.marks().is_empty(), "marks pruned when ltv passes up_to");
+    }
+
+    #[test]
+    fn revert_notes_are_positional() {
+        use crate::object::account::ops;
+        let cc = ObjectCc::new();
+        let seq0 = cc.revert_seq();
+        cc.note_reverted(5, vec![ops::withdraw(40)]);
+        // A surgical reversion at pv=5 is visible to later positions only.
+        assert!(cc.reverted_since(seq0, 7), "pv 7 sampled before the revert at 5");
+        assert!(!cc.reverted_since(seq0, 5), "pv ≤ 5 unaffected");
+        assert!(!cc.reverted_since(seq0, 3));
+        // Surgical reverts never wipe — a later aborter still restores its
+        // checkpoint, then replays the recorded inverse ops on top.
+        assert!(!cc.wiped_since(seq0, 7));
+        let replay = cc.surgical_reverts_since(seq0, 7);
+        assert_eq!(replay.len(), 1);
+        assert_eq!(replay[0].method, "withdraw");
+        assert!(cc.surgical_reverts_since(seq0, 5).is_empty(), "own position excluded");
+        // Events at or before the sampled seq are invisible.
+        let seq1 = cc.revert_seq();
+        assert!(!cc.reverted_since(seq1, 100));
+        cc.note_reverted(10, vec![ops::withdraw(1)]);
+        assert!(cc.reverted_since(seq1, 11));
+        // A full restore at pv=3 wipes positions above it.
+        cc.note_restored(3);
+        assert!(cc.wiped_since(seq1, 7), "full restore below pv 7 wipes it");
+        assert!(!cc.wiped_since(seq1, 3), "restorer's own position unaffected");
+        assert!(
+            cc.surgical_reverts_since(seq1, 7).iter().all(|c| c.method == "withdraw"),
+            "full notes carry no replay ops"
+        );
     }
 
     #[test]

@@ -302,13 +302,14 @@ impl Engine<'_> {
 
     fn drain(&mut self, node: u16, at: Duration) {
         let due = self.inboxes.drain_due(NodeId(node), at);
-        for env in due {
+        for env in &due {
             if env.tag & RESP_FLAG != 0 {
                 self.response((env.tag & !RESP_FLAG) as u32, at);
             } else {
                 self.request((env.tag >> 8) as u32, (env.tag & 0xff) as u8, at);
             }
         }
+        self.inboxes.recycle(NodeId(node), due);
     }
 }
 

@@ -1,0 +1,115 @@
+//! Fig 12 regression: `state_size`-aware copy-buffer capture accounting.
+//!
+//! Two capture-skip paths must hold, and keep holding, because they are
+//! what the hot-account speedups in `BENCH_micro.json` rest on:
+//!
+//!   * a blind single `WRITE` commits without a checkpoint — the log
+//!     buffer either applies atomically or not at all, so no restore
+//!     point is needed;
+//!   * commuting updates admitted through a group grant never capture —
+//!     aborts are undone by the declared inverse, not by restoring a
+//!     snapshot.
+//!
+//! Both show up in `SysStats::captures`/`capture_bytes`, which every
+//! capture site routes through (`Proxy::capture`).
+
+use atomic_rmi2::api::{Suprema, TxCtx};
+use atomic_rmi2::object::{account::ops, Account, SharedObject};
+use atomic_rmi2::optsva::{AtomicRmi2, OptsvaConfig};
+use atomic_rmi2::{Cluster, NetworkModel, NodeId};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn sys() -> Arc<AtomicRmi2> {
+    let cluster = Arc::new(Cluster::new(1, NetworkModel::instant()));
+    AtomicRmi2::with_config(
+        cluster,
+        OptsvaConfig { wait_timeout: Some(Duration::from_secs(10)), asynchrony: true },
+    )
+}
+
+fn captures(sys: &AtomicRmi2) -> u64 {
+    sys.stats.captures.load(Ordering::Relaxed)
+}
+
+fn balance(sys: &AtomicRmi2, oid: atomic_rmi2::Oid) -> i64 {
+    sys.with_object(oid, |o| o.as_any().downcast_ref::<Account>().unwrap().balance())
+}
+
+#[test]
+fn single_blind_write_commits_without_capture() {
+    // The write supremum is declared one higher than used, so the log is
+    // applied at commit time (`finalize_commit`), not by the §2.8.4 async
+    // task — the async task keeps its checkpoint because the transaction
+    // can still abort afterwards; the commit-time apply cannot.
+    let sys = sys();
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(77)));
+
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.writes("A", 2);
+    tx.begin().unwrap();
+    tx.call(h, ops::reset()).unwrap();
+    tx.commit().unwrap();
+
+    assert_eq!(balance(&sys, a), 0, "the buffered write must still apply");
+    assert_eq!(captures(&sys), 0, "a single-entry log applies atomically: no checkpoint");
+    assert_eq!(sys.stats.capture_bytes.load(Ordering::Relaxed), 0);
+    sys.shutdown();
+}
+
+#[test]
+fn multi_entry_log_keeps_its_safety_checkpoint() {
+    // With more than one buffered entry, a mid-apply failure could leave
+    // the object partially written — the checkpoint stays.
+    let sys = sys();
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(77)));
+
+    let mut tx = sys.tx(NodeId(0));
+    let h = tx.writes("A", 3);
+    tx.begin().unwrap();
+    tx.call(h, ops::reset()).unwrap();
+    tx.call(h, ops::reset()).unwrap();
+    tx.commit().unwrap();
+
+    assert_eq!(balance(&sys, a), 0);
+    assert_eq!(captures(&sys), 1);
+    assert_eq!(
+        sys.stats.capture_bytes.load(Ordering::Relaxed),
+        8,
+        "Account::state_size() bytes accounted per capture"
+    );
+    sys.shutdown();
+}
+
+#[test]
+fn commuting_deposits_capture_nothing_exclusive_chain_captures_per_tx() {
+    let sys = sys();
+    let a = sys.host(NodeId(0), "A", Box::new(Account::with_balance(0)));
+
+    // Group path: update-only commuting deposits never checkpoint.
+    for _ in 0..4 {
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.updates("A", 1);
+        tx.begin().unwrap();
+        tx.call(h, ops::deposit(10)).unwrap();
+        tx.commit().unwrap();
+    }
+    assert_eq!(captures(&sys), 0, "group grants skip the copy buffer entirely");
+
+    // Exclusive chain: the same deposits behind a read declaration pay
+    // two snapshots per transaction (the abort checkpoint `st` at first
+    // access, plus the read buffer `buf` at early release) — the Fig 12
+    // baseline cost the group path avoids.
+    for _ in 0..4 {
+        let mut tx = sys.tx(NodeId(0));
+        let h = tx.accesses("A", Suprema::new(1, 0, 1));
+        tx.begin().unwrap();
+        tx.call(h, ops::deposit(10)).unwrap();
+        tx.call(h, ops::balance()).unwrap();
+        tx.commit().unwrap();
+    }
+    assert_eq!(captures(&sys), 8, "exclusive updates snapshot twice per transaction");
+    assert_eq!(balance(&sys, a), 80);
+    sys.shutdown();
+}
